@@ -1,0 +1,81 @@
+"""Paper Table 1 + §5 worked example: communication accounting.
+
+Emits per-algorithm uplink bits for the paper's FEMNIST setting and for two
+assigned big archs, and checks the §5 numbers: 490x activation compression;
+~10x total-uplink reduction vs SplitFed; ~62x vs FedAvg with ~64x fewer
+client-side trainable parameters."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.base import get_arch
+from repro.core.fedlite import comm_report
+from repro.core.quantizer import PQConfig
+from repro.core.split import split_summary, tree_bits
+from repro.launch.specs import default_pq, make_model
+from repro.models.paper_models import FemnistCNN
+
+
+def run(fast: bool = True):
+    rows = []
+    # ---- the paper's FEMNIST worked example --------------------------------
+    pq = PQConfig(num_subvectors=1152, num_clusters=2, kmeans_iters=2)
+    model = FemnistCNN(pq=pq, lam=1e-4)
+    params = model.init(jax.random.PRNGKey(0))
+    s = split_summary(params)
+    B, d = 20, 9216
+    act_bits = 64 * d * B
+    msg = pq.message_bits(B, d)
+    client_bits = s["client_bits"]
+    total_bits = client_bits + s["server_bits"]
+    rows.append({
+        "name": "femnist_b20_q1152_L2",
+        "us_per_call": 0.0,
+        "activation_compression": round(act_bits / msg, 1),        # paper: 490
+        "uplink_vs_splitfed": round((client_bits + act_bits) /
+                                    (client_bits + msg), 1),       # paper: ~10
+        "uplink_vs_fedavg": round(total_bits / (client_bits + msg), 1),
+        "client_param_fraction": round(s["client_fraction"], 4),   # ~1.6%
+    })
+
+    # ---- big-arch accounting (smoke-size params, full-size formulas) ------
+    for arch in ["llama3_8b", "mixtral_8x22b"]:
+        cfg = get_arch(arch, smoke=True)
+        m = make_model(cfg)
+        p = m.init(jax.random.PRNGKey(0))
+        rep = comm_report(m, p, tokens_per_client=4096)
+        rows.append({
+            "name": f"{arch}_smoke_tokens4096",
+            "us_per_call": 0.0,
+            "activation_compression": round(
+                rep["activation_compression_ratio"], 1),
+            "uplink_vs_splitfed": round(
+                rep["uplink_reduction_vs_splitfed"], 2),
+            "uplink_vs_fedavg": round(rep["uplink_reduction_vs_fedavg"], 2),
+        })
+
+    # ---- full-size analytic accounting (no allocation) ---------------------
+    for arch in ["gemma_7b", "command_r_35b"]:
+        cfg = get_arch(arch)
+        pq_full = default_pq(cfg)
+        tokens = 4096
+        act_bits = 64 * cfg.d_model * tokens
+        msg = pq_full.message_bits(tokens, cfg.d_model)
+        rows.append({
+            "name": f"{arch}_full_analytic",
+            "us_per_call": 0.0,
+            "activation_compression": round(act_bits / msg, 1),
+            "head_params_fraction": round(
+                cfg.padded_vocab * cfg.d_model / cfg.param_count(), 3),
+        })
+    return rows
+
+
+def main(fast: bool = True):
+    emit(run(fast), "table1_comm")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+
+def time_call(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds (blocks on jax results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: List[Dict], prefix: str) -> None:
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for r in rows:
+        name = f"{prefix}/{r.pop('name')}"
+        us = r.pop("us_per_call", 0.0)
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{us:.1f},{derived}")

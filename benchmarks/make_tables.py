@@ -1,0 +1,100 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run JSON artifacts. Invoked manually after a sweep:
+
+    PYTHONPATH=src python -m benchmarks.make_tables [--update-experiments]
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+
+from benchmarks.roofline import load_records
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    return f"{b / 2 ** 30:.2f}"
+
+
+def dryrun_table(recs, mesh: str) -> str:
+    lines = [
+        "| arch | shape | GiB/dev | fits(raw) | TPU-bf16 est | compile s | "
+        "collectives (count) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    by = {}
+    for r in recs:
+        if r.get("mesh", "") in (mesh, r.get("mesh")) and (
+                ("single" in r["_file"]) == (mesh == "single")):
+            by[(r["arch"], r["shape"])] = r
+    for (arch, shape), r in sorted(by.items(),
+                                   key=lambda kv: (kv[0][0],
+                                                   SHAPE_ORDER.index(kv[0][1]))):
+        if "skipped" in r:
+            lines.append(f"| {arch} | {shape} | — | skipped (full attention "
+                         f"@500k; DESIGN.md §3) | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {arch} | {shape} | — | ERROR | — | — | — |")
+            continue
+        est = r.get("tpu_bf16_estimate", {})
+        est_s = (f"{est['device_bytes_estimate'] / 2**30:.1f} GiB "
+                 f"({'fits' if est.get('fits_16GiB_estimate') else 'over'})"
+                 if "device_bytes_estimate" in est else
+                 ("n/a (fits raw)" if r["fits_16GiB"] else "—"))
+        colls = ", ".join(f"{k.replace('collective-', 'c-')}:{int(v['count'])}"
+                          for k, v in sorted(r["collectives"].items()))
+        lines.append(
+            f"| {arch} | {shape} | {fmt_bytes(r['device_bytes'])} | "
+            f"{'yes' if r['fits_16GiB'] else 'no'} | {est_s} | "
+            f"{r['compile_s']:.0f} | {colls} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | bound | "
+        "useful-FLOPs frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted((r for r in recs if "roofline" in r and
+                     ("single" in r["_file"]) == (mesh == "single")),
+                    key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))):
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s'] * 1e3:.2f} | "
+            f"{ro['memory_s'] * 1e3:.2f} | {ro['collective_s'] * 1e3:.2f} | "
+            f"**{ro['bound']}** | {r['useful_flops_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update-experiments", action="store_true")
+    args = ap.parse_args()
+    recs = load_records()
+    out = []
+    out.append("### Dry-run — single pod (16×16 = 256 chips)\n")
+    out.append(dryrun_table(recs, "single"))
+    out.append("\n### Dry-run — multi-pod (2×16×16 = 512 chips)\n")
+    out.append(dryrun_table(recs, "multi"))
+    out.append("\n### Roofline — single pod (per-device terms)\n")
+    out.append(roofline_table(recs, "single"))
+    text = "\n".join(out)
+    print(text)
+    if args.update_experiments:
+        import os
+        p = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+        md = open(p).read()
+        marker = "<!-- GENERATED-TABLES -->"
+        if marker in md:
+            md = md.split(marker)[0]
+        md = md.rstrip() + f"\n\n{marker}\n\n{text}\n"
+        open(p, "w").write(md)
+        print(f"\n[updated {p}]")
+
+
+if __name__ == "__main__":
+    main()

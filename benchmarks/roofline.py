@@ -1,0 +1,67 @@
+"""§Roofline report: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits the per-(arch × shape × mesh) three-term roofline table.
+
+Terms (seconds, per device, TPU v5e constants from launch/mesh.py):
+    compute    = HLO_FLOPs / peak_FLOP/s
+    memory     = HLO_bytes / HBM_bw
+    collective = wire_bytes / (links · link_bw)
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute fraction) and the dominant term.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(f))
+        r["_file"] = os.path.basename(f)
+        recs.append(r)
+    return recs
+
+
+def run(fast: bool = True):
+    rows = []
+    ok = bad = skipped = 0
+    for r in load_records():
+        if "skipped" in r:
+            skipped += 1
+            continue
+        if "error" in r:
+            bad += 1
+            rows.append({"name": f"{r['arch']}/{r['shape']}/{r['mesh']}",
+                         "us_per_call": 0.0, "status": "ERROR"})
+            continue
+        ok += 1
+        roof = r["roofline"]
+        rows.append({
+            "name": f"{r['arch']}/{r['shape']}/{r['mesh']}",
+            "us_per_call": roof["step_time_lower_bound_s"] * 1e6,
+            "bound": roof["bound"],
+            "compute_ms": round(roof["compute_s"] * 1e3, 3),
+            "memory_ms": round(roof["memory_s"] * 1e3, 3),
+            "collective_ms": round(roof["collective_s"] * 1e3, 3),
+            "GiB_per_device": round(r["device_bytes"] / 2 ** 30, 2),
+            "fits": r["fits_16GiB"],
+            "useful_flops_frac": round(r["useful_flops_fraction"], 3),
+        })
+    rows.append({"name": "summary", "us_per_call": 0.0, "ok": ok,
+                 "errors": bad, "skipped_noted": skipped})
+    return rows
+
+
+def main(fast: bool = True):
+    from benchmarks.common import emit
+    emit(run(fast), "roofline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run             # fast (default)
+  PYTHONPATH=src python -m benchmarks.run --full      # paper-scale grids
+  PYTHONPATH=src python -m benchmarks.run --only fig3_quantizer_tradeoff
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_accuracy_tradeoff, bench_comm,
+                        bench_convergence, bench_correction, bench_grouping,
+                        bench_kernels, bench_quantizer_tradeoff,
+                        bench_so_tasks, roofline)
+from benchmarks.common import emit
+
+SUITES = {
+    "fig3_quantizer_tradeoff": bench_quantizer_tradeoff,
+    "fig4_accuracy_tradeoff": bench_accuracy_tradeoff,
+    "fig5_correction": bench_correction,
+    "fig5c_grouping": bench_grouping,
+    "table1_comm": bench_comm,
+    "so_tasks": bench_so_tasks,
+    "fig6_convergence": bench_convergence,
+    "kernels": bench_kernels,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grids (slow)")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    for name, mod in suites.items():
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=not args.full)
+            emit(rows, name)
+            print(f"{name}/_suite_wall,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/_suite_wall,{(time.time() - t0) * 1e6:.0f},"
+                  f"ERROR={type(e).__name__}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    LONG_CONTEXT_CAPABLE,
+    ArchConfig,
+    InputShape,
+    all_archs,
+    get_arch,
+    supports_shape,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "LONG_CONTEXT_CAPABLE", "ArchConfig",
+    "InputShape", "all_archs", "get_arch", "supports_shape",
+]

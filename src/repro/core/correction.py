@@ -1,0 +1,94 @@
+"""FedLite's gradient-corrected quantization layer (paper §4.2, eq. 5).
+
+The quantizer is non-differentiable; the server returns ∂h/∂z̃ — the gradient
+at the *quantized* activation. FedLite approximates the true ∂h/∂z with a
+first-order correction, replacing the (expensive) Hessian with λ·I:
+
+    g̃_z  =  ∂h/∂z̃  +  λ·(z − z̃)                                   (eq. 5)
+
+which, per Appendix A, is exactly the gradient of the surrogate loss
+‖z − ẑ‖² + (λ/2)‖z − z̃‖² — i.e. λ adds a regularizer pulling the client-side
+model toward activations with low quantization error.
+
+Implemented as a ``jax.custom_vjp``: the forward pass runs the grouped PQ and
+emits z̃; the backward pass adds λ·(z − z̃) to the incoming cotangent. λ = 0
+recovers the naive straight-through estimator the paper ablates against.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import PQConfig, quantize
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def quantize_with_correction(z: jax.Array, lam, cfg: PQConfig) -> jax.Array:
+    """Quantize ``z`` (any shape, trailing dim = d); STE + λ-correction VJP.
+
+    ``lam`` may be a Python float or a traced scalar — scheduled λ (e.g. the
+    beyond-paper warm-up, see core/fedlite.py) works without recompilation.
+    """
+    return quantize(z, cfg).dequantized
+
+
+def _fwd(z, lam, cfg):
+    z_tilde = quantize(z, cfg).dequantized
+    # residual (z − z̃) is all the backward pass needs
+    return z_tilde, (z - z_tilde, jnp.asarray(lam, jnp.float32))
+
+
+def _bwd(cfg, res, g):
+    residual, lam = res
+    # eq. (5): corrected activation cotangent; λ itself gets no gradient
+    return (g + lam.astype(g.dtype) * residual.astype(g.dtype),
+            jnp.zeros_like(lam))
+
+
+quantize_with_correction.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize_downlink(z: jax.Array, cfg: PQConfig) -> jax.Array:
+    """Beyond-paper: compress the *downlink* (server -> client gradient).
+
+    FedLite compresses only the uplink; the gradient message returned to the
+    client is the same B·d floats. This layer is the identity in the forward
+    pass and applies the grouped PQ to the activation COTANGENT in the
+    backward pass — the client receives a codebook+codes message instead of
+    raw gradients, making the link symmetric. Same per-client (vmap-outside)
+    usage as quantize_with_correction.
+    """
+    return z
+
+
+def _dl_fwd(z, cfg):
+    return z, None
+
+
+def _dl_bwd(cfg, _, g):
+    return (quantize(g, cfg).dequantized.astype(g.dtype),)
+
+
+quantize_downlink.defvjp(_dl_fwd, _dl_bwd)
+
+
+def quantize_with_stats(z: jax.Array, lam: float, cfg: PQConfig,
+                        key: Optional[jax.Array] = None):
+    """Like quantize_with_correction but also returns (non-differentiable)
+    quantization stats for logging: distortion and message bits."""
+    del key  # codebook init is deterministic inside the step
+    z_tilde = quantize_with_correction(z, lam, cfg)
+    resid = jax.lax.stop_gradient(z - z_tilde).astype(jnp.float32)
+    per_vec_sqerr = jnp.mean(jnp.sum(resid * resid, axis=-1))
+    n = int(z.size // z.shape[-1])
+    stats = {
+        "pq_distortion": per_vec_sqerr,
+        "pq_message_bits": cfg.message_bits(n, z.shape[-1]),
+        "pq_compression_ratio": cfg.compression_ratio(n, z.shape[-1]),
+    }
+    return z_tilde, stats

@@ -1,0 +1,164 @@
+"""FedLite / SplitFed / FedAvg training steps and communication accounting.
+
+One jitted ``train_step`` realizes a full FedLite iteration (paper Fig. 1):
+
+  client forward  ->  grouped PQ with gradient-corrected VJP  ->  server
+  forward/backward  ->  client backward (receives the corrected activation
+  cotangent)  ->  simultaneous client+server optimizer updates.
+
+SplitFed is the ``quantize=False`` special case — by §3 of the paper it is
+*exactly* mini-batch SGD, which ``tests/test_fedlite.py`` asserts bitwise.
+
+The simulation maps each data-parallel mesh shard to a client cohort; the
+bits that would cross the real client->server WAN link are accounted
+analytically by ``comm_report`` (the paper's §3/§5 cost model), because the
+whole point of the method is what it *saves on the uplink*, not what moves
+across ICI inside the simulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import operator
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import PQConfig
+from repro.core.split import tree_bits
+from repro.models.transformer import TransformerLM
+from repro.optim import Optimizer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    @classmethod
+    def create(cls, params, optimizer: Optimizer) -> "TrainState":
+        return cls(params=params, opt_state=optimizer.init(params),
+                   step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: TransformerLM, optimizer: Optimizer, *,
+                    quantize: bool = True,
+                    microbatches: int = 1,
+                    lam_schedule: Optional[Callable] = None,
+                    donate: bool = True) -> Callable:
+    """Build the jitted FedLite (quantize=True) / SplitFed (False) step.
+
+    ``microbatches > 1`` runs gradient accumulation inside the step: the
+    global batch is split along its leading axis into m sequential
+    microbatches (a lax.scan), dividing peak activation memory by ~m at the
+    same global batch size and numerics (grads averaged before the single
+    optimizer update). Used by the memory-bound giant archs (see configs).
+
+    ``lam_schedule(step) -> λ`` (beyond-paper): schedules the gradient-
+    correction strength per step without recompilation — e.g. a warm-up that
+    keeps λ≈0 until the server head carries signal, avoiding the
+    activation-collapse failure mode of a strong constant λ at extreme
+    compression (see EXPERIMENTS.md §Perf).
+    """
+
+    def loss_fn(params, batch, step):
+        lam = None if lam_schedule is None else lam_schedule(step)
+        return model.loss(params, batch, quantize=quantize, lam_override=lam)
+
+    def grads_of(params, batch, step):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, step)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(state.params, batch, state.step)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc(carry, mbatch):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grads_of(state.params, mbatch, state.step)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            (g_sum, loss_sum), metrics = jax.lax.scan(
+                acc, (zero_g, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(
+                lambda g, p: (g / microbatches).astype(p.dtype),
+                g_sum, state.params)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = jax.tree.map(operator.add, state.params, updates)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return jax.jit(train_step, donate_argnums=(0,) if donate else ())
+
+
+def make_eval_step(model: TransformerLM) -> Callable:
+    def eval_step(params, batch):
+        acts, _, _ = model.client_forward(params["client"], batch, mode="train")
+        x, _, _ = model.server_forward(params["server"], acts, batch,
+                                       mode="train")
+        lg = model.logits(params, x)
+        ce = model.token_ce(lg, batch["labels"])
+        pred = jnp.argmax(lg, axis=-1)
+        labels = batch["labels"]
+        if model.cfg.num_codebooks > 1:
+            labels = jnp.moveaxis(labels, 1, 2)
+        mask = labels >= 0
+        acc = jnp.sum((pred == labels) * mask) / jnp.maximum(mask.sum(), 1)
+        return {"ce": ce, "accuracy": acc}
+
+    return jax.jit(eval_step)
+
+
+# ---------------------------------------------------------------------------
+# communication accounting (paper Table 1 + §5 worked example)
+# ---------------------------------------------------------------------------
+
+def comm_report(model: TransformerLM, params, tokens_per_client: int,
+                pq: Optional[PQConfig] = None, phi_bits: int = 64) -> Dict[str, float]:
+    """Per-client, per-iteration uplink bits for FedAvg / SplitFed / FedLite.
+
+    ``tokens_per_client`` is B (examples per client) × activation vectors per
+    example (seq length for LMs; 1 for the paper's CNN whose cut activation
+    is a single flattened vector).
+    """
+    d = model.cfg.d_model
+    pq = pq if pq is not None else model.pq
+    client_bits = tree_bits(params["client"], phi_bits)
+    total_bits = client_bits + tree_bits(params["server"], phi_bits)
+    act_bits = phi_bits * d * tokens_per_client
+
+    report = {
+        "activation_dim": d,
+        "tokens_per_client": tokens_per_client,
+        "fedavg_uplink_bits": float(total_bits),
+        "splitfed_uplink_bits": float(client_bits + act_bits),
+        "splitfed_activation_bits": float(act_bits),
+    }
+    if pq is not None:
+        msg = pq.message_bits(tokens_per_client, d)
+        report.update({
+            "fedlite_uplink_bits": float(client_bits + msg),
+            "fedlite_activation_bits": float(msg),
+            "activation_compression_ratio": act_bits / max(msg, 1),
+            "uplink_reduction_vs_splitfed":
+                (client_bits + act_bits) / max(client_bits + msg, 1),
+            "uplink_reduction_vs_fedavg":
+                total_bits / max(client_bits + msg, 1),
+        })
+    return report

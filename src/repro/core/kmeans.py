@@ -1,0 +1,167 @@
+"""Batched K-means in pure JAX, usable *inside* a jitted train step.
+
+FedLite rebuilds codebooks from the current mini-batch at every iteration
+(stateless clients, non-IID data), so K-means must be a fixed-shape,
+fixed-iteration-count program: ``lax.fori_loop`` over Lloyd iterations,
+``lax.scan`` over chunks of points so the one-hot statistics never
+materialize an (N, L) tensor for the full batch at once.
+
+Distance computation is expressed as ``‖x‖² − 2·x·Cᵀ + ‖c‖²`` so the inner
+product rides the MXU on TPU; the Pallas kernel in
+``repro.kernels.kmeans_assign`` implements the same contraction with explicit
+VMEM tiling and can be swapped in via ``set_assign_impl``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array  # (L, D)
+    codes: jax.Array      # (N,) int32
+    distortion: jax.Array  # () mean squared quantization error per point
+
+
+def _assign_jnp(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """codes[i] = argmin_l ‖x_i − c_l‖².  x: (n, D), centroids: (L, D)."""
+    # ‖x‖² is constant across l — only the cross term and ‖c‖² matter.
+    scores = 2.0 * (x @ centroids.T) - jnp.sum(centroids * centroids, axis=-1)
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+# Swappable assignment implementation (pure-jnp default; Pallas kernel opt-in).
+_ASSIGN: Callable[[jax.Array, jax.Array], jax.Array] = _assign_jnp
+
+
+def set_assign_impl(fn: Optional[Callable]) -> None:
+    global _ASSIGN
+    _ASSIGN = fn if fn is not None else _assign_jnp
+
+
+def get_assign_impl() -> Callable:
+    return _ASSIGN
+
+
+def _init_centroids(x: jax.Array, num_clusters: int,
+                    key: Optional[jax.Array]) -> jax.Array:
+    """Farthest-point / k-means++ seeding on a strided subsample.
+
+    Plain strided or uniform-random seeding regularly drops a true cluster and
+    Lloyd cannot recover (empty-cluster local minimum). FPS guarantees spread
+    seeds at O(L·M·D) cost on an M = O(L) subsample — negligible next to one
+    Lloyd iteration over the full batch. With a PRNG key the selection becomes
+    kmeans++ (D² sampling); without, it is deterministic farthest-point.
+    """
+    n, d = x.shape
+    L = num_clusters
+    m = min(n, max(4 * L, 256))
+    xs = x[:: max(n // m, 1)][:m]
+    m = xs.shape[0]
+
+    cents0 = jnp.zeros((L, d), x.dtype).at[0].set(xs[0])
+    mind0 = jnp.sum(jnp.square(xs - xs[0]), axis=-1)
+
+    if key is None:
+        def body(l, state):
+            cents, mind = state
+            idx = jnp.argmax(mind)
+            c = xs[idx]
+            cents = cents.at[l].set(c)
+            mind = jnp.minimum(mind, jnp.sum(jnp.square(xs - c), axis=-1))
+            return cents, mind
+        cents, _ = jax.lax.fori_loop(1, L, body, (cents0, mind0))
+    else:
+        keys = jax.random.split(key, L)
+
+        def body(l, state):
+            cents, mind = state
+            logits = jnp.log(jnp.maximum(mind, 1e-30))
+            idx = jax.random.categorical(keys[l], logits)
+            c = xs[idx]
+            cents = cents.at[l].set(c)
+            mind = jnp.minimum(mind, jnp.sum(jnp.square(xs - c), axis=-1))
+            return cents, mind
+        cents, _ = jax.lax.fori_loop(1, L, body, (cents0, mind0))
+    return cents
+
+
+def kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
+           key: Optional[jax.Array] = None, chunk: int = 4096) -> KMeansResult:
+    """Lloyd's algorithm with a fixed iteration count.
+
+    Args:
+      x: (N, D) points. Computation runs in fp32 regardless of input dtype.
+      num_clusters: L.
+      num_iters: Lloyd iterations (static).
+      key: optional PRNG key for random init; None = deterministic strided.
+      chunk: points per scan step for the assign/accumulate pass.
+    Returns:
+      KMeansResult(centroids (L, D) in x.dtype, codes (N,) int32, distortion).
+    """
+    in_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    n, d = x.shape
+    L = num_clusters
+
+    # pad N up to a multiple of chunk; padded rows carry zero weight
+    chunk = min(chunk, max(n, 1))
+    n_pad = (-n) % chunk
+    if n_pad:
+        xp = jnp.concatenate([x, jnp.zeros((n_pad, d), jnp.float32)], axis=0)
+    else:
+        xp = x
+    weights = jnp.concatenate(
+        [jnp.ones((n,), jnp.float32), jnp.zeros((n_pad,), jnp.float32)])
+    n_chunks = xp.shape[0] // chunk
+    xc = xp.reshape(n_chunks, chunk, d)
+    wc = weights.reshape(n_chunks, chunk)
+
+    cents0 = _init_centroids(x, L, key)
+
+    def lloyd_iter(_, cents):
+        def acc(carry, inp):
+            sums, counts = carry
+            xb, wb = inp
+            codes = _ASSIGN(xb, cents)
+            onehot = jax.nn.one_hot(codes, L, dtype=jnp.float32) * wb[:, None]
+            return (sums + onehot.T @ xb, counts + onehot.sum(axis=0)), None
+
+        (sums, counts), _ = jax.lax.scan(
+            acc, (jnp.zeros((L, d), jnp.float32), jnp.zeros((L,), jnp.float32)),
+            (xc, wc))
+        # empty clusters keep their previous centroid
+        return jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), cents)
+
+    cents = jax.lax.fori_loop(0, num_iters, lloyd_iter, cents0)
+
+    def assign_chunk(carry, inp):
+        xb, wb = inp
+        codes = _ASSIGN(xb, cents)
+        err = jnp.sum(jnp.square(xb - cents[codes]), axis=-1) * wb
+        return carry + err.sum(), codes
+
+    sq_err, codes = jax.lax.scan(assign_chunk, jnp.zeros((), jnp.float32), (xc, wc))
+    codes = codes.reshape(-1)[:n]
+    distortion = sq_err / jnp.maximum(n, 1)
+    return KMeansResult(cents.astype(in_dtype), codes, distortion)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def kmeans_jit(x, num_clusters, num_iters):
+    return kmeans(x, num_clusters, num_iters)
+
+
+def batched_kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
+                   key: Optional[jax.Array] = None, chunk: int = 4096):
+    """vmapped kmeans over a leading group axis.  x: (G, N, D)."""
+    keys = None if key is None else jax.random.split(key, x.shape[0])
+    fn = functools.partial(kmeans, num_clusters=num_clusters,
+                           num_iters=num_iters, chunk=chunk)
+    if keys is None:
+        return jax.vmap(lambda g: fn(g))(x)
+    return jax.vmap(lambda g, k: fn(g, key=k))(x, keys)

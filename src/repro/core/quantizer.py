@@ -1,0 +1,151 @@
+"""FedLite's grouped product quantizer (paper §4.1).
+
+Given a batch of activation vectors Z ∈ R^{N×d}:
+
+  (i)   divide each vector into ``q`` subvectors of size d/q;
+  (ii)  stack subvectors into ``R`` groups by subvector index — group ``r``
+        holds subvector positions [r·q/R, (r+1)·q/R) of every example, so all
+        positions in a group share one codebook;
+  (iii) K-means with ``L`` centroids per group; each subvector is represented
+        by the index of its nearest centroid.
+
+Uplink message = codebooks (φ·(d/q)·L·R bits) + codes (N·q·⌈log2 L⌉ bits),
+vs. φ·d·N uncompressed — the paper's φdRL/q + Bq·log2 L with N playing B.
+
+Special cases recovered exactly:
+  * q = 1             → vanilla K-means on whole vectors
+  * R = q  (q > 1)    → vanilla product quantization (codebook per position)
+  * R = 1  (default)  → the paper's best trade-off: one shared codebook
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans as _km
+
+
+@dataclasses.dataclass(frozen=True)
+class PQConfig:
+    """Static quantizer hyperparameters (hashable: usable as a jit static)."""
+    num_subvectors: int          # q — subvectors per activation vector
+    num_clusters: int            # L — centroids per group
+    num_groups: int = 1          # R — codebook groups (R=1 is the paper default)
+    kmeans_iters: int = 8
+    phi_bits: int = 64           # float width used for *accounting* (paper: 64)
+    kmeans_chunk: int = 4096
+
+    def __post_init__(self):
+        if self.num_subvectors % self.num_groups != 0:
+            raise ValueError(
+                f"q={self.num_subvectors} must be divisible by R={self.num_groups}")
+        if self.num_clusters < 1:
+            raise ValueError("L must be >= 1")
+
+    @property
+    def q(self) -> int:
+        return self.num_subvectors
+
+    @property
+    def r(self) -> int:
+        return self.num_groups
+
+    @property
+    def l(self) -> int:
+        return self.num_clusters
+
+    def subvector_dim(self, d: int) -> int:
+        if d % self.num_subvectors != 0:
+            raise ValueError(f"d={d} not divisible by q={self.num_subvectors}")
+        return d // self.num_subvectors
+
+    # ---- communication accounting (paper §4.1) -------------------------
+    def codebook_bits(self, d: int) -> int:
+        # R groups × L centroids × (d/q) dims × φ bits  ==  φ·d·R·L/q
+        return self.phi_bits * self.subvector_dim(d) * self.num_clusters * self.num_groups
+
+    def codes_bits(self, n: int) -> int:
+        return n * self.num_subvectors * max(math.ceil(math.log2(self.num_clusters)), 1) \
+            if self.num_clusters > 1 else 0
+
+    def message_bits(self, n: int, d: int) -> int:
+        return self.codebook_bits(d) + self.codes_bits(n)
+
+    def uncompressed_bits(self, n: int, d: int) -> int:
+        return self.phi_bits * d * n
+
+    def compression_ratio(self, n: int, d: int) -> float:
+        return self.uncompressed_bits(n, d) / max(self.message_bits(n, d), 1)
+
+
+class QuantizedBatch(NamedTuple):
+    dequantized: jax.Array   # (N, d) — z̃, same dtype as input
+    codes: jax.Array         # (R, q/R·N) int32 cluster assignments
+    codebooks: jax.Array     # (R, L, d/q)
+    distortion: jax.Array    # () mean ‖z − z̃‖² per vector
+
+
+def _to_groups(z: jax.Array, cfg: PQConfig) -> jax.Array:
+    """(N, d) -> (R, (q/R)·N, d/q) grouping consecutive subvector positions."""
+    n, d = z.shape
+    dsub = cfg.subvector_dim(d)
+    # (N, q, dsub) -> (q, N, dsub): group r = positions [r·q/R, (r+1)·q/R)
+    sub = z.reshape(n, cfg.q, dsub).transpose(1, 0, 2)
+    return sub.reshape(cfg.r, (cfg.q // cfg.r) * n, dsub)
+
+
+def _from_groups(groups: jax.Array, n: int, d: int, cfg: PQConfig) -> jax.Array:
+    dsub = cfg.subvector_dim(d)
+    sub = groups.reshape(cfg.q, n, dsub).transpose(1, 0, 2)
+    return sub.reshape(n, d)
+
+
+def quantize(z: jax.Array, cfg: PQConfig,
+             key: Optional[jax.Array] = None) -> QuantizedBatch:
+    """Quantize a batch of activation vectors with the grouped PQ scheme.
+
+    ``z`` may have any leading shape; it is flattened to (N, d) where d is the
+    trailing dim. The returned ``dequantized`` has the original shape.
+    """
+    orig_shape = z.shape
+    d = orig_shape[-1]
+    z2 = z.reshape(-1, d)
+    n = z2.shape[0]
+
+    groups = _to_groups(z2.astype(jnp.float32), cfg)  # (R, M, dsub)
+    cents, codes, dist = _km.batched_kmeans(
+        groups, cfg.num_clusters, cfg.kmeans_iters, key=key,
+        chunk=cfg.kmeans_chunk)
+    # reconstruct: gather each subvector's centroid, per group
+    recon = jax.vmap(lambda c, i: c[i])(cents, codes)
+    z_tilde = _from_groups(recon, n, d, cfg).astype(z.dtype)
+    # distortion: mean over groups of per-point sq err, rescaled to per-vector
+    per_vec = dist.sum() * (groups.shape[1] / max(n, 1))
+    return QuantizedBatch(z_tilde.reshape(orig_shape), codes,
+                          cents.astype(z.dtype), per_vec)
+
+
+def quantization_error(z: jax.Array, cfg: PQConfig) -> jax.Array:
+    """Mean relative quantization error ‖z−z̃‖/‖z‖ over the batch (for Fig. 3)."""
+    zt = quantize(z, cfg).dequantized
+    z2 = z.reshape(-1, z.shape[-1])
+    zt2 = zt.reshape(z2.shape)
+    num = jnp.linalg.norm(z2 - zt2, axis=-1)
+    den = jnp.maximum(jnp.linalg.norm(z2, axis=-1), 1e-12)
+    return jnp.mean(num / den)
+
+
+def vanilla_kmeans_config(num_clusters: int, **kw) -> PQConfig:
+    """q=1: quantize whole vectors (paper's 'K-means' baseline)."""
+    return PQConfig(num_subvectors=1, num_clusters=num_clusters, num_groups=1, **kw)
+
+
+def vanilla_pq_config(num_subvectors: int, num_clusters: int, **kw) -> PQConfig:
+    """R=q: per-position codebooks (paper's 'vanilla PQ' baseline)."""
+    return PQConfig(num_subvectors=num_subvectors, num_clusters=num_clusters,
+                    num_groups=num_subvectors, **kw)

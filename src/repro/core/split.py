@@ -1,0 +1,37 @@
+"""Model-splitting helpers: parameter accounting for the client/server split.
+
+Models built by ``TransformerLM`` are split by construction
+(params = {"client": ..., "server": ...}); these helpers quantify the split —
+the paper's Table 1 compares algorithms by |w|, |w_c| and message sizes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of parameters in a pytree."""
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_bits(tree, phi_bits: int = 64) -> int:
+    """Parameter payload in bits at the paper's accounting float width φ."""
+    return tree_size(tree) * phi_bits
+
+
+def split_summary(params: Dict[str, Any], phi_bits: int = 64) -> Dict[str, Any]:
+    n_client = tree_size(params["client"])
+    n_server = tree_size(params["server"])
+    total = n_client + n_server
+    return {
+        "client_params": n_client,
+        "server_params": n_server,
+        "total_params": total,
+        "client_fraction": n_client / max(total, 1),
+        "client_bits": n_client * phi_bits,
+        "server_bits": n_server * phi_bits,
+    }

@@ -1,0 +1,15 @@
+from repro.data.synthetic import (
+    FederatedDataset,
+    make_federated_image_data,
+    make_federated_lm_data,
+    make_federated_tag_data,
+    make_lm_batch,
+)
+
+__all__ = [
+    "FederatedDataset",
+    "make_federated_image_data",
+    "make_federated_lm_data",
+    "make_federated_tag_data",
+    "make_lm_batch",
+]

@@ -1,0 +1,172 @@
+"""Synthetic federated datasets (offline stand-ins for FEMNIST/StackOverflow).
+
+The real TFF datasets are unavailable offline; these generators reproduce the
+*structural* properties the paper's claims depend on:
+
+  * non-IID client partitions — per-client Dirichlet(α) label/topic skew
+    (Kairouz et al. 2019 §3.1's standard simulation of FL heterogeneity);
+  * learnable signal — class prototypes + noise (images), per-client
+    topic-biased Markov chains (LM), topic-linked multi-hot tags — so
+    accuracy-vs-compression orderings (Figs. 4/5) are meaningful;
+  * within-batch activation redundancy — examples of the same class/topic
+    produce similar cut-layer activations, the redundancy FedLite exploits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class FederatedDataset:
+    """num_clients client shards; sample_batch(client_id, key, batch) -> dict."""
+    num_clients: int
+    client_weights: np.ndarray                    # p_i ∝ n_i
+    sample_batch: Callable[[int, jax.Array, int], Dict[str, jax.Array]]
+    eval_batch: Callable[[jax.Array, int], Dict[str, jax.Array]]
+
+
+def _dirichlet_partition(rng: np.random.Generator, num_clients: int,
+                         num_classes: int, alpha: float) -> np.ndarray:
+    """(num_clients, num_classes) class-mixture per client."""
+    return rng.dirichlet(alpha * np.ones(num_classes), size=num_clients)
+
+
+# ---------------------------------------------------------------------------
+# images (FEMNIST-like)
+# ---------------------------------------------------------------------------
+
+def make_federated_image_data(num_clients: int = 64, num_classes: int = 62,
+                              alpha: float = 0.5, noise: float = 0.35,
+                              seed: int = 0) -> FederatedDataset:
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(num_classes, 28, 28, 1)).astype(np.float32)
+    # smooth prototypes a little so conv nets have local structure to use
+    k = np.ones((3, 3)) / 9.0
+    for c in range(num_classes):
+        from numpy.lib.stride_tricks import sliding_window_view
+        padded = np.pad(protos[c, :, :, 0], 1, mode="edge")
+        protos[c, :, :, 0] = (sliding_window_view(padded, (3, 3)) * k).sum((-1, -2))
+    mixtures = _dirichlet_partition(rng, num_clients, num_classes, alpha)
+    weights = rng.integers(50, 500, size=num_clients).astype(np.float64)
+    weights /= weights.sum()
+    protos_j = jnp.asarray(protos)
+    mix_j = jnp.asarray(mixtures)
+
+    def sample(client_id: int, key: jax.Array, batch: int):
+        k1, k2 = jax.random.split(key)
+        labels = jax.random.categorical(
+            k1, jnp.log(mix_j[client_id] + 1e-9), shape=(batch,))
+        imgs = protos_j[labels] + noise * jax.random.normal(
+            k2, (batch, 28, 28, 1))
+        return {"image": imgs, "label": labels}
+
+    def eval_batch(key: jax.Array, batch: int):
+        k1, k2 = jax.random.split(key)
+        labels = jax.random.randint(k1, (batch,), 0, num_classes)
+        imgs = protos_j[labels] + noise * jax.random.normal(
+            k2, (batch, 28, 28, 1))
+        return {"image": imgs, "label": labels}
+
+    return FederatedDataset(num_clients, weights, sample, eval_batch)
+
+
+# ---------------------------------------------------------------------------
+# language modeling (SO NWP-like and big-arch token streams)
+# ---------------------------------------------------------------------------
+
+def make_federated_lm_data(num_clients: int = 64, vocab: int = 10_000,
+                           num_topics: int = 16, alpha: float = 0.3,
+                           seed: int = 0) -> FederatedDataset:
+    """Per-topic unigram tables + per-client topic mixtures; first-order
+    Markov structure (topic-dependent bigram shift) gives NWP signal."""
+    rng = np.random.default_rng(seed)
+    topic_logits = rng.normal(scale=2.0, size=(num_topics, vocab)).astype(np.float32)
+    shifts = rng.integers(1, vocab - 1, size=num_topics)
+    mixtures = _dirichlet_partition(rng, num_clients, num_topics, alpha)
+    weights = rng.integers(50, 500, size=num_clients).astype(np.float64)
+    weights /= weights.sum()
+
+    # NOTE: the generator is pure numpy on purpose — the eager jax version
+    # (threefry splits inside a lax.scan) intermittently hits an XLA CPU
+    # "Failed to materialize symbols" JIT failure in long benchmark
+    # processes; data generation needs no accelerator anyway.
+    def _seed_of(key) -> int:
+        return int(np.asarray(jax.random.key_data(key)).astype(np.uint64)[-1])
+
+    def _gen(key, batch, seq, mixture):
+        r = np.random.default_rng(_seed_of(key))
+        topics = r.choice(num_topics, p=mixture / mixture.sum(), size=batch)
+        logits = topic_logits[topics]                       # (B, V)
+
+        def categorical():
+            g = r.gumbel(size=(batch, vocab)).astype(np.float32)
+            return np.argmax(logits + g, axis=-1)
+
+        toks = np.empty((batch, seq), np.int64)
+        toks[:, 0] = categorical()
+        for t in range(1, seq):
+            # token_t = (token_{t-1} + shift_topic) % V w.p. .5 else unigram
+            markov = (toks[:, t - 1] + shifts[topics]) % vocab
+            uni = categorical()
+            use_markov = r.random(batch) < 0.5
+            toks[:, t] = np.where(use_markov, markov, uni)
+        labels = np.concatenate(
+            [toks[:, 1:], np.full((batch, 1), -1, np.int64)], axis=1)
+        return {"tokens": jnp.asarray(toks, jnp.int32),
+                "labels": jnp.asarray(labels, jnp.int32)}
+
+    def sample(client_id: int, key: jax.Array, batch: int, seq: int = 30):
+        return _gen(key, batch, seq, mixtures[client_id])
+
+    def eval_batch(key: jax.Array, batch: int, seq: int = 30):
+        return _gen(key, batch, seq, np.ones(num_topics) / num_topics)
+
+    return FederatedDataset(num_clients, weights, sample, eval_batch)
+
+
+def make_lm_batch(key: jax.Array, batch: int, seq: int, vocab: int):
+    """Plain random-token batch for smoke tests / dry-run-shaped runs."""
+    toks = jax.random.randint(key, (batch, seq), 0, vocab, dtype=jnp.int32)
+    labels = jnp.concatenate(
+        [toks[:, 1:], jnp.full((batch, 1), -1, jnp.int32)], axis=1)
+    return {"tokens": toks, "labels": labels}
+
+
+# ---------------------------------------------------------------------------
+# tag prediction (SO Tag-like, multi-label bow)
+# ---------------------------------------------------------------------------
+
+def make_federated_tag_data(num_clients: int = 64, bow_dim: int = 5000,
+                            num_tags: int = 1000, num_topics: int = 32,
+                            alpha: float = 0.3, seed: int = 0) -> FederatedDataset:
+    rng = np.random.default_rng(seed)
+    topic_words = rng.normal(scale=1.0, size=(num_topics, bow_dim)).astype(np.float32)
+    topic_tags = np.zeros((num_topics, num_tags), np.float32)
+    for t in range(num_topics):
+        topic_tags[t, rng.choice(num_tags, size=12, replace=False)] = 1.0
+    mixtures = _dirichlet_partition(rng, num_clients, num_topics, alpha)
+    weights = rng.integers(50, 500, size=num_clients).astype(np.float64)
+    weights /= weights.sum()
+    tw, tt, mix_j = jnp.asarray(topic_words), jnp.asarray(topic_tags), jnp.asarray(mixtures)
+
+    def _gen(key, batch, mixture):
+        kt, kw, kg = jax.random.split(key, 3)
+        topics = jax.random.categorical(kt, jnp.log(mixture + 1e-9), shape=(batch,))
+        bow = jax.nn.relu(tw[topics] + 0.5 * jax.random.normal(kw, (batch, bow_dim)))
+        tags = tt[topics]
+        drop = jax.random.bernoulli(kg, 0.25, tags.shape)
+        return {"bow": bow, "tags": (tags * (1 - drop)).astype(jnp.float32)}
+
+    def sample(client_id: int, key: jax.Array, batch: int):
+        return _gen(key, batch, mix_j[client_id])
+
+    def eval_batch(key: jax.Array, batch: int):
+        return _gen(key, batch, jnp.ones((num_topics,)) / num_topics)
+
+    return FederatedDataset(num_clients, weights, sample, eval_batch)

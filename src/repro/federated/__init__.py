@@ -1,0 +1,9 @@
+from repro.federated.runtime import (
+    FederatedTrainer,
+    fedavg_round,
+    sample_clients,
+    weighted_average,
+)
+
+__all__ = ["FederatedTrainer", "fedavg_round", "sample_clients",
+           "weighted_average"]

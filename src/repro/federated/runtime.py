@@ -1,0 +1,135 @@
+"""Federated runtime: client sampling, weighted aggregation, round drivers.
+
+Implements the three algorithms the paper compares (§3, Table 1):
+
+  * FEDAVG      — every sampled client runs H local SGD steps on the FULL
+                  model, the server averages the deltas weighted by p_i.
+  * SPLITFED    — per iteration, the cohort's activations hit the server,
+                  gradients come back; equivalent to mini-batch SGD (§3).
+  * FEDLITE     — SplitFed + grouped PQ + gradient correction at the cut.
+
+SplitFed/FedLite iterations are realized by a single jitted train step over
+the cohort's combined batch (see ``core/fedlite.py``) — mathematically
+identical to per-client messaging with p_i-weighted server aggregation when
+client batches are equal-sized, and exactly what the production mesh runs
+(each data shard = one cohort). FedAvg keeps the explicit per-client local
+loop since its local-step structure cannot be fused.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import operator
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fedlite import TrainState, make_train_step
+from repro.data.synthetic import FederatedDataset
+from repro.optim import Optimizer
+
+
+def sample_clients(rng: np.random.Generator, num_clients: int,
+                   cohort: int) -> np.ndarray:
+    return rng.choice(num_clients, size=min(cohort, num_clients), replace=False)
+
+
+def weighted_average(trees: Sequence[Any], weights: Sequence[float]):
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    return jax.tree.map(
+        lambda *xs: sum(wi * x for wi, x in zip(w, xs)), *trees)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg baseline
+# ---------------------------------------------------------------------------
+
+def fedavg_round(model, params, data: FederatedDataset, client_ids,
+                 key: jax.Array, *, local_steps: int, batch: int,
+                 lr: float, batch_kwargs: Optional[dict] = None):
+    """One FedAvg round: H local SGD steps per client, weighted delta average.
+
+    Returns (new_params, mean local loss). Local updates are plain SGD as in
+    McMahan et al. (2017).
+    """
+    batch_kwargs = batch_kwargs or {}
+
+    # jitted single local step (client batch sampled outside jit)
+    @jax.jit
+    def sgd_step(p, b):
+        loss, grads = jax.value_and_grad(
+            lambda q: model.loss(q, b, quantize=False)[0])(p)
+        new_p = jax.tree.map(lambda x, g: x - lr * g, p, grads)
+        return new_p, loss
+
+    deltas, weights, losses = [], [], []
+    for i, cid in enumerate(client_ids):
+        p = params
+        ck = jax.random.fold_in(key, int(cid))
+        for s in range(local_steps):
+            b = data.sample_batch(int(cid), jax.random.fold_in(ck, s), batch,
+                                  **batch_kwargs)
+            p, loss = sgd_step(p, b)
+            losses.append(float(loss))
+        deltas.append(jax.tree.map(operator.sub, p, params))
+        weights.append(float(data.client_weights[int(cid)]))
+
+    mean_delta = weighted_average(deltas, weights)
+    new_params = jax.tree.map(operator.add, params, mean_delta)
+    return new_params, float(np.mean(losses))
+
+
+# ---------------------------------------------------------------------------
+# SplitFed / FedLite trainer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FederatedTrainer:
+    """Round driver for split-learning algorithms on a FederatedDataset.
+
+    Each round samples a cohort, stacks the cohort's client batches into one
+    global batch (cohort = leading batch dim) and runs the jitted split step.
+    """
+    model: Any
+    optimizer: Optimizer
+    data: FederatedDataset
+    cohort: int
+    client_batch: int
+    quantize: bool = True
+    batch_kwargs: Optional[dict] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self._step = make_train_step(self.model, self.optimizer,
+                                     quantize=self.quantize, donate=False)
+        self._rng = np.random.default_rng(self.seed)
+
+    def init_state(self, key: jax.Array) -> TrainState:
+        return TrainState.create(self.model.init(key), self.optimizer)
+
+    def cohort_batch(self, key: jax.Array) -> Dict[str, jax.Array]:
+        ids = sample_clients(self._rng, self.data.num_clients, self.cohort)
+        parts = [self.data.sample_batch(int(cid), jax.random.fold_in(key, int(cid)),
+                                        self.client_batch,
+                                        **(self.batch_kwargs or {}))
+                 for cid in ids]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+    def round(self, state: TrainState, key: jax.Array):
+        batch = self.cohort_batch(key)
+        return self._step(state, batch)
+
+    def run(self, steps: int, key: jax.Array, log_every: int = 0):
+        state = self.init_state(key)
+        history: List[Dict[str, float]] = []
+        for t in range(steps):
+            state, metrics = self.round(state, jax.random.fold_in(key, t + 1))
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = t
+            history.append(rec)
+            if log_every and t % log_every == 0:
+                print(f"step {t}: loss={rec.get('loss', 0):.4f}")
+        return state, history

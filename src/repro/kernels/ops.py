@@ -1,0 +1,102 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding (N to a block multiple, L to a lane-friendly multiple) and
+interpret-mode selection: ``interpret=True`` on non-TPU backends so the CPU
+container executes the kernel bodies in Python for validation, compiled
+Mosaic kernels on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign import kmeans_assign_kernel
+from repro.kernels.pq_quantize import pq_quantize_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x, block):
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x, n
+
+
+def _pad_centroids(c, lane: int = 8):
+    l = c.shape[0]
+    pad = (-l) % lane
+    lmask = jnp.concatenate([jnp.ones(l, jnp.float32),
+                             jnp.zeros(pad, jnp.float32)])
+    if pad:
+        c = jnp.concatenate([c, jnp.zeros((pad, c.shape[1]), c.dtype)])
+    return c, lmask
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign(x: jax.Array, centroids: jax.Array, *,
+                  block_n: int = 512, interpret: bool | None = None):
+    """codes[i] = argmin_l ‖x_i − c_l‖²; also returns squared distances.
+
+    x: (N, D) any float dtype; centroids: (L, D). Arbitrary N, L (padded
+    internally).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    block_n = min(block_n, max(8, x.shape[0]))
+    xp, n = _pad_rows(x, block_n)
+    cp, lmask = _pad_centroids(centroids)
+    codes, dist = kmeans_assign_kernel(xp, cp, lmask, block_n=block_n,
+                                       interpret=interpret)
+    return codes[:n], dist[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_quantize(x: jax.Array, centroids: jax.Array, *,
+                block_n: int = 512, interpret: bool | None = None):
+    """Fused assign + dequantize + residual. Returns (z̃, residual, codes)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    block_n = min(block_n, max(8, x.shape[0]))
+    xp, n = _pad_rows(x, block_n)
+    cp, lmask = _pad_centroids(centroids)
+    zt, resid, codes = pq_quantize_kernel(xp, cp, lmask, block_n=block_n,
+                                          interpret=interpret)
+    return zt[:n], resid[:n], codes[:n]
+
+
+def assign_impl_for_kmeans(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Adapter matching repro.core.kmeans.set_assign_impl's signature."""
+    codes, _ = kmeans_assign(x, centroids)
+    return codes
+
+
+@functools.partial(jax.jit, static_argnames=("num_q_heads", "num_kv_heads",
+                                             "scale", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, num_q_heads: int, num_kv_heads: int,
+                    scale: float, window=None, block_q: int = 256,
+                    block_k: int = 256, interpret: bool | None = None):
+    """Padded wrapper for the flash kernel: accepts any S (pads to the block
+    multiple with masked tail — causal masking already zeroes the padding's
+    influence on real rows). Layout: q (B·H, S, hd), k/v (B·Kv, S, hd)."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    interpret = _interpret_default() if interpret is None else interpret
+    s = q.shape[1]
+    blk = max(block_q, block_k)
+    pad = (-s) % min(blk, max(s, 1))
+    if pad:
+        zq = jnp.zeros((q.shape[0], pad, q.shape[2]), q.dtype)
+        zk = jnp.zeros((k.shape[0], pad, k.shape[2]), k.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk], axis=1)
+    out = _fa(q, k, v, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
+              scale=scale, window=window,
+              block_q=min(block_q, q.shape[1]),
+              block_k=min(block_k, q.shape[1]), interpret=interpret)
+    return out[:, :s]

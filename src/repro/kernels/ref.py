@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x: jax.Array, centroids: jax.Array, lmask: jax.Array):
+    """codes + squared distances; invalid centroids (lmask==0) excluded."""
+    xf = x.astype(jnp.float32)
+    cf = centroids.astype(jnp.float32)
+    d2 = (jnp.sum(xf * xf, -1)[:, None] - 2.0 * xf @ cf.T
+          + jnp.sum(cf * cf, -1)[None, :])
+    d2 = jnp.where(lmask[None, :] > 0, d2, jnp.inf)
+    codes = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    return codes, jnp.maximum(jnp.min(d2, axis=-1), 0.0)
+
+
+def pq_quantize_ref(x: jax.Array, centroids: jax.Array, lmask: jax.Array):
+    codes, _ = kmeans_assign_ref(x, centroids, lmask)
+    zt = centroids.astype(jnp.float32)[codes]
+    resid = x.astype(jnp.float32) - zt
+    return zt.astype(x.dtype), resid, codes

@@ -1,0 +1,138 @@
+"""Compiled-HLO analysis: FLOPs/bytes from cost_analysis + collective-bytes
+parsed from the partitioned module text — the inputs to the §Roofline model.
+
+cost_analysis() does not expose collective traffic, so we parse the
+post-SPMD HLO: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op contributes wire bytes estimated with standard ring
+formulas over its replica-group size g:
+
+    all-gather, reduce-scatter, all-to-all : bytes · (g-1)/g
+    all-reduce                             : bytes · 2(g-1)/g
+    collective-permute                     : bytes
+
+where ``bytes`` is the op's (flattened tuple) result payload per device.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.5 = bf16[16,512,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+def _payload_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[G,S]<=[...] : G groups of S
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return world
+
+
+def collective_stats(hlo_text: str, world: int) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, payload_bytes, wire_bytes} (per device)."""
+    stats: Dict[str, Dict[str, float]] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        # async pairs appear as -start/-done; count the op once (on start)
+        if "-done(" in line:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        payload = _payload_bytes(type_str)
+        g = _group_size(line, world)
+        if kind == "all-reduce":
+            wire = payload * 2 * (g - 1) / max(g, 1)
+        elif kind == "collective-permute":
+            wire = payload
+        else:
+            wire = payload * (g - 1) / max(g, 1)
+        rec = stats.setdefault(kind, {"count": 0, "payload_bytes": 0.0,
+                                      "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["payload_bytes"] += payload
+        rec["wire_bytes"] += wire
+    return stats
+
+
+def total_wire_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["wire_bytes"] for v in stats.values())
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Normalize cost_analysis() across jax versions (dict or list-of-dict)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    # operand/output byte breakdown if present
+    out["utilization_keys"] = None
+    return {k: v for k, v in out.items() if v is not None}
+
+
+def memory_summary(compiled) -> Dict[str, int]:
+    ms = compiled.memory_analysis()
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")
+    return {f: int(getattr(ms, f, 0)) for f in fields}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float, *,
+                   peak_flops: float, hbm_bw: float, ici_bw: float,
+                   num_links: int = 4) -> Dict[str, float]:
+    """Three per-device roofline times (seconds) + the dominant term.
+
+    ``flops``/``hbm_bytes``/``wire_bytes`` are per-device quantities; v5e
+    chips have ~4 usable ICI links, so collective bandwidth = num_links·ici_bw.
+    """
+    t_compute = flops / peak_flops
+    t_memory = hbm_bytes / hbm_bw
+    t_coll = wire_bytes / (ici_bw * num_links)
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "bound": dom[1],
+        "step_time_lower_bound_s": max(t_compute, t_memory, t_coll),
+    }

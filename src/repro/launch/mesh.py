@@ -1,0 +1,54 @@
+"""Production mesh construction (TPU v5e pods).
+
+Kept as functions — importing this module never touches jax device state,
+so unit tests keep their single CPU device unless a caller explicitly
+builds a mesh (the dry-run sets XLA_FLAGS for 512 host devices first).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+SINGLE_POD = (16, 16)                  # 256 chips / pod
+MULTI_POD = (2, 16, 16)                # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(data=16, model=16) single-pod or (pod=2, data=16, model=16) multi-pod.
+
+    Uses the first prod(shape) devices, so a 512-device host platform serves
+    both meshes.
+    """
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pods: int = 0):
+    """Small mesh for CPU sharding tests (requires >= data*model*max(pods,1)
+    host devices)."""
+    if pods:
+        shape, axes = (pods, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+# TPU v5e hardware constants for the roofline model (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (~45-100 GB/s depending on gen)
+HBM_BYTES = 16 * 1024 ** 3      # 16 GiB

@@ -1,0 +1,85 @@
+"""Production serving launcher: batched split-inference driver.
+
+Prefill (optionally with FedLite-compressed uplink at the cut layer) then a
+decode loop with KV/SSM caches. Use --smoke on CPU; the full configs are
+validated via launch/dryrun.py (decode_32k / long_500k shapes).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2_1p3b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_model
+from repro.sharding import use_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    mesh = None if args.mesh == "none" else make_production_mesh(
+        multi_pod=args.mesh == "multi")
+
+    with use_mesh(mesh):
+        model = make_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, P, G = args.batch, args.prompt_len, args.gen
+        if cfg.num_codebooks > 1:
+            prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                        (B, cfg.num_codebooks, P), 0,
+                                        cfg.vocab_size)
+        else:
+            prompt = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                        cfg.vocab_size)
+        caches = model.init_caches(B, P + G)
+
+        prefill = jax.jit(lambda p, b, c: model.prefill(
+            p, b, c, quantize=not args.no_compress))
+        decode = jax.jit(lambda p, c, t, i: model.decode_step(p, c, t, i))
+
+        t0 = time.time()
+        logits, caches = prefill(params, {"tokens": prompt}, caches)
+        jax.block_until_ready(logits)
+        print(f"prefill: {B}x{P} tokens in {time.time() - t0:.2f}s")
+
+        key = jax.random.PRNGKey(7)
+        t0 = time.time()
+        for i in range(G):
+            if args.temperature > 0:
+                key, k = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    k, logits[..., :cfg.vocab_size] / args.temperature
+                ).astype(jnp.int32)
+            else:
+                nxt = jnp.argmax(logits[..., :cfg.vocab_size], -1
+                                 ).astype(jnp.int32)
+            if cfg.num_codebooks > 1:
+                nxt = jnp.moveaxis(nxt, -1, 1)
+            logits, caches = decode(params, caches, nxt, P + i)
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+        print(f"decode: {G} steps x{B} in {dt:.2f}s "
+              f"({B * G / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

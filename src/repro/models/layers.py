@@ -1,0 +1,88 @@
+"""Basic building blocks: inits, norms, dense projections, gated MLPs.
+
+All modules are (init, apply) function pairs over plain dict pytrees —
+no framework dependency, trivially shardable via repro.sharding rules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard, shard_residual
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, norm_type: str, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, norm_type: str, eps: float):
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    elif norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(norm_type)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (swiglu / geglu / gelu)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, use_bias: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], d_model, d_ff, dtype)
+        p["w_up"] = dense_init(ks[1], d_model, d_ff, dtype)
+    else:  # plain gelu
+        p["w_up"] = dense_init(ks[1], d_model, d_ff, dtype)
+    p["w_down"] = dense_init(ks[2], d_ff, d_model, dtype)
+    if use_bias:
+        p["w_up_b"] = jnp.zeros((d_ff,), dtype)
+        p["w_down_b"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def apply_mlp(p, x, mlp_type: str):
+    """x: (..., d_model). Column-parallel up/gate, row-parallel down."""
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_up"]
+        if "w_up_b" in p:
+            h = h + p["w_up_b"]
+        h = jax.nn.gelu(h, approximate=True)
+    h = shard(h, ("pod", "data"), None, "model")
+    y = h @ p["w_down"]
+    if "w_down_b" in p:
+        y = y + p["w_down_b"]
+    return shard_residual(y) if y.ndim == 3 else y

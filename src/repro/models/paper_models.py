@@ -1,0 +1,240 @@
+"""The paper's own three task models (Appendix C), split exactly as in §5.
+
+  * FEMNIST CNN  — client: Conv(32,3x3) + Conv(64,3x3) + MaxPool + Flatten
+                   (cut activation d = 12·12·64 = 9216, the paper's d);
+                   server: Dense(128) + Dense(62).   client ≈ 1.6% of params.
+  * SO Tag MLP   — client: one dense layer (bow 5000 -> 2000 = d);
+                   server: one dense layer (2000 -> 1000 tags, multi-label).
+  * SO NWP LSTM  — client: Embedding(vocab, 96) + LSTM + Dense (d = 96);
+                   server: Dense(96 -> vocab).
+
+Each model follows the same split API as TransformerLM (params =
+{"client", "server"}; ``loss(params, batch, quantize=...)`` applies the
+grouped PQ + gradient-corrected VJP at the cut), so ``make_train_step``
+drives the paper models and the billion-parameter archs identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.correction import quantize_with_correction
+from repro.core.quantizer import PQConfig
+
+Params = Dict[str, Any]
+
+
+def _maybe_quantize(x, pq: Optional[PQConfig], lam, quantize: bool,
+                    client_batch: int = 0, lam_override=None):
+    if lam_override is not None:
+        lam = lam_override
+    """Quantize per client: the leading dim is split into cohorts of
+    ``client_batch`` examples, each clustered with its own codebooks (vmap).
+    client_batch=0 treats the whole batch as a single client."""
+    if not quantize or pq is None:
+        return x, {}
+    if client_batch and x.shape[0] % client_batch == 0 and x.shape[0] > client_batch:
+        xs = x.reshape(x.shape[0] // client_batch, client_batch, *x.shape[1:])
+        zt = jax.vmap(lambda zi: quantize_with_correction(zi, lam, pq))(xs)
+        zt = zt.reshape(x.shape)
+    else:
+        zt = quantize_with_correction(x, lam, pq)
+    resid = jax.lax.stop_gradient(x - zt).astype(jnp.float32)
+    n = x.size // x.shape[-1]
+    return zt, {
+        "pq_distortion": jnp.mean(jnp.sum(resid * resid, axis=-1)),
+        "pq_compression_ratio": float(pq.compression_ratio(int(n), x.shape[-1])),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FEMNIST CNN
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FemnistCNN:
+    """28x28x1 -> 62 classes; cut after flatten (d = 9216)."""
+    num_classes: int = 62
+    pq: Optional[PQConfig] = None
+    lam: float = 0.0
+    dropout: float = 0.0
+    client_batch: int = 0   # examples per client for per-client PQ codebooks
+
+    cut_dim: int = 9216  # 12*12*64
+
+    def init(self, key) -> Params:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        he = lambda k, shp, fan: jax.random.normal(k, shp) * jnp.sqrt(2.0 / fan)
+        return {
+            "client": {
+                "conv1_w": he(k1, (3, 3, 1, 32), 9), "conv1_b": jnp.zeros(32),
+                "conv2_w": he(k2, (3, 3, 32, 64), 9 * 32), "conv2_b": jnp.zeros(64),
+            },
+            "server": {
+                "dense1_w": he(k3, (9216, 128), 9216), "dense1_b": jnp.zeros(128),
+                "dense2_w": he(k4, (128, self.num_classes), 128),
+                "dense2_b": jnp.zeros(self.num_classes),
+            },
+        }
+
+    def client_forward(self, cp: Params, batch) -> jax.Array:
+        x = batch["image"]  # (B, 28, 28, 1)
+        x = jax.lax.conv_general_dilated(
+            x, cp["conv1_w"], (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + cp["conv1_b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.conv_general_dilated(
+            x, cp["conv2_w"], (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + cp["conv2_b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+        return x.reshape(x.shape[0], -1)  # (B, 9216)
+
+    def server_logits(self, sp: Params, acts) -> jax.Array:
+        h = jax.nn.relu(acts @ sp["dense1_w"] + sp["dense1_b"])
+        return h @ sp["dense2_w"] + sp["dense2_b"]
+
+    def loss(self, params: Params, batch, *, quantize: bool = True,
+             lam_override=None):
+        acts = self.client_forward(params["client"], batch)
+        acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
+                                       self.client_batch, lam_override)
+        logits = self.server_logits(params["server"], acts)
+        labels = batch["label"]
+        ce = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(labels.shape[0]),
+                                                  labels])
+        return ce, dict(stats, ce=ce)
+
+    def accuracy(self, params: Params, batch) -> jax.Array:
+        acts = self.client_forward(params["client"], batch)
+        logits = self.server_logits(params["server"], acts)
+        return jnp.mean(jnp.argmax(logits, -1) == batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# SO Tag MLP (multi-label)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SOTagMLP:
+    bow_dim: int = 5000
+    cut_dim: int = 2000
+    num_tags: int = 1000
+    pq: Optional[PQConfig] = None
+    lam: float = 0.0
+    client_batch: int = 0
+
+    def init(self, key) -> Params:
+        k1, k2 = jax.random.split(key)
+        glorot = lambda k, i, o: jax.random.normal(k, (i, o)) * jnp.sqrt(1.0 / i)
+        return {
+            "client": {"dense1_w": glorot(k1, self.bow_dim, self.cut_dim),
+                       "dense1_b": jnp.zeros(self.cut_dim)},
+            "server": {"dense2_w": glorot(k2, self.cut_dim, self.num_tags),
+                       "dense2_b": jnp.zeros(self.num_tags)},
+        }
+
+    def client_forward(self, cp, batch):
+        return jax.nn.relu(batch["bow"] @ cp["dense1_w"] + cp["dense1_b"])
+
+    def server_logits(self, sp, acts):
+        return acts @ sp["dense2_w"] + sp["dense2_b"]
+
+    def loss(self, params, batch, *, quantize: bool = True,
+             lam_override=None):
+        acts = self.client_forward(params["client"], batch)
+        acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
+                                       self.client_batch, lam_override)
+        logits = self.server_logits(params["server"], acts)
+        y = batch["tags"].astype(jnp.float32)  # (B, num_tags) multi-hot
+        bce = jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                       jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        return bce, dict(stats, bce=bce)
+
+    def recall_at_5(self, params, batch):
+        acts = self.client_forward(params["client"], batch)
+        logits = self.server_logits(params["server"], acts)
+        _, top5 = jax.lax.top_k(logits, 5)
+        hits = jnp.take_along_axis(batch["tags"], top5, axis=-1).sum(-1)
+        denom = jnp.minimum(batch["tags"].sum(-1), 5)
+        return jnp.mean(hits / jnp.maximum(denom, 1))
+
+
+# ---------------------------------------------------------------------------
+# SO NWP LSTM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SONwpLSTM:
+    vocab: int = 10_000
+    embed_dim: int = 96
+    hidden: int = 670
+    cut_dim: int = 96
+    pq: Optional[PQConfig] = None
+    lam: float = 0.0
+    client_batch: int = 0
+
+    def init(self, key) -> Params:
+        ks = jax.random.split(key, 5)
+        g = lambda k, i, o: jax.random.normal(k, (i, o)) * jnp.sqrt(1.0 / i)
+        return {
+            "client": {
+                "emb_w": jax.random.normal(ks[0], (self.vocab, self.embed_dim)) * 0.02,
+                "lstm_wx": g(ks[1], self.embed_dim, 4 * self.hidden),
+                "lstm_wh": g(ks[2], self.hidden, 4 * self.hidden),
+                "lstm_b": jnp.zeros(4 * self.hidden),
+                "dense1_w": g(ks[3], self.hidden, self.cut_dim),
+                "dense1_b": jnp.zeros(self.cut_dim),
+            },
+            "server": {"dense2_w": g(ks[4], self.cut_dim, self.vocab),
+                       "dense2_b": jnp.zeros(self.vocab)},
+        }
+
+    def client_forward(self, cp, batch):
+        toks = batch["tokens"]  # (B, S)
+        x = cp["emb_w"][toks]   # (B, S, E)
+        B, S, _ = x.shape
+        Hn = self.hidden
+
+        def step(carry, xt):
+            h, c = carry
+            z = xt @ cp["lstm_wx"] + h @ cp["lstm_wh"] + cp["lstm_b"]
+            i, f, g_, o = jnp.split(z, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g_)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        (h, c), hs = jax.lax.scan(step, (jnp.zeros((B, Hn)), jnp.zeros((B, Hn))),
+                                  jnp.swapaxes(x, 0, 1))
+        hs = jnp.swapaxes(hs, 0, 1)  # (B, S, H)
+        return hs @ cp["dense1_w"] + cp["dense1_b"]  # (B, S, 96)
+
+    def server_logits(self, sp, acts):
+        return acts @ sp["dense2_w"] + sp["dense2_b"]
+
+    def loss(self, params, batch, *, quantize: bool = True,
+             lam_override=None):
+        acts = self.client_forward(params["client"], batch)
+        acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
+                                       self.client_batch, lam_override)
+        logits = self.server_logits(params["server"], acts)
+        labels = batch["labels"]  # (B, S), -1 = ignore
+        mask = labels >= 0
+        safe = jnp.maximum(labels, 0)
+        lp = jax.nn.log_softmax(logits)
+        ce = -jnp.sum(jnp.take_along_axis(lp, safe[..., None], -1)[..., 0] * mask)
+        ce = ce / jnp.maximum(mask.sum(), 1)
+        return ce, dict(stats, ce=ce)
+
+    def accuracy(self, params, batch):
+        acts = self.client_forward(params["client"], batch)
+        logits = self.server_logits(params["server"], acts)
+        labels = batch["labels"]
+        mask = labels >= 0
+        ok = (jnp.argmax(logits, -1) == labels) * mask
+        return ok.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,222 @@
+"""Mamba-2 style state-space block (SSD — state-space duality, arXiv:2405.21060).
+
+Recurrence per head h with state (P=head_dim, N=d_state):
+
+    H_t = exp(dt_t·A_h)·H_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · H_t + D_h · x_t
+
+computed with the chunked SSD algorithm: quadratic attention-like compute
+inside chunks of ``ssm_chunk`` tokens (MXU-friendly) plus a `lax.scan`
+recurrence over chunk boundary states — O(S·Cs) instead of O(S²), and the
+scan carry is exactly the decode state, so prefill hands the cache to decode
+for free.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, norm_init, apply_norm
+from repro.sharding import shard, shard_residual
+
+
+def _conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def ssm_init(key, cfg, dtype):
+    ks = jax.random.split(key, 7)
+    D, din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    # four separate projections (z | x | BC | dt) rather than one fused
+    # (D, 2·din+2N+H) matrix: slicing a fused model-sharded output at
+    # non-shard-aligned boundaries costs XLA a collective-permute chain per
+    # block (§Perf C2); separate weights/streams shard cleanly
+    p = {
+        "in_proj_z": dense_init(ks[5], D, din, dtype),
+        "in_proj_x": dense_init(ks[0], D, din, dtype),
+        "in_proj_bc": dense_init(ks[4], D, 2 * N, dtype),
+        "in_proj_dt": dense_init(ks[6], D, H, dtype),
+        "out_proj": dense_init(ks[1], din, D, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv_width, din),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "conv_w_bc": (jax.random.normal(ks[3], (cfg.ssm_conv_width, 2 * N),
+                                        jnp.float32) * 0.1).astype(dtype),
+        "conv_b_bc": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "ssm_D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": norm_init(din, "rmsnorm", dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted sums. x: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(pad[:, i:i + S] * w[i] for i in range(W))
+    return y + b
+
+
+def _project_in(p, x):
+    """x -> (z, x_ssm, BC, dt) via the four aligned projections."""
+    return (x @ p["in_proj_z"], x @ p["in_proj_x"], x @ p["in_proj_bc"],
+            x @ p["in_proj_dt"])
+
+
+def _segsum_decay(dA):
+    """dA: (..., Cs, H) -> decay L (..., H, Cs, Cs): L[i,j]=exp(Σ_{j<t<=i} dA_t)."""
+    cum = jnp.cumsum(dA, axis=-2)                       # (..., Cs, H)
+    cum = jnp.moveaxis(cum, -1, -2)                     # (..., H, Cs)
+    diff = cum[..., :, None] - cum[..., None, :]        # (..., H, Cs, Cs)
+    Cs = dA.shape[-2]
+    mask = jnp.tril(jnp.ones((Cs, Cs), bool))
+    # mask BEFORE exp: upper-triangle diffs are large-positive and exp(·)=inf
+    # would poison the backward pass via where's 0·inf
+    return jnp.exp(jnp.where(mask, diff, -jnp.inf))
+
+
+def ssd_scan(xh, dt, A, Bm, Cm, chunk: int,
+             h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    xh: (B,S,H,P); dt: (B,S,H); A: (H,) negative; Bm/Cm: (B,S,N).
+    Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Cs = min(chunk, S)
+    if S % Cs != 0:
+        Cs = S
+    nc = S // Cs
+
+    # NOTE: scan xs are the RAW tensors (xh, dt, B, C); the derived xdt/dA /
+    # decay products are computed inside the checkpointed chunk body — a
+    # precomputed (B,S,H,P) xdt stack would add a full activation-sized
+    # buffer per SSM layer that lives for the whole scan
+    xc = xh.reshape(B, nc, Cs, H, P)
+    dtc = dt.reshape(B, nc, Cs, H)
+    Bc = Bm.reshape(B, nc, Cs, N)
+    Cc = Cm.reshape(B, nc, Cs, N)
+
+    @jax.checkpoint
+    def chunk_stats(x_c, dt_c, B_c, C_c):
+        dA_c = dt_c * A                                 # (B,Cs,H), <= 0
+        xdt_c = x_c * dt_c[..., None]                   # (B,Cs,H,P)
+        # intra-chunk (quadratic within chunk)
+        L = _segsum_decay(dA_c)                         # (B,H,Cs,Cs)
+        CB = jnp.einsum("bin,bjn->bij", C_c, B_c)       # (B,Cs,Cs)
+        y_intra = jnp.einsum("bij,bhij,bjhp->bihp", CB, L, xdt_c)
+        # state contributed by this chunk (decay to chunk end)
+        cum = jnp.cumsum(dA_c, axis=1)                  # (B,Cs,H)
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)       # (B,Cs,H)
+        state = jnp.einsum("bjn,bjh,bjhp->bhpn", B_c, decay_end, xdt_c)
+        # decay from chunk start to each position (for the carried-in state)
+        decay_in = jnp.exp(cum)                         # (B,Cs,H)
+        chunk_decay = jnp.exp(cum[:, -1, :])            # (B,H)
+        return y_intra, state, decay_in, chunk_decay
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), xh.dtype)
+
+    def step(h, inp):
+        x_c, dt_c, B_c, C_c = inp
+        y_intra, state, decay_in, chunk_decay = chunk_stats(x_c, dt_c, B_c, C_c)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", C_c, h.astype(y_intra.dtype),
+                             decay_in)
+        h_next = chunk_decay[:, :, None, None] * h + state.astype(h.dtype)
+        return h_next, (y_intra + y_inter)
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y, h_final
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    W = cfg.ssm_conv_width - 1
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                       dtype),
+        "conv": jnp.zeros((batch, W, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, W, 2 * cfg.ssm_state), dtype),
+    }
+
+
+def apply_ssm(p, x, cfg, *, mode: str = "train", cache=None):
+    """Mamba-2 block. x: (B,S,D) (S=1 for decode). Returns (y, new_cache)."""
+    B, S, D = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z, x_in, bc_in, dt_raw = _project_in(p, x)
+
+    def conv_stream(stream, cache_key, w, b):
+        """Depthwise causal conv on one aligned stream; returns (y, state)."""
+        if mode == "decode":
+            window = jnp.concatenate([cache[cache_key], stream], axis=1)
+            y = (jnp.einsum("bwc,wc->bc", window, w) + b)[:, None]
+            return y, window[:, 1:]
+        conv_in = stream
+        if cache is not None:  # continue from conv tail
+            conv_in = jnp.concatenate([cache[cache_key], stream],
+                                      axis=1)[:, -(S + cfg.ssm_conv_width - 1):]
+        y = _causal_conv(conv_in, w, b)[:, -S:]
+        C = stream.shape[-1]
+        state = jnp.concatenate(
+            [jnp.zeros((B, max(cfg.ssm_conv_width - 1 - S, 0), C), x.dtype),
+             conv_in[:, -(cfg.ssm_conv_width - 1):]], axis=1)
+        return y, state
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+    x_c, conv_state = conv_stream(x_in, "conv", p["conv_w"], p["conv_b"])
+    bc_c, conv_bc_state = conv_stream(bc_in, "conv_bc", p["conv_w_bc"],
+                                      p["conv_b_bc"])
+    x_c = jax.nn.silu(x_c)
+    bc_c = jax.nn.silu(bc_c)
+
+    xs = x_c.reshape(B, S, H, P)
+    Bm = bc_c[..., :N]
+    Cm = bc_c[..., N:]
+    # head-parallel SSD (Mamba TP): every SSD tensor below is independent per
+    # head, so sharding heads over "model" divides the chunk stacks, decay
+    # matrices and y buffers by the model-axis size. B/C (ngroups=1) are
+    # shared across heads and stay replicated.
+    xs = shard(xs, ("pod", "data"), None, "model", None)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+
+    new_cache = cache
+    if mode == "decode":
+        h_prev = cache["h"]
+        dA = jnp.exp(dt[:, 0] * A)                                    # (B,H) f32
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0], dt[:, 0],
+                         xs[:, 0])                                    # (B,H,P,N)
+        # keep the recurrent state in its cache dtype (scan carry typing)
+        h = (dA[:, :, None, None] * h_prev + upd).astype(h_prev.dtype)
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h)[:, None]          # (B,1,H,P)
+        y = y.astype(x.dtype)
+        new_cache = {"h": h, "conv": conv_state.astype(cache["conv"].dtype),
+                     "conv_bc": conv_bc_state.astype(cache["conv_bc"].dtype)}
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h_final = ssd_scan(xs, dt.astype(xs.dtype), A.astype(xs.dtype),
+                              Bm, Cm, cfg.ssm_chunk, h0=h0)
+        if mode == "prefill":
+            new_cache = {"h": h_final, "conv": conv_state,
+                         "conv_bc": conv_bc_state}
+
+    y = y + p["ssm_D"].astype(y.dtype)[None, None, :, None] * xs
+    y = shard(y, ("pod", "data"), None, "model", None)
+    y = y.reshape(B, S, din) * jax.nn.silu(z)
+    y = shard(y, ("pod", "data"), None, "model")
+    y = apply_norm(p["gate_norm"], y, "rmsnorm", cfg.norm_eps)
+    y = y @ p["out_proj"]
+    return shard_residual(y), new_cache

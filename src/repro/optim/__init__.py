@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adagrad,
+    adam,
+    get_optimizer,
+    momentum,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adam", "adagrad", "adafactor",
+    "get_optimizer", "constant", "cosine_decay", "warmup_cosine",
+]

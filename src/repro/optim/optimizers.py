@@ -1,0 +1,178 @@
+"""Functional optimizers (optax-style, dependency-free).
+
+The paper's three tasks use SGD (FEMNIST), Adam (SO NWP) and AdaGrad (SO
+Tag) — all implemented here. Adafactor (factored second moments, no
+momentum) is provided for the giant assigned archs (mixtral-8x22b,
+llama4-maverick) whose Adam state would not fit 256×16 GB HBM.
+
+``Optimizer.update`` returns *updates to add to params*; optimizer states
+are plain pytrees mirroring params so the sharding rules shard them exactly
+like the weights they belong to.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+    name: str = "opt"
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        del params
+        step = state["step"]
+        upd = jax.tree.map(lambda g: (-sched(step) * g.astype(jnp.float32)
+                                      ).astype(g.dtype), grads)
+        return upd, {"step": step + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        del params
+        step = state["step"]
+        m = jax.tree.map(lambda mv, g: beta * mv + g.astype(jnp.float32),
+                         state["m"], grads)
+        upd = jax.tree.map(lambda mv, g: (-sched(step) * mv).astype(g.dtype),
+                           m, grads)
+        return upd, {"step": step + 1, "m": m}
+
+    return Optimizer(init, update, "momentum")
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        m = jax.tree.map(lambda mv, g: b1 * mv + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(mv, vv, g):
+            mh, vh = mv / bc1, vv / bc2
+            return (-sched(step - 1) * mh / (jnp.sqrt(vh) + eps)).astype(g.dtype)
+
+        return jax.tree.map(u, m, v, grads), {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, "adam")
+
+
+def adagrad(lr, eps: float = 1e-7) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "acc": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        del params
+        step = state["step"]
+        acc = jax.tree.map(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                           state["acc"], grads)
+        upd = jax.tree.map(
+            lambda a, g: (-sched(step) * g.astype(jnp.float32) /
+                          (jnp.sqrt(a) + eps)).astype(g.dtype), acc, grads)
+        return upd, {"step": step + 1, "acc": acc}
+
+    return Optimizer(init, update, "adagrad")
+
+
+def adafactor(lr, eps: float = 1e-30, clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern, 2018), no momentum.
+
+    For rank>=2 params the (fp32) second moment is stored as a row vector +
+    column vector over the last two dims — O(n+m) instead of O(n·m) state,
+    which is what lets the 400B-param archs train on a 256-chip pod.
+    """
+    sched = _as_schedule(lr)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def zs(p):
+            if _factored(p):
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"full": jnp.zeros_like(p, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(zs, params, is_leaf=lambda x: not isinstance(x, dict))}
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) ** -0.8)
+
+        def upd_one(g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if "full" in v:
+                vn = beta * v["full"] + (1 - beta) * g2
+                rms = jnp.sqrt(vn)
+                new_v = {"full": vn}
+            else:
+                row = beta * v["row"] + (1 - beta) * g2.mean(axis=-1)
+                col = beta * v["col"] + (1 - beta) * g2.mean(axis=-2)
+                mean = row.mean(axis=-1, keepdims=True)[..., None]
+                rms = jnp.sqrt(row[..., None] * col[..., None, :] /
+                               jnp.maximum(mean, eps))
+                new_v = {"row": row, "col": col}
+            u = g32 / jnp.maximum(rms, eps)
+            # update clipping (RMS(u) <= clip_threshold)
+            urms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, urms / clip_threshold)
+            return (-sched(step - 1) * u).astype(g.dtype), new_v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd_one(g, v) for g, v in zip(flat_g, flat_v)]
+        upd = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return upd, {"step": step, "v": new_v}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    table = {"sgd": sgd, "momentum": momentum, "adam": adam,
+             "adagrad": adagrad, "adafactor": adafactor}
+    return table[name](lr, **kw)

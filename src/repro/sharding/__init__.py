@@ -1,0 +1,20 @@
+from repro.sharding.ctx import (
+    axis_size,
+    current_mesh,
+    set_mesh,
+    shard,
+    shard_residual,
+    use_mesh,
+)
+from repro.sharding.rules import param_specs, spec_for_param
+
+__all__ = [
+    "axis_size",
+    "current_mesh",
+    "set_mesh",
+    "shard",
+    "shard_residual",
+    "use_mesh",
+    "param_specs",
+    "spec_for_param",
+]

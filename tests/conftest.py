@@ -1,0 +1,11 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS device-count override here —
+smoke tests and benches must see the single real CPU device; only
+launch/dryrun.py fakes 512 devices (per its module docstring)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,63 @@
+"""HLO collective-parsing + roofline-term unit tests (no devices needed)."""
+
+import pytest
+
+from repro.launch import analysis
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,512,128]{2,1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={1}
+  %ar = f32[1024]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = bf16[8,64]{1,0} reduce-scatter(%z), replica_groups=[32,8]<=[256], dimensions={0}
+  %a2a = bf16[4,256]{1,0} all-to-all(%w), replica_groups=[16,16]<=[256]
+  %cp = f32[2,2]{1,0} collective-permute(%v), source_target_pairs={{0,1},{1,0}}
+  %ags = bf16[16,512,128]{2,1,0} all-gather-start(%x2), replica_groups=[16,16]<=[256]
+  %agd = bf16[16,512,128]{2,1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_collective_stats_counts_and_bytes():
+    s = analysis.collective_stats(HLO, world=256)
+    assert s["all-gather"]["count"] == 2          # -start counted, -done not
+    ag_payload = 16 * 512 * 128 * 2
+    assert s["all-gather"]["payload_bytes"] == 2 * ag_payload
+    # ring discount (g-1)/g with g=16
+    assert s["all-gather"]["wire_bytes"] == pytest.approx(
+        2 * ag_payload * 15 / 16)
+    # all-reduce: explicit group of 4, factor 2(g-1)/g
+    ar_payload = 1024 * 4
+    assert s["all-reduce"]["wire_bytes"] == pytest.approx(
+        ar_payload * 2 * 3 / 4)
+    # reduce-scatter group size 8 from iota [32,8]
+    rs_payload = 8 * 64 * 2
+    assert s["reduce-scatter"]["wire_bytes"] == pytest.approx(
+        rs_payload * 7 / 8)
+    assert s["collective-permute"]["wire_bytes"] == 2 * 2 * 4
+    assert analysis.total_wire_bytes(s) > 0
+
+
+def test_group_size_fallback_to_world():
+    s = analysis.collective_stats(
+        "%ar = f32[64]{0} all-reduce(%x), to_apply=%add\n", world=8)
+    assert s["all-reduce"]["wire_bytes"] == pytest.approx(64 * 4 * 2 * 7 / 8)
+
+
+def test_payload_handles_tuples():
+    s = analysis.collective_stats(
+        "%ar = (f32[8]{0}, bf16[4]{0}) all-reduce(%a, %b), "
+        "replica_groups={{0,1}}\n", world=2)
+    assert s["all-reduce"]["payload_bytes"] == 8 * 4 + 4 * 2
+
+
+def test_roofline_terms_dominance():
+    r = analysis.roofline_terms(197e12, 819e9, 0.0, peak_flops=197e12,
+                                hbm_bw=819e9, ici_bw=50e9)
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["memory_s"] == pytest.approx(1.0)
+    assert r["bound"] in ("compute", "memory")
+    r2 = analysis.roofline_terms(1e12, 1e9, 400e9, peak_flops=197e12,
+                                 hbm_bw=819e9, ici_bw=50e9)
+    assert r2["bound"] == "collective"
+    assert r2["step_time_lower_bound_s"] == pytest.approx(
+        max(r2["compute_s"], r2["memory_s"], r2["collective_s"]))

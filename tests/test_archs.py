@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned arch instantiates its REDUCED family variant (<=2 periods,
+d_model <= 512, <= 4 experts) and runs, on CPU:
+  * one forward/loss evaluation — asserts shape + no NaN,
+  * one full FedLite train step (quantizer + gradient correction + optimizer),
+  * prefill + one decode step — asserts logits match the train-mode forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.core.fedlite import TrainState, make_train_step
+from repro.core.quantizer import PQConfig
+from repro.models.transformer import TransformerLM
+from repro.optim import get_optimizer
+
+B, S = 2, 32
+
+
+def _pq(cfg):
+    return PQConfig(num_subvectors=cfg.d_model // 8, num_clusters=4,
+                    kmeans_iters=3)
+
+
+def _batch(cfg, key, seq=S):
+    ks = jax.random.split(key, 4)
+    if cfg.family == "vlm":
+        s_vis = seq // 4
+        s_txt = seq - s_vis
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (3, B, seq))
+        return {
+            "tokens": jax.random.randint(ks[0], (B, s_txt), 0, cfg.vocab_size),
+            "vision_embeds": jax.random.normal(ks[1], (B, s_vis,
+                                                       cfg.vision_embed_dim)),
+            "positions": pos,
+            "labels": jnp.concatenate(
+                [jnp.full((B, s_vis), -1, jnp.int32),
+                 jax.random.randint(ks[2], (B, s_txt), 0, cfg.vocab_size)], 1),
+        }
+    if cfg.num_codebooks > 1:
+        t = jax.random.randint(ks[0], (B, cfg.num_codebooks, seq), 0,
+                               cfg.vocab_size)
+        return {"tokens": t, "labels": t}
+    t = jax.random.randint(ks[0], (B, seq), 0, cfg.vocab_size)
+    return {"tokens": t, "labels": jnp.roll(t, -1, axis=1)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_arch(arch, smoke=True)
+    assert cfg.d_model <= 512 and cfg.num_layers <= 4 and cfg.num_experts <= 4
+    model = TransformerLM(cfg, pq=_pq(cfg), lam=1e-4)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    assert float(loss) > 0
+
+    opt = get_optimizer("adam", 1e-3)
+    step = make_train_step(model, opt, donate=False)
+    state = TrainState.create(params, opt)
+    state2, m = step(state, batch)
+    assert int(state2.step) == 1
+    for leaf in jax.tree.leaves(state2.params):
+        assert not bool(jnp.isnan(leaf).any()), f"{arch}: NaN after step"
+    # loss decreases over a few steps on a fixed batch
+    st_ = state2
+    for _ in range(3):
+        st_, m2 = step(st_, batch)
+    assert float(m2["loss"]) < float(m["loss"]), f"{arch}: no progress"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_matches_forward(arch):
+    import dataclasses
+    cfg = get_arch(arch, smoke=True)
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode exercised via shapes in dry-run (needs "
+                    "m-rope position plumbing for mixed prompts)")
+    if cfg.num_experts:
+        # ample capacity: token drops differ between prefill(S-1) and full(S)
+        # passes and would break the exact-match property being tested
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = TransformerLM(cfg)  # no quantizer: exact match check
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    toks = batch["tokens"]
+
+    # full forward last-token logits
+    acts, _, _ = model.client_forward(params["client"], batch, mode="train")
+    x, _, _ = model.server_forward(params["server"], acts, batch, mode="train")
+    lg_full = model.logits(params, x)[:, -1]
+
+    caches = model.init_caches(B, S + 4)
+    pre = {k: (v[..., :S - 1] if k == "tokens" and cfg.num_codebooks > 1
+               else (v[:, :S - 1] if k == "tokens" else v))
+           for k, v in batch.items() if k == "tokens"}
+    _, caches = model.prefill(params, pre, caches)
+    last = toks[..., S - 1:] if cfg.num_codebooks > 1 else toks[:, S - 1:]
+    lg_dec, _ = model.decode_step(params, caches, last, S - 1)
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0], np.float32),
+                               np.asarray(lg_full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_full_configs_match_assignment_table():
+    """The exact published numbers from the assignment block."""
+    expect = {
+        "starcoder2_3b": (30, 3072, 24, 2, 12288, 49152),
+        "mamba2_1p3b": (48, 2048, 0, 0, 0, 50280),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "jamba_v0p1_52b": (32, 4096, 32, 8, 14336, 65536),
+        "gemma_7b": (28, 3072, 16, 16, 24576, 256000),
+        "llama4_maverick_400b": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2_vl_2b": (28, 1536, 12, 2, 8960, 151936),
+        "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
+        "llama3_8b": (32, 4096, 32, 8, 14336, 128256),
+        "command_r_35b": (40, 8192, 64, 8, 22528, 256000),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_arch(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.num_heads == h, arch
+        assert cfg.num_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == v, arch
+        assert cfg.source, arch
+
+
+def test_moe_and_ssm_structure():
+    mix = get_arch("mixtral_8x22b")
+    assert mix.num_experts == 8 and mix.experts_per_token == 2
+    jam = get_arch("jamba_v0p1_52b")
+    assert jam.layer_pattern.count("attn") == 1 and len(jam.layer_pattern) == 8
+    assert jam.num_experts == 16 and jam.moe_period == 2
+    mam = get_arch("mamba2_1p3b")
+    assert mam.ssm_state == 128 and mam.layer_pattern == ("ssm",)
+    l4 = get_arch("llama4_maverick_400b")
+    assert l4.num_experts == 128 and l4.experts_per_token == 1

@@ -1,0 +1,41 @@
+"""Checkpoint round-trip tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6.0).reshape(2, 3)},
+            "c": jnp.ones((4,), jnp.bfloat16),
+            "step": jnp.asarray(7, jnp.int32)}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"loss": 1.0})
+    assert latest_step(str(tmp_path)) == 7
+    back = restore_checkpoint(str(tmp_path))
+    np.testing.assert_array_equal(back["a"]["b"], tree["a"]["b"])
+    assert back["c"].dtype == jnp.bfloat16
+    assert int(back["step"]) == 7
+
+
+def test_multiple_steps_latest_wins(tmp_path):
+    for s in (1, 5, 3):
+        save_checkpoint(str(tmp_path), s, {"x": jnp.asarray(float(s))})
+    assert latest_step(str(tmp_path)) == 5
+    assert float(restore_checkpoint(str(tmp_path))["x"]) == 5.0
+
+
+def test_train_state_roundtrip(tmp_path):
+    from repro.core.fedlite import TrainState
+    from repro.models.paper_models import SOTagMLP
+    from repro.optim import adagrad
+    model = SOTagMLP(bow_dim=64, cut_dim=32, num_tags=16)
+    opt = adagrad(0.1)
+    state = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
+    save_checkpoint(str(tmp_path), 0, {"params": state.params,
+                                       "opt": state.opt_state})
+    back = restore_checkpoint(str(tmp_path), 0)
+    for a, b in zip(jax.tree.leaves(back["params"]),
+                    jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(a, b)

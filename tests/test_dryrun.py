@@ -1,0 +1,45 @@
+"""Integration test for the multi-pod dry-run machinery (deliverable e).
+
+Runs launch/dryrun.py in a subprocess (XLA device-count flags must be set
+before jax initializes, so in-process testing is impossible) for one cheap
+(arch × shape) on both production meshes, and checks the recorded artifact.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_one_combo(tmp_path, mesh):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "starcoder2_3b", "--shape", "decode_32k",
+         "--mesh", mesh, "--out", str(tmp_path), "--force"],
+        env=env, capture_output=True, text=True, timeout=540, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"starcoder2_3b__decode_32k__{mesh}.json"))
+    assert "error" not in rec
+    assert rec["world"] == (512 if mesh == "multi" else 256)
+    assert rec["fits_16GiB"]
+    assert rec["roofline"]["bound"] in ("compute", "memory", "collective")
+    assert rec["cost"]["flops"] > 0
+    assert rec["collectives"]  # sharded program must communicate
+
+
+def test_dryrun_skip_note(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "llama3_8b", "--shape", "long_500k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=240, cwd=REPO)
+    assert proc.returncode == 0
+    rec = json.load(open(tmp_path / "llama3_8b__long_500k__single.json"))
+    assert "skipped" in rec  # full attention @ 500k: skip-with-note

@@ -1,0 +1,151 @@
+"""System-level FedLite tests: the paper's algorithmic claims as asserts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedlite import TrainState, comm_report, make_train_step
+from repro.core.quantizer import PQConfig
+from repro.core.split import split_summary
+from repro.data.synthetic import make_federated_image_data
+from repro.models.paper_models import FemnistCNN
+from repro.optim import sgd, adam
+
+
+def _cnn_batch(key, n=16):
+    data = make_federated_image_data(num_clients=4, seed=0)
+    return data.eval_batch(key, n)
+
+
+def test_splitfed_equals_minibatch_sgd():
+    """Paper §3: SplitFed (no quantization) is EXACTLY mini-batch SGD on the
+    full model — client and server updates together equal one SGD step."""
+    model = FemnistCNN()
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _cnn_batch(jax.random.PRNGKey(1))
+    lr = 0.1
+
+    # SplitFed step via the framework
+    opt = sgd(lr)
+    step = make_train_step(model, opt, quantize=False, donate=False)
+    state = TrainState.create(params, opt)
+    state2, _ = step(state, batch)
+
+    # plain mini-batch SGD on the un-split model
+    g = jax.grad(lambda p: model.loss(p, batch, quantize=False)[0])(params)
+    manual = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+
+    for a, b in zip(jax.tree.leaves(state2.params), jax.tree.leaves(manual)):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_fedlite_grad_reduces_to_splitfed_without_quantization_error():
+    """If the quantizer reconstructs exactly (enough clusters for the data),
+    FedLite's corrected gradient == SplitFed's gradient."""
+    # q=1 (whole-vector K-means): identical inputs -> identical activation
+    # rows -> the single centroid reconstructs them exactly
+    model_q = FemnistCNN(pq=PQConfig(num_subvectors=1, num_clusters=2,
+                                     kmeans_iters=8), lam=0.5)
+    params = model_q.init(jax.random.PRNGKey(0))
+    img = jnp.ones((8, 28, 28, 1))
+    batch = {"image": img, "label": jnp.zeros((8,), jnp.int32)}
+    g_q = jax.grad(lambda p: model_q.loss(p, batch)[0])(params)
+    g_s = jax.grad(lambda p: model_q.loss(p, batch, quantize=False)[0])(params)
+    for a, b in zip(jax.tree.leaves(g_q), jax.tree.leaves(g_s)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_fedlite_trains_with_high_compression():
+    """A few steps of FedLite at ~600x compression still reduce the loss."""
+    pq = PQConfig(num_subvectors=1152, num_clusters=2, kmeans_iters=4)
+    model = FemnistCNN(pq=pq, lam=1e-4)
+    opt = sgd(10 ** -1.0)
+    step = make_train_step(model, opt, donate=False)
+    state = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
+    batch = _cnn_batch(jax.random.PRNGKey(2), 32)
+    losses = []
+    for i in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert m["pq_compression_ratio"] > 400
+
+
+def test_comm_report_matches_paper_table1():
+    """Table 1 / §5: uplink accounting for FedAvg vs SplitFed vs FedLite."""
+    pq = PQConfig(num_subvectors=1152, num_clusters=2, kmeans_iters=2)
+    model = FemnistCNN(pq=pq, lam=1e-4)
+    params = model.init(jax.random.PRNGKey(0))
+    model_d = 9216
+    B = 20
+    # monkey-typed: FemnistCNN has no .cfg.d_model; build the report manually
+    from repro.core.split import tree_bits
+    client_bits = tree_bits(params["client"])
+    act_bits = 64 * model_d * B
+    msg_bits = pq.message_bits(B, model_d)
+    # paper's 490x on the activation payload
+    assert act_bits / msg_bits == pytest.approx(490.2, abs=0.5)
+    # SplitFed uplink = |w_c| + B·d (paper §3)
+    splitfed = client_bits + act_bits
+    fedlite = client_bits + msg_bits
+    assert splitfed / fedlite > 9  # paper: "about 10x smaller overall uplink"
+
+
+def test_split_summary_client_fraction():
+    """§5: FEMNIST client-side model ~1.6% of total parameters."""
+    model = FemnistCNN()
+    params = model.init(jax.random.PRNGKey(0))
+    s = split_summary(params)
+    assert 0.01 < s["client_fraction"] < 0.025
+
+
+def test_transformer_comm_report():
+    from repro.configs.base import get_arch
+    from repro.launch.specs import make_model
+    cfg = get_arch("llama3_8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rep = comm_report(model, params, tokens_per_client=128)
+    assert rep["activation_compression_ratio"] > 10
+    assert rep["fedlite_uplink_bits"] < rep["splitfed_uplink_bits"]
+    assert rep["splitfed_uplink_bits"] < rep["fedavg_uplink_bits"]
+
+
+def test_microbatched_step_matches_full_batch():
+    """Gradient accumulation (microbatches=m) == single-batch step (fp32)."""
+    from repro.configs.base import get_arch
+    from repro.data.synthetic import make_lm_batch
+    from repro.launch.specs import make_model
+    cfg = get_arch("llama3_8b", smoke=True)
+    model = make_model(cfg, with_pq=False)
+    opt = sgd(0.1)
+    batch = make_lm_batch(jax.random.PRNGKey(1), 8, 32, cfg.vocab_size)
+    s1 = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
+    s2 = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
+    st1, _ = make_train_step(model, opt, quantize=False, donate=False)(s1, batch)
+    st2, _ = make_train_step(model, opt, quantize=False, microbatches=4,
+                             donate=False)(s2, batch)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_allclose(a, b, atol=2e-6)
+
+
+def test_lambda_schedule_no_recompile_and_effective():
+    """Scheduled λ: step 0 behaves like λ=0, later steps apply correction."""
+    import jax.numpy as jnp
+    from repro.core.quantizer import PQConfig
+    pq = PQConfig(num_subvectors=288, num_clusters=4, kmeans_iters=3)
+    model = FemnistCNN(pq=pq, lam=0.123, client_batch=0)
+    opt = sgd(0.0)  # lr 0: isolate gradient computation
+    sched = lambda step: jnp.where(step < 1, 0.0, 0.5)
+    step = make_train_step(model, opt, lam_schedule=sched, donate=False)
+    state = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
+    batch = _cnn_batch(jax.random.PRNGKey(2), 8)
+
+    # compare client grads at step 0 (λ=0) vs an explicit λ=0 model
+    g_sched = jax.grad(lambda p: model.loss(p, batch, lam_override=sched(
+        jnp.zeros((), jnp.int32)))[0])(state.params)
+    model0 = FemnistCNN(pq=pq, lam=0.0, client_batch=0)
+    g_zero = jax.grad(lambda p: model0.loss(p, batch)[0])(state.params)
+    for a, b in zip(jax.tree.leaves(g_sched), jax.tree.leaves(g_zero)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)

@@ -1,0 +1,87 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+Kernels run in interpret mode on this CPU container (TPU is the target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _mk(n, d, l, dtype, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (n, d)).astype(dtype)
+    c = jax.random.normal(k2, (l, d)).astype(dtype)
+    return x, c
+
+
+SHAPES = [(8, 8, 2), (64, 8, 16), (100, 16, 7), (512, 8, 32), (513, 4, 3),
+          (256, 64, 960)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n,d,l", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kmeans_assign_matches_ref(n, d, l, dtype):
+    x, c = _mk(n, d, l, dtype)
+    lmask = jnp.ones(l, jnp.float32)
+    codes_k, dist_k = ops.kmeans_assign(x, c, interpret=True)
+    codes_r, dist_r = ref.kmeans_assign_ref(x, c, lmask)
+    # argmin ties can differ legitimately: compare achieved distances
+    np.testing.assert_allclose(dist_k, dist_r, rtol=2e-2, atol=1e-3)
+    agree = np.mean(np.array(codes_k) == np.array(codes_r))
+    assert agree > 0.99
+
+
+@pytest.mark.parametrize("n,d,l", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pq_quantize_matches_ref(n, d, l, dtype):
+    x, c = _mk(n, d, l, dtype, seed=3)
+    lmask = jnp.ones(l, jnp.float32)
+    zt_k, resid_k, codes_k = ops.pq_quantize(x, c, interpret=True)
+    zt_r, resid_r, codes_r = ref.pq_quantize_ref(x, c, lmask)
+    assert zt_k.dtype == x.dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(zt_k, np.float32),
+                               np.asarray(zt_r, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(resid_k, resid_r, rtol=tol, atol=tol)
+
+
+def test_fused_residual_identity():
+    """z̃ + residual == x (up to fp32 rounding of the subtract/re-add)."""
+    x, c = _mk(128, 8, 4, jnp.float32, seed=9)
+    zt, resid, _ = ops.pq_quantize(x, c, interpret=True)
+    np.testing.assert_allclose(zt + resid, x, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 130), d=st.sampled_from([2, 4, 8, 16]),
+       l=st.integers(1, 40), seed=st.integers(0, 100))
+def test_property_assign_is_true_argmin(n, d, l, seed):
+    """Property: the kernel's assignment achieves the minimal distance."""
+    x, c = _mk(n, d, l, jnp.float32, seed=seed)
+    codes, dist = ops.kmeans_assign(x, c, interpret=True)
+    xf, cf = np.asarray(x), np.asarray(c)
+    d2 = ((xf[:, None] - cf[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(dist, d2.min(-1), rtol=1e-4, atol=1e-4)
+    picked = d2[np.arange(n), np.asarray(codes)]
+    np.testing.assert_allclose(picked, d2.min(-1), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_as_kmeans_assign_impl():
+    """Full K-means with the Pallas assignment plugged in == jnp version."""
+    from repro.core import kmeans as km
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+    r_jnp = km.kmeans(x, 8, 6)
+    km.set_assign_impl(ops.assign_impl_for_kmeans)
+    try:
+        r_kern = km.kmeans(x, 8, 6)
+    finally:
+        km.set_assign_impl(None)
+    np.testing.assert_allclose(r_jnp.centroids, r_kern.centroids,
+                               rtol=1e-4, atol=1e-5)
+    assert float(jnp.mean((r_jnp.codes == r_kern.codes) * 1.0)) > 0.99

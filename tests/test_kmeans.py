@@ -1,0 +1,71 @@
+"""K-means unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kmeans as km
+
+
+def test_trivial_two_clusters():
+    x = jnp.array([[0.0], [0.1], [0.05], [5.0], [5.1], [5.05]])
+    r = km.kmeans(x, 2, 10)
+    assert float(r.distortion) < 0.01
+    c = np.sort(np.asarray(r.centroids).ravel())
+    np.testing.assert_allclose(c, [0.05, 5.05], atol=0.01)
+
+
+def test_recovers_well_separated_clusters():
+    key = jax.random.PRNGKey(0)
+    centers = jax.random.normal(key, (4, 32)) * 5
+    assign = jax.random.randint(jax.random.PRNGKey(1), (256,), 0, 4)
+    z = centers[assign] + 0.01 * jax.random.normal(jax.random.PRNGKey(2),
+                                                   (256, 32))
+    r = km.kmeans(z, 4, 25)
+    assert float(r.distortion) < 0.05
+
+
+def test_chunking_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(3), (1000, 8))
+    r1 = km.kmeans(x, 8, 5, chunk=1000)
+    r2 = km.kmeans(x, 8, 5, chunk=128)
+    np.testing.assert_allclose(r1.centroids, r2.centroids, rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_array_equal(r1.codes, r2.codes)
+
+
+def test_batched_kmeans_independent_groups():
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 200, 8))
+    cents, codes, dist = km.batched_kmeans(x, 4, 6)
+    assert cents.shape == (3, 4, 8) and codes.shape == (3, 200)
+    for g in range(3):
+        r = km.kmeans(x[g], 4, 6)
+        np.testing.assert_allclose(cents[g], r.centroids, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 200), d=st.integers(1, 16), L=st.integers(1, 8),
+       iters=st.integers(1, 6))
+def test_property_distortion_nonincreasing_in_L(n, d, L, iters):
+    """More clusters never hurt (same seeding scheme): dist(L+1) <= ~dist(L);
+    and distortion is finite/nonnegative."""
+    x = jax.random.normal(jax.random.PRNGKey(n + d), (n, d))
+    r = km.kmeans(x, L, iters)
+    assert float(r.distortion) >= 0 and np.isfinite(float(r.distortion))
+    assert int(r.codes.max()) < L
+    r2 = km.kmeans(x, min(L + 4, n), iters)
+    assert float(r2.distortion) <= float(r.distortion) * 1.05 + 1e-4
+
+
+def test_works_under_jit_grad_context():
+    """kmeans is used inside custom_vjp forwards — must trace cleanly."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (64, 8))
+
+    @jax.jit
+    def f(x):
+        r = km.kmeans(x, 4, 3)
+        return r.distortion
+
+    assert np.isfinite(float(f(x)))

@@ -1,0 +1,38 @@
+"""CLI smoke tests for the production launchers (subprocess, reduced cfgs)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run(args, timeout=420):
+    return subprocess.run([sys.executable, "-m"] + args, env=ENV, cwd=REPO,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_cli_dense(tmp_path):
+    p = _run(["repro.launch.train", "--arch", "llama3_8b", "--smoke",
+              "--steps", "3", "--batch", "2", "--seq", "32",
+              "--ckpt-dir", str(tmp_path), "--ckpt-every", "3"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "uplink compression" in p.stdout
+    assert any(f.startswith("ckpt_") for f in os.listdir(tmp_path))
+
+
+def test_train_cli_audio():
+    p = _run(["repro.launch.train", "--arch", "musicgen_large", "--smoke",
+              "--steps", "2", "--batch", "2", "--seq", "16"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "done" in p.stdout
+
+
+def test_serve_cli_ssm():
+    p = _run(["repro.launch.serve", "--arch", "mamba2_1p3b", "--smoke",
+              "--batch", "2", "--prompt-len", "16", "--gen", "3"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "decode:" in p.stdout

@@ -1,0 +1,229 @@
+"""Model-component tests: SSD scan, attention paths, RoPE, MoE dispatch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.rope import apply_rope, rope_angles
+from repro.models.ssm import ssd_scan
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+def _naive_ssd(xh, dt, A, Bm, Cm):
+    B_, S_, H_, P_ = xh.shape
+    N_ = Bm.shape[-1]
+    h = jnp.zeros((B_, H_, P_, N_))
+    ys = []
+    for t in range(S_):
+        dA = jnp.exp(dt[:, t] * A)
+        h = dA[:, :, None, None] * h + jnp.einsum(
+            "bn,bh,bhp->bhpn", Bm[:, t], dt[:, t], xh[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t], h))
+    return jnp.stack(ys, 1), h
+
+
+@pytest.mark.parametrize("chunk", [6, 8, 24])
+def test_ssd_chunked_equals_naive(chunk):
+    key = jax.random.PRNGKey(0)
+    B, S, H, P, N = 2, 24, 3, 4, 5
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y_ref, h_ref = _naive_ssd(xh, dt, A, Bm, Cm)
+    y, h = ssd_scan(xh, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_initial_state_continuation():
+    """Splitting a sequence in two with state carry == one pass (prefill->
+    decode consistency at the scan level)."""
+    key = jax.random.PRNGKey(1)
+    B, S, H, P, N = 1, 16, 2, 4, 3
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y_all, h_all = ssd_scan(xh, dt, A, Bm, Cm, 8)
+    y1, h1 = ssd_scan(xh[:, :8], dt[:, :8], A, Bm[:, :8], Cm[:, :8], 8)
+    y2, h2 = ssd_scan(xh[:, 8:], dt[:, 8:], A, Bm[:, 8:], Cm[:, 8:], 8, h0=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_all,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h2, h_all, rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_gradients_finite():
+    B, S, H, P, N = 1, 12, 2, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    args = (jax.random.normal(ks[0], (B, S, H, P)),
+            jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))),
+            -jnp.exp(jax.random.normal(ks[2], (H,))),
+            jax.random.normal(ks[3], (B, S, N)),
+            jax.random.normal(ks[4], (B, S, N)))
+    g = jax.grad(lambda *a: jnp.sum(ssd_scan(*a, 4)[0] ** 2), argnums=(0, 1))(
+        *args)
+    for gg in g:
+        assert np.isfinite(np.asarray(gg)).all()
+
+
+# ---------------------------------------------------------------------------
+# attention paths agree
+# ---------------------------------------------------------------------------
+
+def _qkv(key, B, S, H, Kv, hd):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, S, H, hd)),
+            jax.random.normal(ks[1], (B, S, Kv, hd)),
+            jax.random.normal(ks[2], (B, S, Kv, hd)))
+
+
+def test_row_block_chunking_invariance():
+    B, S, H, Kv, hd = 2, 64, 4, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, H, Kv, hd)
+    pos = jnp.arange(S)
+    o1 = attn_mod.row_block_attention(q, k, v, pos, pos, window=None,
+                                      q_chunk=64, scale=0.25)
+    o2 = attn_mod.row_block_attention(q, k, v, pos, pos, window=None,
+                                      q_chunk=16, scale=0.25)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-6)
+
+
+def test_local_window_equals_masked_row_block():
+    """Exact SWA: block-local path == row-block path with window mask."""
+    B, S, H, Kv, hd, W = 1, 96, 2, 1, 8, 16
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, S, H, Kv, hd)
+    pos = jnp.arange(S)
+    o_local = attn_mod.local_window_attention(q, k, v, pos, pos, window=W,
+                                              scale=0.3)
+    o_ref = attn_mod.row_block_attention(q, k, v, pos, pos, window=W,
+                                         q_chunk=S, scale=0.3)
+    np.testing.assert_allclose(o_local, o_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_matches_last_row():
+    B, S, H, Kv, hd = 2, 32, 4, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(2), B, S, H, Kv, hd)
+    pos = jnp.arange(S)
+    full = attn_mod.row_block_attention(q, k, v, pos, pos, window=None,
+                                        q_chunk=S, scale=0.25)
+    dec = attn_mod.decode_attention(q[:, -1:], k, v, pos, S - 1, window=None,
+                                    scale=0.25)
+    np.testing.assert_allclose(dec[:, 0], full[:, -1], rtol=1e-5, atol=1e-6)
+
+
+def test_causality():
+    """Perturbing future tokens never changes past outputs."""
+    B, S, H, Kv, hd = 1, 16, 2, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(3), B, S, H, Kv, hd)
+    pos = jnp.arange(S)
+    o1 = attn_mod.row_block_attention(q, k, v, pos, pos, window=None,
+                                      q_chunk=8, scale=1.0)
+    k2 = k.at[:, -1].add(100.0)
+    v2 = v.at[:, -1].add(100.0)
+    o2 = attn_mod.row_block_attention(q, k2, v2, pos, pos, window=None,
+                                      q_chunk=8, scale=1.0)
+    np.testing.assert_allclose(o1[:, :-1], o2[:, :-1], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm_and_relativity():
+    B, S, H, hd = 1, 8, 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    ang = rope_angles(pos, hd, 10_000.0)
+    y = apply_rope(x, ang)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # shift invariance of inner products: <R_m q, R_n k> == f(m-n)
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, hd))
+    def score(m, n):
+        am = rope_angles(jnp.full((1, 1), m), hd, 10_000.0)
+        an = rope_angles(jnp.full((1, 1), n), hd, 10_000.0)
+        return float(jnp.sum(apply_rope(q, am) * apply_rope(k, an)))
+    assert score(3, 1) == pytest.approx(score(7, 5), rel=1e-4)
+
+
+def test_mrope_degenerates_to_rope_on_text():
+    """(t,t,t) positions => M-RoPE == RoPE."""
+    hd = 32
+    pos1 = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    pos3 = jnp.broadcast_to(pos1, (3, 1, 8))
+    a1 = rope_angles(pos1, hd, 1e4)
+    a3 = rope_angles(pos3, hd, 1e4, mrope_sections=(4, 6, 6))
+    np.testing.assert_allclose(a1, a3, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(**kw):
+    base = dict(name="m", family="moe", num_layers=2, d_model=32,
+                vocab_size=64, num_heads=2, num_kv_heads=1, head_dim=16,
+                d_ff=48, num_experts=4, experts_per_token=2, vocab_pad_to=16,
+                cut_periods=1)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_moe_equals_dense_expert_computation():
+    """With capacity ample, the scatter dispatch must equal running each
+    token through its top-k experts densely."""
+    cfg = _moe_cfg(capacity_factor=4.0)
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    y, _ = moe_mod.apply_moe(p, x, cfg)
+
+    xf = x.reshape(-1, 32)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, 2)
+    w = w / w.sum(-1, keepdims=True)
+    def expert(e, v):
+        return (jax.nn.silu(v @ p["we_gate"][e]) * (v @ p["we_up"][e])) @ \
+            p["we_down"][e]
+    y_ref = jnp.zeros_like(xf)
+    for i in range(xf.shape[0]):
+        for j in range(2):
+            y_ref = y_ref.at[i].add(w[i, j] * expert(int(idx[i, j]), xf[i]))
+    np.testing.assert_allclose(y.reshape(-1, 32), y_ref, rtol=2e-4, atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity must drop overflow tokens (outputs partially zero), and
+    never NaN."""
+    cfg = _moe_cfg(capacity_factor=0.05)
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32))
+    y, aux = moe_mod.apply_moe(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    # some tokens got no expert -> exact zero rows exist
+    zero_rows = np.mean(np.abs(np.asarray(y).reshape(-1, 32)).sum(-1) < 1e-9)
+    assert zero_rows > 0.1
+
+
+def test_moe_aux_loss_uniform_router_is_one_times_weight():
+    """A perfectly uniform router gives aux = E * (1/E · k/E) * E·w = k·w."""
+    cfg = _moe_cfg()
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform routing
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    _, aux = moe_mod.apply_moe(p, x, cfg)
+    expected = cfg.experts_per_token * cfg.router_aux_weight
+    assert float(aux) == pytest.approx(expected, rel=0.05)

@@ -1,0 +1,115 @@
+"""Unit + property tests for the grouped product quantizer (paper §4.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizer import (PQConfig, quantization_error, quantize,
+                                  vanilla_kmeans_config, vanilla_pq_config)
+
+
+def test_compression_ratio_490x():
+    """Paper §5 worked example: q=1152, L=2, d=9216, B=20, φ=64 -> 490×."""
+    cfg = PQConfig(num_subvectors=1152, num_clusters=2)
+    assert cfg.compression_ratio(20, 9216) == pytest.approx(490.2, abs=0.5)
+
+
+def test_message_bits_formula():
+    """codebook φ·d·R·L/q + codes B·q·log2(L) (paper §4.1)."""
+    cfg = PQConfig(num_subvectors=288, num_clusters=8, num_groups=4,
+                   phi_bits=64)
+    d, n = 9216, 20
+    assert cfg.codebook_bits(d) == 64 * d * 4 * 8 // 288
+    assert cfg.codes_bits(n) == n * 288 * 3
+    assert cfg.message_bits(n, d) == cfg.codebook_bits(d) + cfg.codes_bits(n)
+
+
+def test_special_cases_match_paper_baselines():
+    km = vanilla_kmeans_config(8)
+    assert km.q == 1 and km.r == 1
+    pq = vanilla_pq_config(16, 8)
+    assert pq.q == pq.r == 16
+
+
+def test_quantize_shapes_and_reconstruction():
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (64, 48))
+    cfg = PQConfig(num_subvectors=6, num_clusters=8, num_groups=2,
+                   kmeans_iters=10)
+    qb = quantize(z, cfg)
+    assert qb.dequantized.shape == z.shape
+    assert qb.codes.shape == (2, 3 * 64)
+    assert qb.codebooks.shape == (2, 8, 8)
+    assert not jnp.isnan(qb.dequantized).any()
+
+
+def test_exact_reconstruction_when_clusters_cover_data():
+    """L >= distinct subvectors => zero quantization error."""
+    protos = jnp.asarray(np.random.RandomState(0).randn(4, 32).astype(np.float32))
+    idx = np.random.RandomState(1).randint(0, 4, size=128)
+    z = protos[idx]
+    cfg = PQConfig(num_subvectors=4, num_clusters=16, kmeans_iters=20)
+    err = quantization_error(z, cfg)
+    assert float(err) < 1e-3
+
+
+def test_grouping_tradeoff_matches_fig3():
+    """Fig. 3's orderings: (a) more subvectors (q up, R=q) lowers error at
+    equal L; (b) grouping (R=1) hugely increases compression at equal q."""
+    key = jax.random.PRNGKey(42)
+    z = jax.random.normal(key, (128, 64)) + \
+        jnp.repeat(jax.random.normal(jax.random.PRNGKey(1), (8, 64)) * 2.0,
+                   16, axis=0)
+    L = 4
+    err_kmeans = quantization_error(z, vanilla_kmeans_config(L, kmeans_iters=15))
+    err_pq = quantization_error(z, vanilla_pq_config(8, L, kmeans_iters=15))
+    assert float(err_pq) < float(err_kmeans)  # subvector division helps
+
+    cfg_grouped = PQConfig(num_subvectors=8, num_clusters=L, num_groups=1)
+    cfg_vanilla = vanilla_pq_config(8, L)
+    n, d = z.shape
+    assert cfg_grouped.compression_ratio(n, d) > \
+        4 * cfg_vanilla.compression_ratio(n, d)  # grouping: codebook /8
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        PQConfig(num_subvectors=6, num_clusters=4, num_groups=4)  # q % R != 0
+    cfg = PQConfig(num_subvectors=5, num_clusters=4)
+    with pytest.raises(ValueError):
+        cfg.subvector_dim(16)  # d % q != 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 64),
+    dsub=st.integers(1, 8),
+    q=st.sampled_from([1, 2, 4, 8]),
+    r_div=st.sampled_from([1, 2, 4]),
+    L=st.integers(2, 8),
+)
+def test_property_quantizer_invariants(n, dsub, q, r_div, L):
+    """Invariants: shape preservation, codes in range, error >= 0 and never
+    worse than quantizing to the single mean (L=1 upper bound)."""
+    r = max(q // r_div, 1)
+    d = q * dsub
+    z = jax.random.normal(jax.random.PRNGKey(n * 7 + q), (n, d))
+    cfg = PQConfig(num_subvectors=q, num_clusters=L, num_groups=r,
+                   kmeans_iters=4)
+    qb = quantize(z, cfg)
+    assert qb.dequantized.shape == (n, d)
+    assert int(qb.codes.max()) < L and int(qb.codes.min()) >= 0
+    err_L = float(jnp.mean(jnp.sum((z - qb.dequantized) ** 2, -1)))
+    cfg1 = PQConfig(num_subvectors=q, num_clusters=1, num_groups=r,
+                    kmeans_iters=4)
+    err_1 = float(jnp.mean(jnp.sum((z - quantize(z, cfg1).dequantized) ** 2, -1)))
+    assert err_L <= err_1 + 1e-4
+
+
+def test_quantize_under_jit_and_vmap():
+    cfg = PQConfig(num_subvectors=4, num_clusters=4, kmeans_iters=3)
+    z = jax.random.normal(jax.random.PRNGKey(0), (8, 16, 32))
+    out = jax.jit(jax.vmap(lambda zi: quantize(zi, cfg).dequantized))(z)
+    assert out.shape == z.shape

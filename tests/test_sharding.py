@@ -1,0 +1,99 @@
+"""Sharding rules + context tests (single CPU device: no-op behavior; spec
+construction is pure and testable without a multi-device mesh)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding import (current_mesh, param_specs, set_mesh, shard,
+                            spec_for_param, use_mesh)
+from repro.sharding.ctx import filter_spec, shard_residual
+
+
+def _fake_mesh(data=4, model=2):
+    # a mesh OBJECT for spec computation only (no constraint application)
+    devs = np.array(jax.devices() * (data * model))[:data * model]
+    return Mesh(devs.reshape(data, model), ("data", "model"))
+
+
+MESH = _fake_mesh()
+
+
+def test_spec_rules_basic():
+    assert spec_for_param("client/layers/p0/mixer/wq", (1, 512, 256), MESH) \
+        == P(None, "data", "model")
+    assert spec_for_param("server/layers/p0/mixer/wo", (1, 256, 512), MESH) \
+        == P(None, "model", "data")
+    assert spec_for_param("client/tok_embed", (50304, 512), MESH) \
+        == P(None, "data")
+    assert spec_for_param("server/head", (512, 50304), MESH) \
+        == P("data", "model")
+    assert spec_for_param("server/layers/p0/ln1/scale", (1, 512), MESH) \
+        == P()  # replicated (P() == all-None)
+
+
+def test_expert_rule_divisibility():
+    # E=4 divides model=2 -> expert parallel
+    assert spec_for_param("s/layers/p0/ffn/we_up", (1, 4, 256, 512), MESH) \
+        == P(None, "model", "data", None)
+    # E=3 does not -> Megatron TP inside each expert (+ FSDP over data)
+    assert spec_for_param("s/layers/p0/ffn/we_up", (1, 3, 256, 512), MESH) \
+        == P(None, None, "data", "model")
+    assert spec_for_param("s/layers/p0/ffn/we_down", (1, 3, 512, 256), MESH) \
+        == P(None, None, "model", "data")
+
+
+def test_divisibility_guard_drops_axis():
+    # dim 6 not divisible by data=4 -> replicated on that dim
+    spec = spec_for_param("x/head", (6, 50304), MESH)
+    assert spec == P(None, "model")
+
+
+def test_filter_spec_drops_missing_axes():
+    assert filter_spec(P(("pod", "data"), None), MESH) == P("data", None)
+    assert filter_spec(P("pod", "model"), MESH) == P(None, "model")
+
+
+def test_param_specs_walks_opt_state_shapes():
+    tree = {"m": {"client": {"layers": {"p0": {"mixer": {
+        "wq": jnp.zeros((2, 512, 256))}}}}},
+        "step": jnp.zeros(())}
+    specs = param_specs(tree, MESH)
+    assert specs["m"]["client"]["layers"]["p0"]["mixer"]["wq"] == \
+        P(None, "data", "model")
+    assert specs["step"] == P()
+
+
+def test_shard_noop_without_mesh():
+    assert current_mesh() is None
+    x = jnp.ones((4, 4))
+    y = shard(x, "data", None)
+    np.testing.assert_array_equal(x, y)
+    z = shard_residual(jnp.ones((2, 3, 4)))
+    assert z.shape == (2, 3, 4)
+
+
+def test_use_mesh_restores():
+    real = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    with use_mesh(real) as m:
+        assert current_mesh() is real
+    assert current_mesh() is None
+
+
+def test_inference_spec_folds_data_into_tp():
+    from repro.sharding.rules import inference_spec
+    # column weight (512, 256): data on dim0 folds into dim1's TP group
+    sp = inference_spec(P("data", "model"), (512, 256), MESH)
+    assert sp == P(None, ("model", "data"))
+    # row weight
+    sp = inference_spec(P("model", "data"), (512, 256), MESH)
+    assert sp == P(("model", "data"), None)
+    # non-divisible merged axis -> unchanged
+    sp = inference_spec(P("data", "model"), (512, 6), MESH)
+    assert sp == P("data", "model")
+    # no model dim -> unchanged (e.g. embeddings)
+    sp = inference_spec(P(None, "data"), (50304, 512), MESH)
+    assert sp == P(None, "data")

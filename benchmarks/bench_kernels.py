@@ -10,7 +10,49 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro.core import kmeans as km
+from repro.core.quantizer import PQConfig, quantize
 from repro.kernels import ops, ref
+
+
+def bench_encode_backends(rows):
+    """End-to-end grouped-PQ encode, jnp vs fused pallas, on the paper's
+    FEMNIST cut shape: B=8 examples x d=9216, q=1152 -> one group of
+    N=8*1152=9216 subvector rows of dim 8.
+
+    Wall-clock rows time the two *current* backends — both are single-pass
+    encodes (the jnp scan body does assign+gather+subtract per chunk, which
+    XLA fuses). Off-TPU the pallas row is interpret mode (correctness
+    substrate); the wall-clock comparison is only meaningful on TPU.
+
+    The traffic-model row is the structural claim of the registry refactor:
+    the seed did the encode as separate sweeps (assign pass inside kmeans,
+    centroid-gather write, then the correction VJP re-read X and z̃ to form
+    the residual — 3 reads + 2 writes per element) where the fused encode
+    does 1 read + 2 writes. That is analytic, not measured here.
+    """
+    B, d, q, L = 8, 9216, 1152, 16
+    z = jax.random.normal(jax.random.PRNGKey(3), (B, d))
+    n_rows, dsub = B * q, d // q
+    for backend in ("jnp", "pallas"):
+        cfg = PQConfig(num_subvectors=q, num_clusters=L, kmeans_iters=4,
+                       backend=backend)
+        us = time_call(jax.jit(lambda zz, c=cfg: quantize(zz, c).dequantized),
+                       z, iters=1 if backend == "pallas" else 2, warmup=1)
+        rows.append({
+            "name": f"pq_encode_femnist_cut_{backend}_N{n_rows}_D{dsub}_L{L}",
+            "us_per_call": us,
+            "note": ("single-pass fused kernel (interpret off-TPU)"
+                     if backend == "pallas" else "single-pass XLA-fused scan"),
+        })
+    elem = n_rows * dsub * 4
+    rows.append({
+        "name": "pq_encode_femnist_cut_traffic_model",
+        "us_per_call": 0.0,
+        "fused_encode_bytes": 3 * elem,       # 1 read + 2 writes
+        "seed_separate_sweeps_bytes": 5 * elem,  # 3 reads + 2 writes
+        "note": "analytic: fused encode vs the seed's assign/gather/"
+                "residual-recompute structure",
+    })
 
 
 def run(fast: bool = True):
@@ -38,6 +80,8 @@ def run(fast: bool = True):
             lambda a, b: km.kmeans(a, 16, 4).distortion), x, jnp.zeros(()),
             iters=2)
         rows.append({"name": f"kmeans_full_n{n}_d{d}", "us_per_call": us_f})
+
+    bench_encode_backends(rows)
 
     # flash-attention kernel parity check (interpret mode; TPU is the target)
     import math

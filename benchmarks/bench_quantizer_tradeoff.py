@@ -7,9 +7,15 @@ activations (d=9216, the paper's exact sizes) is quantized under each scheme.
 
 Claim validated: the grouped quantizer (R=1, varying q/L) dominates the
 error-vs-ratio frontier of both baselines (green/red-line ordering of Fig 3).
+
+Each row carries a ``backend`` column (jnp | pallas): the same scheme is also
+measured through the fused Pallas encode path so the trade-off sweep doubles
+as a backend parity/latency comparison (see core/quantizer.py docstring).
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -40,15 +46,18 @@ def run(fast: bool = True):
     iters = 6 if fast else 15
     rows = []
 
-    def record(scheme, cfg):
+    def record(scheme, cfg, backend="jnp"):
+        cfg = dataclasses.replace(cfg, backend=backend)
         err = float(quantization_error(z, cfg))
         us = time_call(
-            jax.jit(lambda zz: quantization_error(zz, cfg)), z, iters=2)
+            jax.jit(lambda zz: quantization_error(zz, cfg)), z,
+            iters=1 if backend == "pallas" else 2)
         rows.append({
-            "name": f"{scheme}_q{cfg.q}_L{cfg.l}_R{cfg.r}",
+            "name": f"{scheme}_q{cfg.q}_L{cfg.l}_R{cfg.r}_{backend}",
             "us_per_call": us,
             "rel_error": round(err, 4),
             "compression_ratio": round(cfg.compression_ratio(B, d), 1),
+            "backend": backend,
         })
         return err
 
@@ -63,6 +72,13 @@ def run(fast: bool = True):
     for L in ([128, 512] if fast else [128, 256, 512, 1024]):
         record("grouped", PQConfig(num_subvectors=1152, num_clusters=L,
                                    num_groups=1, kmeans_iters=iters))
+
+    # backend dimension: identical scheme through the fused-pallas encode
+    # (interpret off-TPU — parity datapoint; real speed comparison on TPU)
+    for L in [8] if fast else [8, 32]:
+        record("grouped", PQConfig(num_subvectors=1152, num_clusters=L,
+                                   num_groups=1, kmeans_iters=iters),
+               backend="pallas")
 
     # frontier dominance (Fig. 3's qualitative claim): for every baseline
     # point there is a grouped point that is at least as good on BOTH axes

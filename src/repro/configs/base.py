@@ -65,6 +65,7 @@ class ArchConfig:
     vocab_pad_to: int = 256
     # FedLite split --------------------------------------------------------
     cut_periods: int = 1              # client keeps embed + this many periods
+    pq_backend: str = "auto"          # quantizer backend: jnp | pallas | auto
     # numerics / memory -----------------------------------------------------
     dtype: str = "float32"            # activation/compute dtype
     param_dtype: str = "float32"

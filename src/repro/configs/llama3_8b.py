@@ -9,7 +9,8 @@ CONFIG = ArchConfig(
     num_heads=32, num_kv_heads=8, head_dim=128,
     d_ff=14336, mlp_type="swiglu",
     rope_theta=500_000.0,
-    cut_periods=4, dtype="bfloat16", param_dtype="bfloat16", optimizer="adam",
+    cut_periods=4, pq_backend="auto",  # fused Pallas PQ encode on TPU
+    dtype="bfloat16", param_dtype="bfloat16", optimizer="adam",
     source="arXiv:2407.21783",
 )
 

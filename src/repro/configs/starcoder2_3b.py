@@ -9,7 +9,8 @@ CONFIG = ArchConfig(
     num_heads=24, num_kv_heads=2, head_dim=128,
     d_ff=12288, mlp_type="gelu", use_bias=True, norm_type="layernorm",
     rope_theta=999_999.0, sliding_window=4096,
-    cut_periods=4, dtype="bfloat16", param_dtype="bfloat16", optimizer="adam",
+    cut_periods=4, pq_backend="auto",  # fused Pallas PQ encode on TPU
+    dtype="bfloat16", param_dtype="bfloat16", optimizer="adam",
     source="arXiv:2402.19173",
 )
 

@@ -32,14 +32,18 @@ def quantize_with_correction(z: jax.Array, lam, cfg: PQConfig) -> jax.Array:
 
     ``lam`` may be a Python float or a traced scalar — scheduled λ (e.g. the
     beyond-paper warm-up, see core/fedlite.py) works without recompilation.
+
+    K-means runs exactly once per forward+backward: the forward emits the
+    residual fused with the encode (``QuantizedBatch.residual``) and the VJP
+    reuses it — no re-quantize, no extra z − z̃ sweep.
     """
     return quantize(z, cfg).dequantized
 
 
 def _fwd(z, lam, cfg):
-    z_tilde = quantize(z, cfg).dequantized
-    # residual (z − z̃) is all the backward pass needs
-    return z_tilde, (z - z_tilde, jnp.asarray(lam, jnp.float32))
+    qb = quantize(z, cfg)
+    # the fused encode already produced the residual the backward pass needs
+    return qb.dequantized, (qb.residual, jnp.asarray(lam, jnp.float32))
 
 
 def _bwd(cfg, res, g):
@@ -50,6 +54,32 @@ def _bwd(cfg, res, g):
 
 
 quantize_with_correction.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def quantize_with_correction_stats(z: jax.Array, lam, cfg: PQConfig):
+    """Like ``quantize_with_correction`` but also returns the quantizer's
+    distortion (mean ‖z − z̃‖² per vector) as a second, non-differentiable
+    output — so metric consumers reuse the fused encode's residual instead
+    of re-deriving z − z̃ with another sweep over the activations."""
+    qb = quantize(z, cfg)
+    return qb.dequantized, qb.distortion
+
+
+def _sfwd(z, lam, cfg):
+    qb = quantize(z, cfg)
+    return ((qb.dequantized, qb.distortion),
+            (qb.residual, jnp.asarray(lam, jnp.float32)))
+
+
+def _sbwd(cfg, res, g):
+    gz, _ = g  # the distortion output is a metric: its cotangent is dropped
+    residual, lam = res
+    return (gz + lam.astype(gz.dtype) * residual.astype(gz.dtype),
+            jnp.zeros_like(lam))
+
+
+quantize_with_correction_stats.defvjp(_sfwd, _sbwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
@@ -82,12 +112,10 @@ def quantize_with_stats(z: jax.Array, lam: float, cfg: PQConfig,
     """Like quantize_with_correction but also returns (non-differentiable)
     quantization stats for logging: distortion and message bits."""
     del key  # codebook init is deterministic inside the step
-    z_tilde = quantize_with_correction(z, lam, cfg)
-    resid = jax.lax.stop_gradient(z - z_tilde).astype(jnp.float32)
-    per_vec_sqerr = jnp.mean(jnp.sum(resid * resid, axis=-1))
+    z_tilde, distortion = quantize_with_correction_stats(z, lam, cfg)
     n = int(z.size // z.shape[-1])
     stats = {
-        "pq_distortion": per_vec_sqerr,
+        "pq_distortion": distortion,
         "pq_message_bits": cfg.message_bits(n, z.shape[-1]),
         "pq_compression_ratio": cfg.compression_ratio(n, z.shape[-1]),
     }

@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import kmeans as _km
 from repro.core.quantizer import PQConfig
 from repro.core.split import tree_bits
 from repro.models.transformer import TransformerLM
@@ -146,6 +147,7 @@ def comm_report(model: TransformerLM, params, tokens_per_client: int,
     report = {
         "activation_dim": d,
         "tokens_per_client": tokens_per_client,
+        "pq_backend": None if pq is None else _km.resolve_backend(pq.backend),
         "fedavg_uplink_bits": float(total_bits),
         "splitfed_uplink_bits": float(client_bits + act_bits),
         "splitfed_activation_bits": float(act_bits),

@@ -7,15 +7,42 @@ fixed-iteration-count program: ``lax.fori_loop`` over Lloyd iterations,
 materialize an (N, L) tensor for the full batch at once.
 
 Distance computation is expressed as ``‖x‖² − 2·x·Cᵀ + ‖c‖²`` so the inner
-product rides the MXU on TPU; the Pallas kernel in
-``repro.kernels.kmeans_assign`` implements the same contraction with explicit
-VMEM tiling and can be swapped in via ``set_assign_impl``.
+product rides the MXU on TPU.
+
+Backend registry
+----------------
+The assignment / encode primitives are pluggable via a named registry:
+
+  * ``"jnp"``    — pure-jnp ops (XLA fusion; the CPU/testing substrate).
+  * ``"pallas"`` — the Pallas kernels in ``repro.kernels``: compiled Mosaic
+                   on TPU, interpret mode elsewhere (parity validation).
+  * ``"auto"``   — ``"pallas"`` when running on a TPU backend, ``"jnp"``
+                   otherwise (interpret-mode Pallas is for correctness, not
+                   speed, so it is never auto-selected off-TPU).
+
+A backend bundles two functions:
+
+  * ``assign(x, cents) -> codes`` — nearest-centroid assignment, used inside
+    the Lloyd iterations (``x`` is a (chunk, D) tile).
+  * ``encode(x, cents, chunk) -> (z̃, residual, codes)`` — the fused final
+    pass: assignment + centroid gather + residual in one sweep. The Pallas
+    implementation (``repro.kernels.pq_quantize``) does one HBM read and two
+    writes per element instead of the three separate sweeps the naive path
+    takes.
+
+Numerics: the Lloyd centroid update accumulates *deviations from the current
+centroid* (``Σ onehot·(x − c_old)``, then ``c_new = c_old + Σ/count``) rather
+than raw coordinate sums. This is algebraically the same mean but loses far
+less precision in fp32 — in particular, a cluster whose members all equal its
+centroid gets an exactly-zero update, so exact-reconstruction inputs yield an
+exactly-zero quantization residual (required by the FedLite → SplitFed
+gradient-equivalence property, tests/test_fedlite.py).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +54,32 @@ class KMeansResult(NamedTuple):
     distortion: jax.Array  # () mean squared quantization error per point
 
 
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+class Backend(NamedTuple):
+    """A quantizer compute backend (see module docstring)."""
+    name: str
+    assign: Callable[[jax.Array, jax.Array], jax.Array]
+    encode: Callable[[jax.Array, jax.Array, int],
+                     Tuple[jax.Array, jax.Array, jax.Array]]
+    # (x, cents, chunk) -> (codes, sqdist); None = derive from encode
+    assign_dist: Optional[Callable] = None
+
+
+def _pad_chunks(x: jax.Array, chunk: int):
+    """Zero-pad rows to a multiple of ``chunk`` and split into scan tiles.
+
+    Returns ((n_chunks, chunk, D) tiles, real row count n, pad count)."""
+    n, d = x.shape
+    chunk = min(chunk, max(n, 1))
+    pad = (-n) % chunk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)])
+    return x.reshape(-1, chunk, d), n, pad
+
+
 def _assign_jnp(x: jax.Array, centroids: jax.Array) -> jax.Array:
     """codes[i] = argmin_l ‖x_i − c_l‖².  x: (n, D), centroids: (L, D)."""
     # ‖x‖² is constant across l — only the cross term and ‖c‖² matter.
@@ -34,18 +87,89 @@ def _assign_jnp(x: jax.Array, centroids: jax.Array) -> jax.Array:
     return jnp.argmax(scores, axis=-1).astype(jnp.int32)
 
 
-# Swappable assignment implementation (pure-jnp default; Pallas kernel opt-in).
-_ASSIGN: Callable[[jax.Array, jax.Array], jax.Array] = _assign_jnp
+def _encode_jnp(x: jax.Array, centroids: jax.Array, chunk: int):
+    """Assignment + gather + residual, chunked so scores stay (chunk, L)."""
+    d = x.shape[1]
+    xc, n, _ = _pad_chunks(x, chunk)
+
+    def body(_, xb):
+        codes = _assign_jnp(xb, centroids)
+        zt = centroids[codes]
+        return None, (zt, xb - zt, codes)
+
+    _, (zt, resid, codes) = jax.lax.scan(body, None, xc)
+    return (zt.reshape(-1, d)[:n], resid.reshape(-1, d)[:n],
+            codes.reshape(-1)[:n])
 
 
-def set_assign_impl(fn: Optional[Callable]) -> None:
-    global _ASSIGN
-    _ASSIGN = fn if fn is not None else _assign_jnp
+def _assign_dist_jnp(x: jax.Array, centroids: jax.Array, chunk: int):
+    """codes + per-point squared distances, without materializing z̃."""
+    xc, n, _ = _pad_chunks(x, chunk)
+
+    def body(_, xb):
+        codes = _assign_jnp(xb, centroids)
+        err = jnp.sum(jnp.square(xb - centroids[codes]), axis=-1)
+        return None, (codes, err)
+
+    _, (codes, err) = jax.lax.scan(body, None, xc)
+    return codes.reshape(-1)[:n], err.reshape(-1)[:n]
 
 
-def get_assign_impl() -> Callable:
-    return _ASSIGN
+def _assign_pallas(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    from repro.kernels import ops  # deferred: kernels must stay optional here
+    codes, _ = ops.kmeans_assign(x, centroids)
+    return codes
 
+
+def _encode_pallas(x: jax.Array, centroids: jax.Array, chunk: int):
+    from repro.kernels import ops
+    block_n = min(512, max(chunk, 8))
+    zt, resid, codes = ops.pq_quantize(x, centroids, block_n=block_n)
+    return zt.astype(jnp.float32), resid, codes
+
+
+def _assign_dist_pallas(x: jax.Array, centroids: jax.Array, chunk: int):
+    # the assign kernel already emits distances — no z̃ HBM write
+    from repro.kernels import ops
+    return ops.kmeans_assign(x, centroids, block_n=min(512, max(chunk, 8)))
+
+
+_REGISTRY: Dict[str, Backend] = {
+    "jnp": Backend("jnp", _assign_jnp, _encode_jnp, _assign_dist_jnp),
+    "pallas": Backend("pallas", _assign_pallas, _encode_pallas,
+                      _assign_dist_pallas),
+}
+
+
+def register_backend(backend: Backend) -> None:
+    """Register (or replace) a named backend."""
+    _REGISTRY[backend.name] = backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(_REGISTRY) + ("auto",)
+
+
+def resolve_backend(name: str = "auto") -> str:
+    """Resolve "auto" to a concrete registered backend name."""
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return name
+
+
+def get_backend(name: str = "auto") -> Backend:
+    resolved = resolve_backend(name)
+    try:
+        return _REGISTRY[resolved]
+    except KeyError:
+        raise ValueError(
+            f"unknown quantizer backend {name!r} (resolved {resolved!r}); "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Lloyd iterations
+# ---------------------------------------------------------------------------
 
 def _init_centroids(x: jax.Array, num_clusters: int,
                     key: Optional[jax.Array]) -> jax.Array:
@@ -90,8 +214,54 @@ def _init_centroids(x: jax.Array, num_clusters: int,
     return cents
 
 
+def lloyd(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
+          key: Optional[jax.Array] = None, chunk: int = 4096,
+          backend: str = "jnp") -> jax.Array:
+    """Lloyd iterations only: returns fp32 centroids (L, D), no final assign.
+
+    The centroid update is accumulated as deviations from the current
+    centroids (see module docstring) so clusters that exactly cover their
+    points are fixed points of the update in fp32, not just in exact
+    arithmetic.
+    """
+    x = x.astype(jnp.float32)
+    n, d = x.shape
+    L = num_clusters
+    assign = get_backend(backend).assign
+
+    # pad N up to a multiple of chunk; padded rows carry zero weight
+    xc, n, n_pad = _pad_chunks(x, chunk)
+    weights = jnp.concatenate(
+        [jnp.ones((n,), jnp.float32), jnp.zeros((n_pad,), jnp.float32)])
+    wc = weights.reshape(xc.shape[0], xc.shape[1])
+
+    cents0 = _init_centroids(x, L, key)
+
+    def lloyd_iter(_, cents):
+        def acc(carry, inp):
+            dsums, counts = carry
+            xb, wb = inp
+            codes = assign(xb, cents)
+            onehot = jax.nn.one_hot(codes, L, dtype=jnp.float32) * wb[:, None]
+            # deviation accumulation: exact-cover clusters contribute 0
+            delta = xb - cents[codes]
+            return (dsums + onehot.T @ delta,
+                    counts + onehot.sum(axis=0)), None
+
+        (dsums, counts), _ = jax.lax.scan(
+            acc, (jnp.zeros((L, d), jnp.float32), jnp.zeros((L,), jnp.float32)),
+            (xc, wc))
+        # empty clusters keep their previous centroid
+        return cents + jnp.where(counts[:, None] > 0,
+                                 dsums / jnp.maximum(counts[:, None], 1.0),
+                                 0.0)
+
+    return jax.lax.fori_loop(0, num_iters, lloyd_iter, cents0)
+
+
 def kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
-           key: Optional[jax.Array] = None, chunk: int = 4096) -> KMeansResult:
+           key: Optional[jax.Array] = None, chunk: int = 4096,
+           backend: str = "jnp") -> KMeansResult:
     """Lloyd's algorithm with a fixed iteration count.
 
     Args:
@@ -100,54 +270,22 @@ def kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
       num_iters: Lloyd iterations (static).
       key: optional PRNG key for random init; None = deterministic strided.
       chunk: points per scan step for the assign/accumulate pass.
+      backend: "jnp" | "pallas" | "auto" (see module docstring).
     Returns:
       KMeansResult(centroids (L, D) in x.dtype, codes (N,) int32, distortion).
     """
     in_dtype = x.dtype
-    x = x.astype(jnp.float32)
-    n, d = x.shape
-    L = num_clusters
-
-    # pad N up to a multiple of chunk; padded rows carry zero weight
-    chunk = min(chunk, max(n, 1))
-    n_pad = (-n) % chunk
-    if n_pad:
-        xp = jnp.concatenate([x, jnp.zeros((n_pad, d), jnp.float32)], axis=0)
-    else:
-        xp = x
-    weights = jnp.concatenate(
-        [jnp.ones((n,), jnp.float32), jnp.zeros((n_pad,), jnp.float32)])
-    n_chunks = xp.shape[0] // chunk
-    xc = xp.reshape(n_chunks, chunk, d)
-    wc = weights.reshape(n_chunks, chunk)
-
-    cents0 = _init_centroids(x, L, key)
-
-    def lloyd_iter(_, cents):
-        def acc(carry, inp):
-            sums, counts = carry
-            xb, wb = inp
-            codes = _ASSIGN(xb, cents)
-            onehot = jax.nn.one_hot(codes, L, dtype=jnp.float32) * wb[:, None]
-            return (sums + onehot.T @ xb, counts + onehot.sum(axis=0)), None
-
-        (sums, counts), _ = jax.lax.scan(
-            acc, (jnp.zeros((L, d), jnp.float32), jnp.zeros((L,), jnp.float32)),
-            (xc, wc))
-        # empty clusters keep their previous centroid
-        return jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), cents)
-
-    cents = jax.lax.fori_loop(0, num_iters, lloyd_iter, cents0)
-
-    def assign_chunk(carry, inp):
-        xb, wb = inp
-        codes = _ASSIGN(xb, cents)
-        err = jnp.sum(jnp.square(xb - cents[codes]), axis=-1) * wb
-        return carry + err.sum(), codes
-
-    sq_err, codes = jax.lax.scan(assign_chunk, jnp.zeros((), jnp.float32), (xc, wc))
-    codes = codes.reshape(-1)[:n]
-    distortion = sq_err / jnp.maximum(n, 1)
+    xf = x.astype(jnp.float32)
+    n = xf.shape[0]
+    cents = lloyd(xf, num_clusters, num_iters, key=key, chunk=chunk,
+                  backend=backend)
+    b = get_backend(backend)
+    if b.assign_dist is not None:
+        codes, sqdist = b.assign_dist(xf, cents, chunk)
+    else:  # registered backend without a distance pass: derive from encode
+        _, resid, codes = b.encode(xf, cents, chunk)
+        sqdist = jnp.sum(resid * resid, axis=-1)
+    distortion = jnp.sum(sqdist) / jnp.maximum(n, 1)
     return KMeansResult(cents.astype(in_dtype), codes, distortion)
 
 
@@ -156,12 +294,25 @@ def kmeans_jit(x, num_clusters, num_iters):
     return kmeans(x, num_clusters, num_iters)
 
 
-def batched_kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
-                   key: Optional[jax.Array] = None, chunk: int = 4096):
-    """vmapped kmeans over a leading group axis.  x: (G, N, D)."""
-    keys = None if key is None else jax.random.split(key, x.shape[0])
-    fn = functools.partial(kmeans, num_clusters=num_clusters,
-                           num_iters=num_iters, chunk=chunk)
-    if keys is None:
+def _vmap_groups(per_group_fn, x, key, **kw):
+    fn = functools.partial(per_group_fn, **kw)
+    if key is None:
         return jax.vmap(lambda g: fn(g))(x)
+    keys = jax.random.split(key, x.shape[0])
     return jax.vmap(lambda g, k: fn(g, key=k))(x, keys)
+
+
+def batched_lloyd(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
+                  key: Optional[jax.Array] = None, chunk: int = 4096,
+                  backend: str = "jnp") -> jax.Array:
+    """vmapped ``lloyd`` over a leading group axis. x: (G, N, D) -> (G, L, D)."""
+    return _vmap_groups(lloyd, x, key, num_clusters=num_clusters,
+                        num_iters=num_iters, chunk=chunk, backend=backend)
+
+
+def batched_kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
+                   key: Optional[jax.Array] = None, chunk: int = 4096,
+                   backend: str = "jnp"):
+    """vmapped kmeans over a leading group axis.  x: (G, N, D)."""
+    return _vmap_groups(kmeans, x, key, num_clusters=num_clusters,
+                        num_iters=num_iters, chunk=chunk, backend=backend)

@@ -16,6 +16,25 @@ Special cases recovered exactly:
   * q = 1             → vanilla K-means on whole vectors
   * R = q  (q > 1)    → vanilla product quantization (codebook per position)
   * R = 1  (default)  → the paper's best trade-off: one shared codebook
+
+Selecting a quantizer backend
+-----------------------------
+``PQConfig.backend`` picks the compute backend for both the Lloyd
+iterations and the final encode (assignment + dequantize + residual):
+
+  * ``"auto"`` (default) — the fused Pallas kernel (compiled Mosaic) on TPU,
+    pure-jnp elsewhere. This is what production configs should use.
+  * ``"jnp"``  — pure-jnp everywhere; the reference/CPU path.
+  * ``"pallas"`` — force the Pallas kernels; off-TPU they run in interpret
+    mode, which is for parity validation, not speed.
+
+The final encode is *fused*: one pass produces the dequantized activations
+z̃, the residual z − z̃ (consumed by the gradient-corrected VJP in
+``core/correction.py`` — it is NOT recomputed there), and the integer codes.
+On TPU this is one HBM read + two writes per element instead of the three
+sweeps (assign, gather, subtract) of the naive path. Backends live in a
+registry (``repro.core.kmeans.register_backend``) so new substrates can be
+added without touching this module.
 """
 
 from __future__ import annotations
@@ -39,6 +58,7 @@ class PQConfig:
     kmeans_iters: int = 8
     phi_bits: int = 64           # float width used for *accounting* (paper: 64)
     kmeans_chunk: int = 4096
+    backend: str = "auto"        # "jnp" | "pallas" | "auto" (see module doc)
 
     def __post_init__(self):
         if self.num_subvectors % self.num_groups != 0:
@@ -46,6 +66,9 @@ class PQConfig:
                 f"q={self.num_subvectors} must be divisible by R={self.num_groups}")
         if self.num_clusters < 1:
             raise ValueError("L must be >= 1")
+        if self.backend not in _km.available_backends():
+            raise ValueError(
+                f"backend={self.backend!r} not one of {_km.available_backends()}")
 
     @property
     def q(self) -> int:
@@ -88,6 +111,8 @@ class QuantizedBatch(NamedTuple):
     codes: jax.Array         # (R, q/R·N) int32 cluster assignments
     codebooks: jax.Array     # (R, L, d/q)
     distortion: jax.Array    # () mean ‖z − z̃‖² per vector
+    residual: jax.Array      # z − z̃, input shape + dtype (fused with encode;
+                             # distortion is accumulated in fp32 before the cast)
 
 
 def _to_groups(z: jax.Array, cfg: PQConfig) -> jax.Array:
@@ -111,6 +136,11 @@ def quantize(z: jax.Array, cfg: PQConfig,
 
     ``z`` may have any leading shape; it is flattened to (N, d) where d is the
     trailing dim. The returned ``dequantized`` has the original shape.
+
+    K-means (Lloyd) runs exactly once; the final dequantize + residual step is
+    the backend's fused encode (``repro.kernels.pq_quantize`` under the
+    Pallas backend), so callers that need the residual — the gradient
+    correction — get it for free instead of re-deriving it from z̃.
     """
     orig_shape = z.shape
     d = orig_shape[-1]
@@ -118,24 +148,30 @@ def quantize(z: jax.Array, cfg: PQConfig,
     n = z2.shape[0]
 
     groups = _to_groups(z2.astype(jnp.float32), cfg)  # (R, M, dsub)
-    cents, codes, dist = _km.batched_kmeans(
+    cents = _km.batched_lloyd(
         groups, cfg.num_clusters, cfg.kmeans_iters, key=key,
-        chunk=cfg.kmeans_chunk)
-    # reconstruct: gather each subvector's centroid, per group
-    recon = jax.vmap(lambda c, i: c[i])(cents, codes)
+        chunk=cfg.kmeans_chunk, backend=cfg.backend)
+    # fused final pass per group: z̃ + residual + codes in one sweep
+    enc = _km.get_backend(cfg.backend).encode
+    recon, resid, codes = jax.vmap(
+        lambda xg, cg: enc(xg, cg, cfg.kmeans_chunk))(groups, cents)
     z_tilde = _from_groups(recon, n, d, cfg).astype(z.dtype)
-    # distortion: mean over groups of per-point sq err, rescaled to per-vector
-    per_vec = dist.sum() * (groups.shape[1] / max(n, 1))
+    # keep the stored residual in z.dtype: it is saved by the correction VJP
+    # for the backward pass, and an fp32 copy would double that residency
+    # for bf16 activations (distortion still accumulates in fp32 first)
+    residual = _from_groups(resid, n, d, cfg).astype(z.dtype)
+    per_vec = jnp.sum(resid * resid) / jnp.maximum(n, 1)
     return QuantizedBatch(z_tilde.reshape(orig_shape), codes,
-                          cents.astype(z.dtype), per_vec)
+                          cents.astype(z.dtype), per_vec,
+                          residual.reshape(orig_shape))
 
 
 def quantization_error(z: jax.Array, cfg: PQConfig) -> jax.Array:
     """Mean relative quantization error ‖z−z̃‖/‖z‖ over the batch (for Fig. 3)."""
-    zt = quantize(z, cfg).dequantized
-    z2 = z.reshape(-1, z.shape[-1])
-    zt2 = zt.reshape(z2.shape)
-    num = jnp.linalg.norm(z2 - zt2, axis=-1)
+    resid = quantize(z, cfg).residual
+    z2 = z.reshape(-1, z.shape[-1]).astype(jnp.float32)
+    r2 = resid.reshape(z2.shape).astype(jnp.float32)
+    num = jnp.linalg.norm(r2, axis=-1)
     den = jnp.maximum(jnp.linalg.norm(z2, axis=-1), 1e-12)
     return jnp.mean(num / den)
 

@@ -70,7 +70,8 @@ def pq_quantize(x: jax.Array, centroids: jax.Array, *,
 
 
 def assign_impl_for_kmeans(x: jax.Array, centroids: jax.Array) -> jax.Array:
-    """Adapter matching repro.core.kmeans.set_assign_impl's signature."""
+    """Adapter matching the ``Backend.assign`` signature in
+    ``repro.core.kmeans`` (used by the built-in "pallas" backend)."""
     codes, _ = kmeans_assign(x, centroids)
     return codes
 

@@ -12,6 +12,8 @@ import math
 import jax
 import numpy as np
 
+from repro.sharding.ctx import AxisType, make_mesh
+
 SINGLE_POD = (16, 16)                  # 256 chips / pod
 MULTI_POD = (2, 16, 16)                # 2 pods = 512 chips
 
@@ -31,8 +33,8 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "importing jax (launch/dryrun.py does this)")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes, devices=devices[:n],
+                     axis_types=(AxisType.Auto,) * len(shape))
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pods: int = 0):
@@ -43,8 +45,8 @@ def make_debug_mesh(data: int = 2, model: int = 2, pods: int = 0):
     else:
         shape, axes = (data, model), ("data", "model")
     n = math.prod(shape)
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes, devices=jax.devices()[:n],
+                     axis_types=(AxisType.Auto,) * len(shape))
 
 
 # TPU v5e hardware constants for the roofline model (per chip)

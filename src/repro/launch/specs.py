@@ -29,10 +29,12 @@ from repro.sharding.rules import param_specs
 def default_pq(cfg: ArchConfig, *, subvector_dim: int = 8,
                clusters: int = 16, iters: int = 4) -> PQConfig:
     """Paper-faithful defaults scaled to d_model: subvectors of dim 8 (the
-    paper's FEMNIST best ratio uses d/q = 8), R=1, L=16."""
+    paper's FEMNIST best ratio uses d/q = 8), R=1, L=16. The encode backend
+    comes from the arch config ("auto": fused Pallas on TPU, jnp elsewhere)."""
     q = cfg.d_model // subvector_dim
     return PQConfig(num_subvectors=q, num_clusters=clusters, num_groups=1,
-                    kmeans_iters=iters, kmeans_chunk=4096)
+                    kmeans_iters=iters, kmeans_chunk=4096,
+                    backend=cfg.pq_backend)
 
 
 def make_model(cfg: ArchConfig, *, with_pq: bool = True,

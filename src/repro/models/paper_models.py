@@ -22,7 +22,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.correction import quantize_with_correction
+from repro.core.correction import quantize_with_correction_stats
 from repro.core.quantizer import PQConfig
 
 Params = Dict[str, Any]
@@ -39,14 +39,14 @@ def _maybe_quantize(x, pq: Optional[PQConfig], lam, quantize: bool,
         return x, {}
     if client_batch and x.shape[0] % client_batch == 0 and x.shape[0] > client_batch:
         xs = x.reshape(x.shape[0] // client_batch, client_batch, *x.shape[1:])
-        zt = jax.vmap(lambda zi: quantize_with_correction(zi, lam, pq))(xs)
-        zt = zt.reshape(x.shape)
+        zt, dist = jax.vmap(
+            lambda zi: quantize_with_correction_stats(zi, lam, pq))(xs)
+        zt, dist = zt.reshape(x.shape), jnp.mean(dist)
     else:
-        zt = quantize_with_correction(x, lam, pq)
-    resid = jax.lax.stop_gradient(x - zt).astype(jnp.float32)
+        zt, dist = quantize_with_correction_stats(x, lam, pq)
     n = x.size // x.shape[-1]
     return zt, {
-        "pq_distortion": jnp.mean(jnp.sum(resid * resid, axis=-1)),
+        "pq_distortion": dist,
         "pq_compression_ratio": float(pq.compression_ratio(int(n), x.shape[-1])),
     }
 

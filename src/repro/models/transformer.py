@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.correction import quantize_with_correction
+from repro.core.correction import quantize_with_correction_stats
 from repro.core.quantizer import PQConfig
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
@@ -245,17 +245,16 @@ class TransformerLM:
         # the quantizer free of collectives
         x = shard(x, ("pod", "data"), None, None)
         lam = self.lam if lam_override is None else lam_override
-        z_tilde = jax.vmap(
-            lambda zi: quantize_with_correction(zi, lam, self.pq))(x)
+        z_tilde, dist = jax.vmap(
+            lambda zi: quantize_with_correction_stats(zi, lam, self.pq))(x)
         if self.downlink_pq is not None:
             from repro.core.correction import quantize_downlink
             z_tilde = jax.vmap(
                 lambda zi: quantize_downlink(zi, self.downlink_pq))(z_tilde)
         z_tilde = shard_residual(z_tilde)
-        resid = jax.lax.stop_gradient(x - z_tilde).astype(jnp.float32)
         n_per_client = int(x.shape[1])  # tokens per client (= sequence)
         stats = {
-            "pq_distortion": jnp.mean(jnp.sum(resid * resid, axis=-1)),
+            "pq_distortion": jnp.mean(dist),
             "pq_message_bits": float(
                 x.shape[0] * self.pq.message_bits(n_per_client, x.shape[-1])),
             "pq_compression_ratio": float(

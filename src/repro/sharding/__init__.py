@@ -1,6 +1,8 @@
 from repro.sharding.ctx import (
+    AxisType,
     axis_size,
     current_mesh,
+    make_mesh,
     set_mesh,
     shard,
     shard_residual,
@@ -9,8 +11,10 @@ from repro.sharding.ctx import (
 from repro.sharding.rules import param_specs, spec_for_param
 
 __all__ = [
+    "AxisType",
     "axis_size",
     "current_mesh",
+    "make_mesh",
     "set_mesh",
     "shard",
     "shard_residual",

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.sharding import (current_mesh, param_specs, set_mesh, shard,
-                            spec_for_param, use_mesh)
+from repro.sharding import (AxisType, current_mesh, make_mesh, param_specs,
+                            set_mesh, shard, spec_for_param, use_mesh)
 from repro.sharding.ctx import filter_spec, shard_residual
 
 
@@ -76,8 +76,7 @@ def test_shard_noop_without_mesh():
 
 
 def test_use_mesh_restores():
-    real = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    real = make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
     with use_mesh(real) as m:
         assert current_mesh() is real
     assert current_mesh() is None

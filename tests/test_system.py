@@ -92,8 +92,9 @@ def test_spec_builders_cover_all_arch_shape_pairs():
     """input_specs/cache_specs/state_specs build for every supported
     (arch × shape) without touching devices (1-device mesh)."""
     from repro.configs.base import ARCH_IDS, supports_shape
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import AxisType, make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
     small = {
         "train_4k": InputShape("train_4k", 128, 8, "train"),
         "prefill_32k": InputShape("prefill_32k", 128, 4, "prefill"),

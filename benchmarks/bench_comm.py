@@ -3,7 +3,18 @@
 Emits per-algorithm uplink bits for the paper's FEMNIST setting and for two
 assigned big archs, and checks the §5 numbers: 490x activation compression;
 ~10x total-uplink reduction vs SplitFed; ~62x vs FedAvg with ~64x fewer
-client-side trainable parameters."""
+client-side trainable parameters.
+
+Accounting width: the §5 worked example is checked at the paper's fixed
+phi = 64 bits (PQConfig's default ``phi_bits``), passed explicitly below —
+``tree_bits``/``comm_report`` now default to the *actual* dtype width, so
+the big-arch rows report dtype-derived phi (32 for fp32 smoke configs).
+
+The ``femnist_wire_measured`` row closes the loop analytically asserted
+above: it pushes a real quantized batch through the bit-packed wire codec
+(``federated/wire.py``) and reports measured payload bytes next to
+``PQConfig.message_bits`` at the wire width — they must agree to within
+the 24-byte header (+ <1 byte of code padding)."""
 
 from __future__ import annotations
 
@@ -12,26 +23,30 @@ import jax
 from benchmarks.common import emit
 from repro.configs.base import get_arch
 from repro.core.fedlite import comm_report
-from repro.core.quantizer import PQConfig
-from repro.core.split import split_summary, tree_bits
+from repro.core.quantizer import PQConfig, quantize
+from repro.core.split import split_summary
+from repro.federated import wire
 from repro.launch.specs import default_pq, make_model
 from repro.models.paper_models import FemnistCNN
+
+PAPER_PHI = 64  # the paper's fixed accounting float width (bits)
 
 
 def run(fast: bool = True):
     rows = []
-    # ---- the paper's FEMNIST worked example --------------------------------
-    pq = PQConfig(num_subvectors=1152, num_clusters=2, kmeans_iters=2)
+    # ---- the paper's FEMNIST worked example (phi = 64, as in §5) ----------
+    pq = PQConfig(num_subvectors=1152, num_clusters=2, kmeans_iters=2,
+                  phi_bits=PAPER_PHI)
     model = FemnistCNN(pq=pq, lam=1e-4)
     params = model.init(jax.random.PRNGKey(0))
-    s = split_summary(params)
+    s = split_summary(params, phi_bits=PAPER_PHI)
     B, d = 20, 9216
-    act_bits = 64 * d * B
+    act_bits = PAPER_PHI * d * B
     msg = pq.message_bits(B, d)
     client_bits = s["client_bits"]
     total_bits = client_bits + s["server_bits"]
     rows.append({
-        "name": "femnist_b20_q1152_L2",
+        "name": f"femnist_b20_q1152_L2_phi{PAPER_PHI}",
         "us_per_call": 0.0,
         "activation_compression": round(act_bits / msg, 1),        # paper: 490
         "uplink_vs_splitfed": round((client_bits + act_bits) /
@@ -40,7 +55,28 @@ def run(fast: bool = True):
         "client_param_fraction": round(s["client_fraction"], 4),   # ~1.6%
     })
 
-    # ---- big-arch accounting (smoke-size params, full-size formulas) ------
+    # ---- measured wire bytes vs the analytic bit count ---------------------
+    # one real PQ encode through the bit-packed codec; fp16 codebooks on the
+    # wire, so the analytic reference is message_bits at phi=16
+    acts = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+    payload = wire.encode_bytes(quantize(acts, pq), "float16")
+    analytic_bits = pq.message_bits(B, d, phi_bits=16)
+    overhead_bits = len(payload) * 8 - analytic_bits
+    assert len(payload) * 8 == wire.wire_bits(pq, B, d, "float16"), \
+        "measured payload disagrees with wire_bits"
+    assert 0 <= overhead_bits <= wire.HEADER_BYTES * 8 + 7, \
+        f"wire overhead {overhead_bits} bits exceeds the documented header"
+    rows.append({
+        "name": "femnist_wire_measured_b20_q1152_L2",
+        "us_per_call": 0.0,
+        "measured_bytes": len(payload),
+        "analytic_phi16_bits": analytic_bits,
+        "header_overhead_bits": overhead_bits,
+        "measured_compression_vs_fp32": round(
+            32 * d * B / (len(payload) * 8), 1),
+    })
+
+    # ---- big-arch accounting (smoke-size params, dtype-derived phi) --------
     for arch in ["llama3_8b", "mixtral_8x22b"]:
         cfg = get_arch(arch, smoke=True)
         m = make_model(cfg)
@@ -49,6 +85,7 @@ def run(fast: bool = True):
         rows.append({
             "name": f"{arch}_smoke_tokens4096",
             "us_per_call": 0.0,
+            "phi_bits": rep["phi_bits"],
             "activation_compression": round(
                 rep["activation_compression_ratio"], 1),
             "uplink_vs_splitfed": round(
@@ -56,15 +93,16 @@ def run(fast: bool = True):
             "uplink_vs_fedavg": round(rep["uplink_reduction_vs_fedavg"], 2),
         })
 
-    # ---- full-size analytic accounting (no allocation) ---------------------
+    # ---- full-size analytic accounting (no allocation; dtype-derived phi) --
     for arch in ["gemma_7b", "command_r_35b"]:
         cfg = get_arch(arch)
         pq_full = default_pq(cfg)
         tokens = 4096
-        act_bits = 64 * cfg.d_model * tokens
-        msg = pq_full.message_bits(tokens, cfg.d_model)
+        phi = jax.numpy.dtype(cfg.dtype).itemsize * 8
+        act_bits = phi * cfg.d_model * tokens
+        msg = pq_full.message_bits(tokens, cfg.d_model, phi_bits=phi)
         rows.append({
-            "name": f"{arch}_full_analytic",
+            "name": f"{arch}_full_analytic_phi{phi}",
             "us_per_call": 0.0,
             "activation_compression": round(act_bits / msg, 1),
             "head_params_fraction": round(

@@ -27,6 +27,9 @@ def run(fast: bool = True):
     rows = []
     B, d = 20, 9216
     pq = PQConfig(num_subvectors=288, num_clusters=4, kmeans_iters=5)
+    # one accounting width for params, activations AND codebooks: the actual
+    # fp32 wire width (tree_bits defaults to per-leaf dtype bits = 32 here)
+    PHI = 32
 
     # --- FedLite & SplitFed --------------------------------------------------
     results = {}
@@ -38,8 +41,8 @@ def run(fast: bool = True):
         state, hist = trainer.run(rounds, jax.random.PRNGKey(0))
         params0 = model.init(jax.random.PRNGKey(0))
         client_bits = tree_bits(params0["client"])
-        per_round = client_bits + (pq.message_bits(B, d) if use_pq
-                                   else 64 * d * B)
+        per_round = client_bits + (pq.message_bits(B, d, phi_bits=PHI)
+                                   if use_pq else PHI * d * B)
         acc = float(model.accuracy(state.params, eb))
         results[name] = (acc, per_round * rounds, hist[-1]["loss"])
         rows.append({"name": name, "us_per_call": 0.0,

@@ -1,0 +1,129 @@
+"""Measured time-to-target-loss and bytes-per-round under heterogeneity.
+
+The end-to-end version of the paper's §5 trade-off: the same FEMNIST
+training run is dispatched through the virtual-clock scheduler under
+compression level x bandwidth distribution x straggler policy, and each
+cell reports *measured* wire bytes (``federated/wire.py``) plus simulated
+wall-clock — where ``bench_comm.py`` only counts bits analytically.
+
+Scenario axes (fast mode keeps a 2x3 slice; --full runs the grid):
+
+  * compression — SplitFed (raw fp32 activations) vs FedLite
+    (q=1152, L=2: the paper's 490x point).
+  * fleet       — ideal (identical infinitely-fast clients), lognormal
+    broadband (heavy straggler tail), wired/mobile mixture with dropout.
+  * policy      — full sync, drop-slowest-k, per-round deadline,
+    FedBuff-style async buffer.
+
+Emitted per row: simulated seconds, simulated time and uplink bytes to
+reach the target loss (0.9x the round-0 loss), measured uplink MB/round,
+stragglers dropped, mean staleness.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.quantizer import PQConfig
+from repro.data.synthetic import make_federated_image_data
+from repro.federated import (AsyncBuffer, Deadline, DropSlowestK,
+                             FederatedTrainer, FullSync, lognormal_fleet,
+                             mobile_fleet, uniform_fleet)
+from repro.models.paper_models import FemnistCNN
+from repro.optim import sgd
+
+NUM_CLIENTS = 16
+COHORT = 4
+CLIENT_BATCH = 8
+
+
+def _fleets():
+    return {
+        "ideal": uniform_fleet(NUM_CLIENTS),
+        "lognormal": lognormal_fleet(
+            NUM_CLIENTS, median_uplink_bps=2e6, median_downlink_bps=10e6,
+            bandwidth_sigma=1.0, compute_sigma=0.4, seed=0),
+        "mobile": mobile_fleet(NUM_CLIENTS, flaky_fraction=0.4, seed=0),
+    }
+
+
+def _policies():
+    return {
+        "full_sync": FullSync(),
+        "drop_slowest_1": DropSlowestK(1),
+        "deadline_6s": Deadline(6.0),
+        "async_buffer_2": AsyncBuffer(2),
+    }
+
+
+def _compressions():
+    return {
+        "splitfed": None,
+        "fedlite_q1152_L2": PQConfig(num_subvectors=1152, num_clusters=2,
+                                     kmeans_iters=2),
+    }
+
+
+# fast mode: the three straggler/bandwidth scenarios the acceptance
+# criteria name, each at both compression levels
+FAST_SCENARIOS = [
+    ("ideal", "full_sync"),
+    ("lognormal", "drop_slowest_1"),
+    ("mobile", "deadline_6s"),
+]
+
+
+def run(fast: bool = True):
+    data = make_federated_image_data(num_clients=NUM_CLIENTS, seed=0)
+    fleets, policies, pqs = _fleets(), _policies(), _compressions()
+    scenarios = FAST_SCENARIOS if fast else \
+        [(f, p) for f in fleets for p in policies]
+    rounds = 8 if fast else 40
+
+    rows = []
+    for fleet_name, policy_name in scenarios:
+        for pq_name, pq in pqs.items():
+            model = FemnistCNN(pq=pq, lam=1e-4)
+            trainer = FederatedTrainer(
+                model, sgd(10 ** -1.5), data, cohort=COHORT,
+                client_batch=CLIENT_BATCH, quantize=pq is not None,
+                fleet=fleets[fleet_name], policy=policies[policy_name])
+            t0 = time.perf_counter()
+            _, hist = trainer.run(rounds, jax.random.PRNGKey(0))
+            wall_us = (time.perf_counter() - t0) * 1e6 / max(rounds, 1)
+            trace = trainer.last_trace
+            losses = [h["loss"] for h in hist if "loss" in h]
+            # fast mode only runs 8 rounds; use a reachable smoke target
+            factor = 0.93 if fast else 0.9
+            target = factor * losses[0] if losses else float("nan")
+            t_target = trace.time_to_target(target)
+            b_target = trace.bytes_to_target(target)
+            s = trace.summary()
+            rows.append({
+                "name": f"{fleet_name}_{policy_name}_{pq_name}",
+                "us_per_call": wall_us,
+                "sim_seconds": round(s["simulated_seconds"], 2),
+                "sim_seconds_to_target": None if t_target is None
+                else round(t_target, 2),
+                "uplink_mb_to_target": None if b_target is None
+                else round(b_target / 1e6, 4),
+                "uplink_mb_per_round": round(
+                    s["uplink_bytes_per_round"] / 1e6, 4),
+                "downlink_mb_per_round": round(
+                    s["downlink_bytes"] / max(len(trace), 1) / 1e6, 4),
+                "stragglers_dropped": s["stragglers_dropped"],
+                "mean_staleness": round(s["mean_staleness"], 2),
+                "final_loss": round(losses[-1], 4) if losses else None,
+            })
+    return rows
+
+
+def main(fast: bool = True):
+    emit(run(fast), "network_tradeoff")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,8 @@ import traceback
 
 from benchmarks import (bench_accuracy_tradeoff, bench_comm,
                         bench_convergence, bench_correction, bench_grouping,
-                        bench_kernels, bench_quantizer_tradeoff,
-                        bench_so_tasks, roofline)
+                        bench_kernels, bench_network,
+                        bench_quantizer_tradeoff, bench_so_tasks, roofline)
 from benchmarks.common import emit
 
 SUITES = {
@@ -25,6 +25,7 @@ SUITES = {
     "fig5_correction": bench_correction,
     "fig5c_grouping": bench_grouping,
     "table1_comm": bench_comm,
+    "network_tradeoff": bench_network,
     "so_tasks": bench_so_tasks,
     "fig6_convergence": bench_convergence,
     "kernels": bench_kernels,

@@ -7,6 +7,13 @@ communication as it goes. Compares against the SplitFed baseline.
 
     PYTHONPATH=src python examples/femnist_federated_training.py \
         --rounds 300 --q 1152 --clusters 2 --lam 1e-4
+
+Heterogeneous-fleet variant: dispatch the same training through the
+virtual-clock scheduler over a realistic fleet and a straggler policy,
+reporting measured wire bytes and simulated wall-clock:
+
+    PYTHONPATH=src python examples/femnist_federated_training.py \
+        --rounds 100 --fleet mobile --policy deadline
 """
 
 import argparse
@@ -18,9 +25,23 @@ from repro.checkpointing import save_checkpoint
 from repro.core.quantizer import PQConfig
 from repro.core.split import tree_bits
 from repro.data.synthetic import make_federated_image_data
-from repro.federated.runtime import FederatedTrainer
+from repro.federated import (AsyncBuffer, Deadline, DropSlowestK,
+                             FederatedTrainer, FullSync, lognormal_fleet,
+                             mobile_fleet)
 from repro.models.paper_models import FemnistCNN
 from repro.optim import sgd
+
+FLEETS = {
+    "ideal": lambda n: None,  # trainer default: identical ideal clients
+    "lognormal": lambda n: lognormal_fleet(n, median_uplink_bps=2e6, seed=0),
+    "mobile": lambda n: mobile_fleet(n, flaky_fraction=0.3, seed=0),
+}
+POLICIES = {
+    "full_sync": FullSync,
+    "drop2": lambda: DropSlowestK(2),
+    "deadline": lambda: Deadline(6.0),
+    "async": lambda: AsyncBuffer(4),
+}
 
 
 def main():
@@ -33,41 +54,72 @@ def main():
     ap.add_argument("--client-batch", type=int, default=20)
     ap.add_argument("--baseline", action="store_true",
                     help="run SplitFed (no compression) instead")
+    ap.add_argument("--fleet", choices=sorted(FLEETS), default="ideal",
+                    help="client population for the virtual-clock scheduler")
+    ap.add_argument("--policy", choices=sorted(POLICIES), default="full_sync",
+                    help="round participation policy")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
-    data = make_federated_image_data(num_clients=64, seed=0)
+    num_clients = 64
+    data = make_federated_image_data(num_clients=num_clients, seed=0)
     pq = None if args.baseline else PQConfig(
         num_subvectors=args.q, num_clusters=args.clusters, kmeans_iters=5)
     model = FemnistCNN(pq=pq, lam=args.lam, client_batch=args.client_batch)
     trainer = FederatedTrainer(model, sgd(10 ** -1.5), data,
                                cohort=args.cohort,
                                client_batch=args.client_batch,
-                               quantize=not args.baseline)
-    state = trainer.init_state(jax.random.PRNGKey(0))
-
-    client_bits = tree_bits(state.params["client"])
-    act_bits = 64 * 9216 * args.client_batch
-    per_round = client_bits + (pq.message_bits(args.client_batch, 9216)
-                               if pq else act_bits)
+                               quantize=not args.baseline,
+                               fleet=FLEETS[args.fleet](num_clients),
+                               policy=POLICIES[args.policy]())
     eval_batch = data.eval_batch(jax.random.PRNGKey(99), 512)
+    heterogeneous = args.fleet != "ideal" or args.policy != "full_sync"
 
-    t0 = time.time()
-    for r in range(args.rounds):
-        state, metrics = trainer.round(state, jax.random.fold_in(
-            jax.random.PRNGKey(1), r))
-        if r % 25 == 0 or r == args.rounds - 1:
-            acc = float(model.accuracy(state.params, eval_batch))
-            mb = per_round * args.cohort * (r + 1) / 8e6
-            print(f"round {r:4d}  loss={float(metrics['loss']):.4f}  "
-                  f"acc={acc:.3f}  uplink={mb:8.1f} MB  "
-                  f"({time.time() - t0:.0f}s)")
+    if heterogeneous:
+        # scheduled run: measured wire bytes + simulated wall-clock per round
+        t0 = time.time()
+        state, hist = trainer.run(args.rounds, jax.random.PRNGKey(0))
+        trace = trainer.last_trace
+        acc = float(model.accuracy(state.params, eval_batch))
+        s = trace.summary()
+        print(f"fleet={args.fleet} policy={args.policy}  "
+              f"rounds={s['rounds']}  acc={acc:.3f}  "
+              f"({time.time() - t0:.0f}s real)")
+        print(f"  simulated wall-clock : {s['simulated_seconds']:10.1f} s")
+        print(f"  measured uplink      : {s['uplink_bytes'] / 1e6:10.2f} MB "
+              f"({s['uplink_bytes_per_round'] / 1e6:.4f} MB/round)")
+        print(f"  measured downlink    : {s['downlink_bytes'] / 1e6:10.2f} MB")
+        print(f"  stragglers dropped   : {s['stragglers_dropped']:10d}")
+        if s["mean_staleness"]:
+            print(f"  mean staleness       : {s['mean_staleness']:10.2f}")
+        losses = [h["loss"] for h in hist if "loss" in h]
+        if losses:
+            print(f"  loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    else:
+        # ideal synchronous loop with periodic eval (the paper's simulation);
+        # analytic uplink accounting at the params' native phi (fp32: 32-bit)
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        client_bits = tree_bits(state.params["client"])
+        act_bits = 32 * 9216 * args.client_batch
+        per_round = client_bits + (pq.message_bits(args.client_batch, 9216,
+                                                   phi_bits=32)
+                                   if pq else act_bits)
+        t0 = time.time()
+        for r in range(args.rounds):
+            state, metrics = trainer.round(state, jax.random.fold_in(
+                jax.random.PRNGKey(1), r))
+            if r % 25 == 0 or r == args.rounds - 1:
+                acc = float(model.accuracy(state.params, eval_batch))
+                mb = per_round * args.cohort * (r + 1) / 8e6
+                print(f"round {r:4d}  loss={float(metrics['loss']):.4f}  "
+                      f"acc={acc:.3f}  uplink={mb:8.1f} MB  "
+                      f"({time.time() - t0:.0f}s)")
     if args.ckpt:
         save_checkpoint(args.ckpt, args.rounds, state.params)
         print(f"saved params to {args.ckpt}")
     if pq:
-        print(f"activation compression: "
-              f"{pq.compression_ratio(args.client_batch, 9216):.0f}x")
+        print(f"activation compression (phi=32): "
+              f"{pq.compression_ratio(args.client_batch, 9216, phi_bits=32):.0f}x")
 
 
 if __name__ == "__main__":

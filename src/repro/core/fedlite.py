@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import kmeans as _km
 from repro.core.quantizer import PQConfig
-from repro.core.split import tree_bits
+from repro.core.split import dtype_bits, tree_bits
 from repro.models.transformer import TransformerLM
 from repro.optim import Optimizer
 
@@ -131,29 +131,38 @@ def make_eval_step(model: TransformerLM) -> Callable:
 # ---------------------------------------------------------------------------
 
 def comm_report(model: TransformerLM, params, tokens_per_client: int,
-                pq: Optional[PQConfig] = None, phi_bits: int = 64) -> Dict[str, float]:
+                pq: Optional[PQConfig] = None,
+                phi_bits: Optional[int] = None) -> Dict[str, float]:
     """Per-client, per-iteration uplink bits for FedAvg / SplitFed / FedLite.
 
     ``tokens_per_client`` is B (examples per client) × activation vectors per
     example (seq length for LMs; 1 for the paper's CNN whose cut activation
     is a single flattened vector).
+
+    ``phi_bits=None`` (default) derives the accounting width from the actual
+    dtypes: parameters count per-leaf dtype bits, activations (and the PQ
+    codebooks) count the model's compute dtype. Pass φ=64 explicitly to
+    reproduce the paper's fixed-width §5 numbers.
     """
     d = model.cfg.d_model
     pq = pq if pq is not None else model.pq
+    act_phi = phi_bits if phi_bits is not None else \
+        dtype_bits(getattr(model.cfg, "dtype", "float32"))
     client_bits = tree_bits(params["client"], phi_bits)
     total_bits = client_bits + tree_bits(params["server"], phi_bits)
-    act_bits = phi_bits * d * tokens_per_client
+    act_bits = act_phi * d * tokens_per_client
 
     report = {
         "activation_dim": d,
         "tokens_per_client": tokens_per_client,
+        "phi_bits": float(act_phi),
         "pq_backend": None if pq is None else _km.resolve_backend(pq.backend),
         "fedavg_uplink_bits": float(total_bits),
         "splitfed_uplink_bits": float(client_bits + act_bits),
         "splitfed_activation_bits": float(act_bits),
     }
     if pq is not None:
-        msg = pq.message_bits(tokens_per_client, d)
+        msg = pq.message_bits(tokens_per_client, d, phi_bits=act_phi)
         report.update({
             "fedlite_uplink_bits": float(client_bits + msg),
             "fedlite_activation_bits": float(msg),

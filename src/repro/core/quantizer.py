@@ -49,6 +49,15 @@ import jax.numpy as jnp
 from repro.core import kmeans as _km
 
 
+def bits_per_code(num_clusters: int) -> int:
+    """Packed index width b = ceil(log2 L); a single cluster needs no codes.
+
+    The one formula both the analytic accounting (`PQConfig`) and the wire
+    codec (`federated/wire.py`) use."""
+    return 0 if num_clusters <= 1 else \
+        max(math.ceil(math.log2(num_clusters)), 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class PQConfig:
     """Static quantizer hyperparameters (hashable: usable as a jit static)."""
@@ -87,23 +96,41 @@ class PQConfig:
             raise ValueError(f"d={d} not divisible by q={self.num_subvectors}")
         return d // self.num_subvectors
 
+    # ---- wire-layout metadata (consumed by federated/wire.py) ----------
+    @property
+    def bits_per_code(self) -> int:
+        """Packed index width b = ceil(log2 L); L=1 transmits no codes."""
+        return bits_per_code(self.num_clusters)
+
+    def codebook_shape(self, d: int) -> tuple:
+        """(R, L, d/q) — the centroid tensor the uplink carries."""
+        return (self.num_groups, self.num_clusters, self.subvector_dim(d))
+
+    def num_codes(self, n: int) -> int:
+        """Total cluster indices for n activation vectors (= R·(q/R)·n)."""
+        return n * self.num_subvectors
+
     # ---- communication accounting (paper §4.1) -------------------------
-    def codebook_bits(self, d: int) -> int:
+    def codebook_bits(self, d: int, phi_bits: Optional[int] = None) -> int:
         # R groups × L centroids × (d/q) dims × φ bits  ==  φ·d·R·L/q
-        return self.phi_bits * self.subvector_dim(d) * self.num_clusters * self.num_groups
+        phi = self.phi_bits if phi_bits is None else phi_bits
+        return phi * self.subvector_dim(d) * self.num_clusters * self.num_groups
 
     def codes_bits(self, n: int) -> int:
-        return n * self.num_subvectors * max(math.ceil(math.log2(self.num_clusters)), 1) \
-            if self.num_clusters > 1 else 0
+        return self.num_codes(n) * self.bits_per_code
 
-    def message_bits(self, n: int, d: int) -> int:
-        return self.codebook_bits(d) + self.codes_bits(n)
+    def message_bits(self, n: int, d: int, phi_bits: Optional[int] = None) -> int:
+        return self.codebook_bits(d, phi_bits) + self.codes_bits(n)
 
-    def uncompressed_bits(self, n: int, d: int) -> int:
-        return self.phi_bits * d * n
+    def uncompressed_bits(self, n: int, d: int,
+                          phi_bits: Optional[int] = None) -> int:
+        phi = self.phi_bits if phi_bits is None else phi_bits
+        return phi * d * n
 
-    def compression_ratio(self, n: int, d: int) -> float:
-        return self.uncompressed_bits(n, d) / max(self.message_bits(n, d), 1)
+    def compression_ratio(self, n: int, d: int,
+                          phi_bits: Optional[int] = None) -> float:
+        return self.uncompressed_bits(n, d, phi_bits) / \
+            max(self.message_bits(n, d, phi_bits), 1)
 
 
 class QuantizedBatch(NamedTuple):

@@ -3,14 +3,24 @@
 Models built by ``TransformerLM`` are split by construction
 (params = {"client": ..., "server": ...}); these helpers quantify the split —
 the paper's Table 1 compares algorithms by |w|, |w_c| and message sizes.
+
+Accounting width φ: by default (``phi_bits=None``) bit counts are derived
+from each leaf's *actual dtype* (fp32 params count 32 bits, bf16 count 16).
+Pass an explicit ``phi_bits`` to reproduce a fixed-width cost model — the
+paper's §5 worked example uses φ=64.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+
+def dtype_bits(dtype) -> int:
+    """Bits per element of a dtype (bf16 -> 16, fp32 -> 32, ...)."""
+    return jnp.dtype(dtype).itemsize * 8
 
 
 def tree_size(tree) -> int:
@@ -18,12 +28,19 @@ def tree_size(tree) -> int:
     return sum(x.size for x in jax.tree.leaves(tree))
 
 
-def tree_bits(tree, phi_bits: int = 64) -> int:
-    """Parameter payload in bits at the paper's accounting float width φ."""
+def tree_bits(tree, phi_bits: Optional[int] = None) -> int:
+    """Parameter payload in bits.
+
+    ``phi_bits=None`` (default) counts each leaf at its actual dtype width;
+    an explicit value applies one accounting float width φ to every leaf.
+    """
+    if phi_bits is None:
+        return sum(x.size * dtype_bits(x.dtype) for x in jax.tree.leaves(tree))
     return tree_size(tree) * phi_bits
 
 
-def split_summary(params: Dict[str, Any], phi_bits: int = 64) -> Dict[str, Any]:
+def split_summary(params: Dict[str, Any],
+                  phi_bits: Optional[int] = None) -> Dict[str, Any]:
     n_client = tree_size(params["client"])
     n_server = tree_size(params["server"])
     total = n_client + n_server
@@ -32,6 +49,6 @@ def split_summary(params: Dict[str, Any], phi_bits: int = 64) -> Dict[str, Any]:
         "server_params": n_server,
         "total_params": total,
         "client_fraction": n_client / max(total, 1),
-        "client_bits": n_client * phi_bits,
-        "server_bits": n_server * phi_bits,
+        "client_bits": tree_bits(params["client"], phi_bits),
+        "server_bits": tree_bits(params["server"], phi_bits),
     }

@@ -1,9 +1,65 @@
+"""Heterogeneous federated simulation subsystem.
+
+The paper's value proposition is what FedLite saves on the client->server
+uplink; this package *measures* it instead of only asserting it
+analytically. Four layers, composed by `FederatedTrainer`:
+
+  runtime.py    — the algorithm drivers (FedAvg / SplitFed / FedLite round
+                  logic, cohort sampling — uniform or p_i-weighted — and
+                  weighted aggregation). `FederatedTrainer.run` executes
+                  training rounds through the scheduler below.
+  wire.py       — the bit-packed wire codec for the cut-layer payload: a
+                  `QuantizedBatch` becomes header + fp16 codebooks +
+                  ceil(log2 L)-bit packed codes. Bit-exact round-trip;
+                  measured byte counts validate `PQConfig.message_bits`.
+  network.py    — `ClientProfile` (asymmetric bandwidth, latency, compute
+                  multiplier, dropout) and fleet samplers: `uniform_fleet`
+                  (the IDEAL pre-subsystem clients), `lognormal_fleet`
+                  (heavy-tailed broadband), `mobile_fleet` (flaky mobile
+                  mixture).
+  scheduler.py  — a virtual-clock event loop dispatching rounds under a
+                  participation policy: `FullSync`, `DropSlowestK`,
+                  `Deadline`, or FedBuff-style `AsyncBuffer` with
+                  staleness-weighted aggregation.
+  trace.py      — per-round `RoundRecord`s (simulated wall-clock, measured
+                  uplink/downlink bytes, stragglers dropped, staleness)
+                  collected into a `Trace` with time-to-target /
+                  bytes-to-target reductions.
+
+The ideal fleet + `FullSync` reproduces the original synchronous
+simulation bitwise (tests/test_scheduler.py); heterogeneous fleets turn
+the same trainer into the paper-§5 trade-off harness driven by
+``benchmarks/bench_network.py``.
+"""
+
+from repro.federated.network import (
+    IDEAL,
+    ClientProfile,
+    lognormal_fleet,
+    mobile_fleet,
+    uniform_fleet,
+)
 from repro.federated.runtime import (
     FederatedTrainer,
     fedavg_round,
+    run_fedavg,
     sample_clients,
     weighted_average,
 )
+from repro.federated.scheduler import (
+    AsyncBuffer,
+    Deadline,
+    DropSlowestK,
+    FullSync,
+    Scheduler,
+)
+from repro.federated.trace import RoundRecord, Trace
+from repro.federated import wire
 
-__all__ = ["FederatedTrainer", "fedavg_round", "sample_clients",
-           "weighted_average"]
+__all__ = [
+    "AsyncBuffer", "ClientProfile", "Deadline", "DropSlowestK",
+    "FederatedTrainer", "FullSync", "IDEAL", "RoundRecord", "Scheduler",
+    "Trace", "fedavg_round", "lognormal_fleet", "mobile_fleet",
+    "run_fedavg", "sample_clients", "uniform_fleet", "weighted_average",
+    "wire",
+]

@@ -14,26 +14,53 @@ identical to per-client messaging with p_i-weighted server aggregation when
 client batches are equal-sized, and exactly what the production mesh runs
 (each data shard = one cohort). FedAvg keeps the explicit per-client local
 loop since its local-step structure cannot be fused.
+
+`FederatedTrainer.run` drives rounds through the virtual-clock
+``federated/scheduler.py``: the default fleet/policy (identical
+infinitely-fast clients, full sync) bitwise-reproduces the original
+synchronous loop, while heterogeneous fleets + straggler policies turn the
+same trainer into a measurement harness — per-round simulated wall-clock
+and *measured* wire bytes (``federated/wire.py``) land in
+``trainer.last_trace``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 import operator
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fedlite import TrainState, make_train_step
+from repro.core.quantizer import quantize
 from repro.data.synthetic import FederatedDataset
+from repro.federated.network import ClientProfile, uniform_fleet, validate_fleet
+from repro.federated.scheduler import Arrival, FullSync, Policy, Scheduler
+from repro.federated.trace import Trace
 from repro.optim import Optimizer
 
+logger = logging.getLogger(__name__)
 
-def sample_clients(rng: np.random.Generator, num_clients: int,
-                   cohort: int) -> np.ndarray:
-    return rng.choice(num_clients, size=min(cohort, num_clients), replace=False)
+
+def sample_clients(rng: np.random.Generator, num_clients: int, cohort: int,
+                   weights: Optional[np.ndarray] = None) -> np.ndarray:
+    """Sample a cohort without replacement, uniformly or p_i-proportionally.
+
+    ``weights`` (e.g. ``FederatedDataset.client_weights``, p_i ∝ n_i) biases
+    selection toward data-rich clients — the sampling the FedAvg analysis
+    assumes; ``None`` keeps the uniform sampling SplitFed/FedLite use.
+    """
+    size = min(cohort, num_clients)
+    if weights is None:
+        return rng.choice(num_clients, size=size, replace=False)
+    p = np.asarray(weights, np.float64)
+    if p.shape != (num_clients,) or (p < 0).any() or p.sum() <= 0:
+        raise ValueError("weights must be a nonnegative (num_clients,) vector")
+    return rng.choice(num_clients, size=size, replace=False, p=p / p.sum())
 
 
 def weighted_average(trees: Sequence[Any], weights: Sequence[float]):
@@ -82,6 +109,26 @@ def fedavg_round(model, params, data: FederatedDataset, client_ids,
     return new_params, float(np.mean(losses))
 
 
+def run_fedavg(model, params, data: FederatedDataset, *, rounds: int,
+               cohort: int, key: jax.Array, local_steps: int, batch: int,
+               lr: float, weighted_sampling: bool = True, seed: int = 0,
+               batch_kwargs: Optional[dict] = None):
+    """FedAvg driver: p_i-proportional cohort sampling + weighted averaging.
+
+    Returns (params, per-round mean-loss list)."""
+    rng = np.random.default_rng(seed)
+    weights = data.client_weights if weighted_sampling else None
+    losses = []
+    for r in range(rounds):
+        ids = sample_clients(rng, data.num_clients, cohort, weights=weights)
+        params, loss = fedavg_round(
+            model, params, data, ids, jax.random.fold_in(key, r + 1),
+            local_steps=local_steps, batch=batch, lr=lr,
+            batch_kwargs=batch_kwargs)
+        losses.append(loss)
+    return params, losses
+
+
 # ---------------------------------------------------------------------------
 # SplitFed / FedLite trainer
 # ---------------------------------------------------------------------------
@@ -92,6 +139,15 @@ class FederatedTrainer:
 
     Each round samples a cohort, stacks the cohort's client batches into one
     global batch (cohort = leading batch dim) and runs the jitted split step.
+
+    Rounds are dispatched by the virtual-clock `Scheduler`: ``fleet`` (one
+    `ClientProfile` per client; default identical ideal clients) and
+    ``policy`` (default `FullSync`) select the heterogeneity scenario. With
+    the defaults the trajectory is bitwise-identical to a plain
+    ``round()``-by-``round()`` loop; under straggler policies the stacked
+    batch shrinks to the survivors (one extra jit cache entry per distinct
+    survivor count). ``run`` leaves the per-round `Trace` — simulated
+    wall-clock + measured wire bytes — in ``self.last_trace``.
     """
     model: Any
     optimizer: Optimizer
@@ -101,35 +157,138 @@ class FederatedTrainer:
     quantize: bool = True
     batch_kwargs: Optional[dict] = None
     seed: int = 0
+    fleet: Optional[Sequence[ClientProfile]] = None
+    policy: Optional[Policy] = None
+    client_step_seconds: float = 1.0
+    server_step_seconds: float = 0.0
+    codebook_wire_dtype: str = "float16"
 
     def __post_init__(self):
         self._step = make_train_step(self.model, self.optimizer,
                                      quantize=self.quantize, donate=False)
         self._rng = np.random.default_rng(self.seed)
+        if self.fleet is None:
+            self.fleet = uniform_fleet(self.data.num_clients)
+        validate_fleet(self.fleet, self.data.num_clients)
+        if self.policy is None:
+            self.policy = FullSync()
+        self.last_trace: Optional[Trace] = None
 
     def init_state(self, key: jax.Array) -> TrainState:
         return TrainState.create(self.model.init(key), self.optimizer)
 
+    # ---- batch assembly ----------------------------------------------------
+    def client_batch_for(self, cid: int, round_key: jax.Array):
+        return self.data.sample_batch(int(cid),
+                                      jax.random.fold_in(round_key, int(cid)),
+                                      self.client_batch,
+                                      **(self.batch_kwargs or {}))
+
+    def stack_batches(self, parts: Sequence[Dict[str, jax.Array]]):
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
     def cohort_batch(self, key: jax.Array) -> Dict[str, jax.Array]:
         ids = sample_clients(self._rng, self.data.num_clients, self.cohort)
-        parts = [self.data.sample_batch(int(cid), jax.random.fold_in(key, int(cid)),
-                                        self.client_batch,
-                                        **(self.batch_kwargs or {}))
-                 for cid in ids]
-        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        return self.stack_batches([self.client_batch_for(cid, key)
+                                   for cid in ids])
 
     def round(self, state: TrainState, key: jax.Array):
         batch = self.cohort_batch(key)
         return self._step(state, batch)
 
+    # ---- wire measurement --------------------------------------------------
+    def measure_round_bytes(self, state: TrainState, key: jax.Array):
+        """Measured per-client (uplink, downlink) payload bytes for a round.
+
+        One real client forward feeds both numbers. Uplink — FedLite: the
+        PQ-encoded activations through the wire codec (`federated/wire.py`);
+        the payload layout is shape-determined, so a single measurement is
+        exact for every round. SplitFed: the raw activation tensor at its
+        native dtype. Downlink — the cut-layer activation gradient, same
+        shape/dtype as the uncompressed activations.
+        """
+        batch = self.data.sample_batch(0, key, self.client_batch,
+                                       **(self.batch_kwargs or {}))
+        acts = self.model.client_forward(state.params["client"], batch)
+        if isinstance(acts, tuple):   # TransformerLM returns (acts, aux...)
+            acts = acts[0]
+        raw_bytes = acts.size * jnp.dtype(acts.dtype).itemsize
+        pq = getattr(self.model, "pq", None)
+        if not self.quantize or pq is None:
+            return raw_bytes, raw_bytes
+        from repro.federated.wire import encode_bytes
+        qb = quantize(acts.reshape(-1, acts.shape[-1]), pq)
+        return len(encode_bytes(qb, self.codebook_wire_dtype)), raw_bytes
+
+    def measure_uplink_bytes(self, state: TrainState, key: jax.Array) -> int:
+        return self.measure_round_bytes(state, key)[0]
+
+    def measure_downlink_bytes(self, state: TrainState, key: jax.Array) -> int:
+        return self.measure_round_bytes(state, key)[1]
+
+    # ---- scheduled run -----------------------------------------------------
     def run(self, steps: int, key: jax.Array, log_every: int = 0):
+        """Run ``steps`` server updates through the scheduler.
+
+        Returns (final state, history) where history holds one dict per
+        server update: the step metrics (host-synced once, at the end of the
+        run — not per round) plus the round's simulation fields. The full
+        `Trace` is kept in ``self.last_trace``.
+        """
         state = self.init_state(key)
+        device_metrics: List[Dict[str, jax.Array]] = []
+
+        def execute(update_idx: int, participants: Sequence[Arrival],
+                    weights: Sequence[float]) -> Dict:
+            nonlocal state
+            round_keys = {}
+            parts = []
+            for a in participants:
+                rk = round_keys.setdefault(
+                    a.version, jax.random.fold_in(key, a.version + 1))
+                parts.append(self.client_batch_for(a.client, rk))
+            batch = self.stack_batches(parts)
+            prev = state
+            state, metrics = self._step(prev, batch)
+            w = float(np.mean(weights)) if weights else 1.0
+            if w != 1.0:
+                # staleness-discounted server update (FedBuff, cohort-level):
+                # params <- params_old + w * delta
+                state = TrainState(
+                    params=jax.tree.map(lambda p0, p1: p0 + w * (p1 - p0),
+                                        prev.params, state.params),
+                    opt_state=state.opt_state, step=state.step)
+            device_metrics.append(metrics)
+            if log_every and update_idx % log_every == 0:
+                # the only mid-run host sync, at the caller-chosen cadence
+                logger.info("step %d: loss=%.4f", update_idx,
+                            float(metrics.get("loss", 0.0)))
+            return metrics
+
+        scheduler = Scheduler(fleet=self.fleet, policy=self.policy,
+                              client_step_seconds=self.client_step_seconds,
+                              server_step_seconds=self.server_step_seconds,
+                              seed=self.seed)
+        uplink, downlink = self.measure_round_bytes(
+            state, jax.random.fold_in(key, 0))
+        trace = scheduler.run(
+            steps, sample_cohort=lambda rd: sample_clients(
+                self._rng, self.data.num_clients, self.cohort),
+            uplink_bytes=uplink, downlink_bytes=downlink, execute=execute)
+
+        # one blocking transfer for the whole run
+        host_metrics = jax.device_get(device_metrics)
         history: List[Dict[str, float]] = []
-        for t in range(steps):
-            state, metrics = self.round(state, jax.random.fold_in(key, t + 1))
-            rec = {k: float(v) for k, v in metrics.items()}
-            rec["step"] = t
-            history.append(rec)
-            if log_every and t % log_every == 0:
-                print(f"step {t}: loss={rec.get('loss', 0):.4f}")
+        it = iter(host_metrics)
+        for rec in trace:
+            floats = {k: float(v) for k, v in next(it).items()} \
+                if rec.metrics else {}
+            rec.metrics = floats
+            entry = dict(floats, step=rec.round, t_start=rec.t_start,
+                         t_end=rec.t_end, uplink_bytes=rec.uplink_bytes,
+                         downlink_bytes=rec.downlink_bytes,
+                         participants=len(rec.participants),
+                         dropped=len(rec.dropped))
+            history.append(entry)
+        self.last_trace = trace
         return state, history

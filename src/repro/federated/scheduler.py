@@ -1,0 +1,301 @@
+"""Virtual-clock event scheduler for heterogeneous federated rounds.
+
+The scheduler owns *time and participation*; it never touches model math.
+Each round it asks the caller for a cohort, simulates every client's
+round trip on the virtual clock —
+
+    downlink(broadcast) -> local compute x multiplier -> uplink(payload)
+
+— draws dropouts, applies a participation ``Policy`` to decide which
+uploads the server aggregates and when the round ends, and then invokes
+the caller's ``execute`` hook with the surviving participants. The hook
+runs the actual (jitted) training update; the scheduler records what the
+wire and the clock saw into a `Trace`.
+
+Policies
+--------
+  * ``FullSync``       — wait for every non-dropped upload (the classic
+                         synchronous round; the pre-subsystem behavior
+                         under the IDEAL profile).
+  * ``DropSlowestK``   — over-provision and cut the k slowest uploads
+                         (bounded-straggler synchronous FL).
+  * ``Deadline``       — hard per-round wall-clock budget; whatever
+                         missed it is dropped.
+  * ``AsyncBuffer``    — FedBuff-style asynchrony: clients run
+                         continuously, the server updates whenever
+                         ``buffer_size`` uploads have accumulated,
+                         weighting the aggregate by a staleness discount.
+                         (The discount is applied at cohort granularity —
+                         the mean of the per-contribution weights scales
+                         the fused server update; exact FedBuff when all
+                         buffered contributions share one staleness, e.g.
+                         under uniform fleets.)
+
+Determinism: given the same seed, fleet, policy and cohort stream, the
+event loop (a heapq keyed on (time, sequence number)) produces an
+identical trace — asserted by tests/test_scheduler.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import logging
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+logger = logging.getLogger(__name__)
+
+from repro.federated.network import ClientProfile
+from repro.federated.trace import RoundRecord, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One completed client upload as seen by the server."""
+    client: int
+    version: int        # server model version the client computed against
+    t_arrival: float    # sim seconds when the upload finished
+
+
+# ---------------------------------------------------------------------------
+# participation policies
+# ---------------------------------------------------------------------------
+
+class FullSync:
+    """Aggregate every upload that was not lost to dropout."""
+    name = "full_sync"
+
+    def split(self, arrivals: List[Arrival], t_start: float):
+        t_end = max((a.t_arrival for a in arrivals), default=t_start)
+        return list(arrivals), [], t_end
+
+
+class DropSlowestK:
+    """Cut the k slowest uploads; the round closes with the survivors."""
+
+    def __init__(self, k: int):
+        if k < 0:
+            raise ValueError("k must be >= 0")
+        self.k = k
+        self.name = f"drop_slowest_{k}"
+
+    def split(self, arrivals: List[Arrival], t_start: float):
+        ordered = sorted(arrivals, key=lambda a: a.t_arrival)
+        keep = max(len(ordered) - self.k, 1) if ordered else 0
+        survivors, cut = ordered[:keep], ordered[keep:]
+        t_end = survivors[-1].t_arrival if survivors else t_start
+        return survivors, cut, t_end
+
+
+class Deadline:
+    """Hard wall-clock budget per round; late uploads are dropped."""
+
+    def __init__(self, seconds: float):
+        if seconds <= 0:
+            raise ValueError("deadline must be positive")
+        self.seconds = seconds
+        self.name = f"deadline_{seconds:g}s"
+
+    def split(self, arrivals: List[Arrival], t_start: float):
+        cutoff = t_start + self.seconds
+        survivors = [a for a in arrivals if a.t_arrival <= cutoff]
+        cut = [a for a in arrivals if a.t_arrival > cutoff]
+        if cut:
+            t_end = cutoff
+        else:
+            t_end = max((a.t_arrival for a in survivors), default=cutoff)
+        return survivors, cut, t_end
+
+
+class AsyncBuffer:
+    """FedBuff-style async aggregation (Nguyen et al. 2022).
+
+    The server updates every ``buffer_size`` arrivals; each contribution
+    is discounted by ``staleness_weight(staleness)`` where staleness is
+    the number of server updates that happened since the client pulled
+    its model. The default ``1/sqrt(1+s)`` is FedBuff's polynomial decay.
+    """
+
+    def __init__(self, buffer_size: int = 4,
+                 staleness_weight: Optional[Callable[[int], float]] = None):
+        if buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        self.buffer_size = buffer_size
+        self.staleness_weight = staleness_weight or \
+            (lambda s: 1.0 / math.sqrt(1.0 + s))
+        self.name = f"async_buffer_{buffer_size}"
+
+
+Policy = Any  # FullSync | DropSlowestK | Deadline | AsyncBuffer
+
+# execute(update_idx, participants, staleness_weights) -> metrics (may stay
+# on device; the caller converts at end of run)
+ExecuteFn = Callable[[int, Sequence[Arrival], Sequence[float]], Dict]
+
+
+@dataclasses.dataclass
+class Scheduler:
+    """Event-driven round driver over a fixed fleet of `ClientProfile`s.
+
+    ``uplink_bytes`` / ``downlink_bytes`` are the measured per-client
+    payload sizes (wire-codec bytes for FedLite, raw activation bytes for
+    SplitFed, parameter bytes for FedAvg) — static per run because the
+    payload layout is shape-determined.
+    """
+    fleet: Sequence[ClientProfile]
+    policy: Policy = dataclasses.field(default_factory=FullSync)
+    client_step_seconds: float = 1.0
+    server_step_seconds: float = 0.0
+    seed: int = 0
+
+    def run(self, rounds: int, *,
+            sample_cohort: Callable[[int], Sequence[int]],
+            uplink_bytes: int,
+            downlink_bytes: int,
+            execute: ExecuteFn) -> Trace:
+        if isinstance(self.policy, AsyncBuffer):
+            return self._run_async(rounds, sample_cohort, uplink_bytes,
+                                   downlink_bytes, execute)
+        return self._run_sync(rounds, sample_cohort, uplink_bytes,
+                              downlink_bytes, execute)
+
+    # ---- shared -----------------------------------------------------------
+    def _round_trip(self, p: ClientProfile, uplink_bytes: int,
+                    downlink_bytes: int) -> float:
+        return (p.downlink_seconds(downlink_bytes)
+                + p.compute_seconds(self.client_step_seconds)
+                + p.uplink_seconds(uplink_bytes))
+
+    # ---- synchronous policies ---------------------------------------------
+    def _run_sync(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
+                  execute) -> Trace:
+        rng = np.random.default_rng(self.seed)
+        trace = Trace()
+        t = 0.0
+        for rd in range(rounds):
+            ids = [int(c) for c in sample_cohort(rd)]
+            dropouts: List[int] = []
+            heap: List[Tuple[float, int, int]] = []
+            for seq, cid in enumerate(ids):
+                p = self.fleet[cid]
+                if rng.random() < p.dropout_prob:
+                    dropouts.append(cid)
+                    continue
+                dt = self._round_trip(p, uplink_bytes, downlink_bytes)
+                heapq.heappush(heap, (t + dt, seq, cid))
+            arrivals: List[Arrival] = []
+            while heap:
+                t_arr, _, cid = heapq.heappop(heap)
+                arrivals.append(Arrival(cid, rd, t_arr))
+            survivors, cut, t_end = self.policy.split(arrivals, t)
+            t_end += self.server_step_seconds
+            metrics = execute(rd, survivors, [1.0] * len(survivors)) \
+                if survivors else {}
+            trace.append(RoundRecord(
+                round=rd, t_start=t, t_end=t_end,
+                participants=tuple(a.client for a in survivors),
+                dropped=tuple(dropouts) + tuple(a.client for a in cut),
+                # every completed upload crossed the wire, aggregated or not
+                uplink_bytes=len(arrivals) * uplink_bytes,
+                downlink_bytes=len(ids) * downlink_bytes,
+                staleness=(0,) * len(survivors),
+                metrics=metrics))
+            t = t_end
+        return trace
+
+    # ---- async buffer ------------------------------------------------------
+    def _run_async(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
+                   execute) -> Trace:
+        """FedBuff loop: the initial cohort sets the concurrency; every
+        completed (or dropped) slot is refilled with the next client from a
+        fresh-cohort stream, so the whole population keeps rotating through
+        the in-flight set just as sync rounds resample each round."""
+        policy: AsyncBuffer = self.policy
+        rng = np.random.default_rng(self.seed)
+        trace = Trace()
+        # heap entries: (t_arrival, seq, client, version, was_dropped)
+        heap: List[Tuple[float, int, int, int, bool]] = []
+        seq = 0
+        version = 0
+        wave = 0
+        queue: List[int] = []
+
+        def next_client() -> int:
+            nonlocal wave
+            if not queue:
+                queue.extend(int(c) for c in sample_cohort(wave))
+                wave += 1
+            return queue.pop(0)
+
+        def dispatch(cid: int, t: float, ver: int):
+            nonlocal seq
+            p = self.fleet[cid]
+            dropped = bool(rng.random() < p.dropout_prob)
+            dt = self._round_trip(p, uplink_bytes, downlink_bytes)
+            heapq.heappush(heap, (t + dt, seq, cid, ver, dropped))
+            seq += 1
+
+        for cid in sample_cohort(wave):
+            dispatch(int(cid), 0.0, version)
+        wave += 1
+
+        buffer: List[Arrival] = []
+        dropped_accum: List[int] = []
+        dispatches = len(heap)   # downlink pushes since last flush
+        t_round_start = 0.0
+        updates = 0
+        # termination guard: a fleet that only ever drops out would otherwise
+        # spin the virtual clock forever without filling the buffer
+        consecutive_drops = 0
+        max_consecutive_drops = max(1000, 10 * len(self.fleet))
+        while updates < rounds and heap:
+            t_arr, _, cid, ver, was_dropped = heapq.heappop(heap)
+            if was_dropped:
+                dropped_accum.append(cid)
+                dispatch(next_client(), t_arr, version)
+                dispatches += 1
+                consecutive_drops += 1
+                if consecutive_drops >= max_consecutive_drops:
+                    logger.warning(
+                        "async scheduler: %d consecutive dropouts with no "
+                        "progress after %d updates; stopping early",
+                        consecutive_drops, updates)
+                    break
+                continue
+            consecutive_drops = 0
+            buffer.append(Arrival(cid, ver, t_arr))
+            if len(buffer) >= policy.buffer_size:
+                t_end = t_arr + self.server_step_seconds
+                staleness = [version - a.version for a in buffer]
+                weights = [policy.staleness_weight(s) for s in staleness]
+                metrics = execute(updates, buffer, weights)
+                version += 1
+                dispatch(next_client(), t_arr, version)  # slot sees new model
+                dispatches += 1
+                trace.append(RoundRecord(
+                    round=updates, t_start=t_round_start, t_end=t_end,
+                    participants=tuple(a.client for a in buffer),
+                    dropped=tuple(dropped_accum),
+                    uplink_bytes=len(buffer) * uplink_bytes,
+                    downlink_bytes=dispatches * downlink_bytes,
+                    staleness=tuple(staleness),
+                    metrics=metrics))
+                buffer, dropped_accum, dispatches = [], [], 0
+                t_round_start = t_end
+                updates += 1
+            else:
+                dispatch(next_client(), t_arr, version)
+                dispatches += 1
+        return trace
+
+
+def ideal_scheduler(num_clients: int, *, seed: int = 0) -> Scheduler:
+    """The pre-subsystem simulation: identical infinitely-fast clients,
+    no dropout, full synchronization — bitwise-preserves the original
+    `FederatedTrainer` trajectory (tests/test_scheduler.py)."""
+    from repro.federated.network import uniform_fleet
+    return Scheduler(fleet=uniform_fleet(num_clients), policy=FullSync(),
+                     client_step_seconds=1.0, seed=seed)

@@ -1,0 +1,101 @@
+"""Per-round simulation traces: what the virtual clock and the wire saw.
+
+A `Trace` is the measurement product of a scheduler run — one
+``RoundRecord`` per *server update* (synchronous round or async buffer
+flush) carrying simulated wall-clock, measured uplink/downlink bytes,
+which clients participated, which were dropped (dropout or straggler
+policy), and the staleness of each contribution. Benchmarks reduce a
+trace to the paper-§5 trade-off curves: time-to-target-loss and
+bytes-per-round under heterogeneous fleets.
+
+Everything here is plain Python/numpy — records are host-side bookkeeping
+written by the scheduler's event loop, never traced by jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """One server update as observed by the virtual clock."""
+    round: int                       # server update index
+    t_start: float                   # sim seconds when the round was dispatched
+    t_end: float                     # sim seconds when the server updated
+    participants: Tuple[int, ...]    # client ids whose uploads were aggregated
+    dropped: Tuple[int, ...]         # sampled but lost: dropout or straggler cut
+    uplink_bytes: int                # measured bytes that crossed client->server
+    downlink_bytes: int              # server->client bytes (broadcast + cut grads)
+    staleness: Tuple[int, ...] = ()  # per-participant model-version lag (async)
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+
+@dataclasses.dataclass
+class Trace:
+    """Ordered round records plus whole-run reductions."""
+    records: List[RoundRecord] = dataclasses.field(default_factory=list)
+
+    def append(self, rec: RoundRecord) -> None:
+        self.records.append(rec)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+    # ---- reductions --------------------------------------------------------
+    @property
+    def simulated_seconds(self) -> float:
+        return self.records[-1].t_end if self.records else 0.0
+
+    @property
+    def total_uplink_bytes(self) -> int:
+        return sum(r.uplink_bytes for r in self.records)
+
+    @property
+    def total_downlink_bytes(self) -> int:
+        return sum(r.downlink_bytes for r in self.records)
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(len(r.dropped) for r in self.records)
+
+    @property
+    def mean_staleness(self) -> float:
+        s = [x for r in self.records for x in r.staleness]
+        return sum(s) / len(s) if s else 0.0
+
+    def time_to_target(self, target: float, key: str = "loss") -> Optional[float]:
+        """Sim seconds until ``metrics[key]`` first reaches <= target."""
+        for r in self.records:
+            if key in r.metrics and r.metrics[key] <= target:
+                return r.t_end
+        return None
+
+    def bytes_to_target(self, target: float, key: str = "loss") -> Optional[int]:
+        """Cumulative uplink bytes until ``metrics[key]`` first <= target."""
+        total = 0
+        for r in self.records:
+            total += r.uplink_bytes
+            if key in r.metrics and r.metrics[key] <= target:
+                return total
+        return None
+
+    def summary(self) -> Dict[str, float]:
+        n = max(len(self.records), 1)
+        return {
+            "rounds": len(self.records),
+            "simulated_seconds": self.simulated_seconds,
+            "uplink_bytes": self.total_uplink_bytes,
+            "downlink_bytes": self.total_downlink_bytes,
+            "uplink_bytes_per_round": self.total_uplink_bytes / n,
+            "stragglers_dropped": self.total_dropped,
+            "mean_staleness": self.mean_staleness,
+        }

@@ -1,0 +1,194 @@
+"""Bit-packed wire codec for the cut-layer uplink (`QuantizedBatch`).
+
+This is the byte layout that would actually cross the client->server WAN
+link, so measured payload sizes replace/validate the analytic
+``PQConfig.message_bits`` accounting:
+
+    +--------+---------------------+------------------------------+
+    | header | codebooks           | codes                        |
+    | 24 B   | R*L*(d/q) * w bytes | ceil(N*q*b / 8) bytes        |
+    +--------+---------------------+------------------------------+
+
+  * header — magic ``FLW1``, version, codebook dtype, bits-per-code b,
+    and the shape tuple (n, d, q, R, L); see ``_HEADER``.
+  * codebooks — the (R, L, d/q) centroid tensor at wire width ``w``
+    (fp16 by default; fp32/bf16 supported for lossless round-trips of
+    higher-precision codebooks).
+  * codes — all R*(q/R)*N cluster indices packed at b = ceil(log2 L)
+    bits each into one little-endian bit stream (L=1 needs no codes).
+
+The codec is bit-exact: ``decode_bytes(encode_bytes(qb))`` reproduces the
+codes exactly and the codebooks exactly at the wire dtype, and
+``encode_bytes`` of the decoded batch is byte-identical (idempotent).
+The only lossy step is the explicit codebook dtype cast, which is the
+transport decision the paper's φ accounts for — not a codec artifact.
+
+Total size is ``wire_bits(cfg, n, d)`` bits, which differs from
+``PQConfig.message_bits(n, d, phi_bits=w)`` only by the 24-byte header
+plus <1 byte of code-stream padding (asserted in tests/test_wire.py).
+
+Everything here is host-side numpy — the codec runs outside jit, on the
+simulation's measurement path, never inside the train step.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import NamedTuple, Union
+
+import numpy as np
+
+from repro.core.quantizer import PQConfig, QuantizedBatch, bits_per_code
+
+# magic, version, dtype code, bits-per-code, flags, n, d, q, R, L
+_HEADER = struct.Struct("<4sBBBBIIHHI")
+HEADER_BYTES = _HEADER.size  # 24
+_MAGIC = b"FLW1"
+_VERSION = 1
+
+_DTYPE_CODES = {"float16": 1, "float32": 2, "bfloat16": 3}
+_CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+def _np_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        import jax.numpy as jnp  # ml_dtypes-backed bfloat16 numpy dtype
+        return np.dtype(jnp.bfloat16)
+    return np.dtype(name)
+
+
+def _dtype_name(dtype) -> str:
+    name = np.dtype(dtype).name if np.dtype(dtype).name in _DTYPE_CODES \
+        else str(dtype)
+    if name not in _DTYPE_CODES:
+        raise ValueError(f"unsupported wire codebook dtype {dtype!r}; "
+                         f"supported: {sorted(_DTYPE_CODES)}")
+    return name
+
+
+class WireBatch(NamedTuple):
+    """Decoded wire payload: everything the server needs to dequantize."""
+    codes: np.ndarray      # (R, (q/R)*n) int32, values in [0, L)
+    codebooks: np.ndarray  # (R, L, d/q) at the wire dtype
+    n: int                 # activation vectors in the batch
+    d: int                 # activation dim
+
+
+# ---------------------------------------------------------------------------
+# bit packing
+# ---------------------------------------------------------------------------
+
+def _pack_codes(codes: np.ndarray, bits: int) -> bytes:
+    """Pack int codes at ``bits`` bits each, LSB-first, into a byte stream."""
+    if bits == 0:
+        return b""
+    flat = codes.reshape(-1).astype(np.uint32)
+    bitmat = (flat[:, None] >> np.arange(bits, dtype=np.uint32)) & 1
+    return np.packbits(bitmat.astype(np.uint8).reshape(-1),
+                       bitorder="little").tobytes()
+
+
+def _unpack_codes(buf: bytes, count: int, bits: int) -> np.ndarray:
+    if bits == 0:
+        return np.zeros(count, np.int32)
+    flat = np.unpackbits(np.frombuffer(buf, np.uint8),
+                         count=count * bits, bitorder="little")
+    weights = (np.uint32(1) << np.arange(bits, dtype=np.uint32))
+    return (flat.reshape(count, bits).astype(np.uint32) * weights) \
+        .sum(axis=1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# encode / decode
+# ---------------------------------------------------------------------------
+
+def encode_bytes(qb: QuantizedBatch,
+                 codebook_dtype: Union[str, np.dtype] = "float16") -> bytes:
+    """Serialize a ``QuantizedBatch`` to the wire layout above.
+
+    The geometry (n, d, q, R, L) is derived from the batch itself, so the
+    payload is self-describing — ``decode_bytes`` needs no side channel.
+    """
+    codes = np.asarray(qb.codes)
+    cbs = np.asarray(qb.codebooks)
+    if codes.ndim != 2 or cbs.ndim != 3 or codes.shape[0] != cbs.shape[0]:
+        raise ValueError(f"malformed QuantizedBatch: codes {codes.shape}, "
+                         f"codebooks {cbs.shape}")
+    r, m = codes.shape
+    _, num_clusters, dsub = cbs.shape
+    d = int(qb.dequantized.shape[-1])
+    n = int(qb.dequantized.size // d)
+    if r * m % max(n, 1) or (r * m // max(n, 1)) * dsub != d:
+        raise ValueError(f"code/codebook geometry inconsistent with n={n}, d={d}")
+    q = r * m // n
+
+    name = _dtype_name(codebook_dtype)
+    bits = bits_per_code(num_clusters)
+    if codes.min(initial=0) < 0 or codes.max(initial=0) >= num_clusters:
+        raise ValueError("codes out of range [0, L)")
+    header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES[name], bits, 0,
+                          n, d, q, r, num_clusters)
+    return header + cbs.astype(_np_dtype(name)).tobytes() \
+        + _pack_codes(codes, bits)
+
+
+def decode_bytes(payload: bytes) -> WireBatch:
+    """Parse a wire payload back into codes + codebooks, bit-exactly."""
+    if len(payload) < HEADER_BYTES:
+        raise ValueError(f"payload shorter than header ({len(payload)} B)")
+    (magic, version, dtype_code, bits, _flags,
+     n, d, q, r, num_clusters) = _HEADER.unpack_from(payload)
+    if magic != _MAGIC:
+        raise ValueError(f"bad magic {magic!r}")
+    if version != _VERSION:
+        raise ValueError(f"unsupported wire version {version}")
+    dtype = _np_dtype(_CODE_DTYPES[dtype_code])
+    dsub = d // q
+    cb_bytes = r * num_clusters * dsub * dtype.itemsize
+    m = (q // r) * n
+    code_bytes = _code_stream_bytes(r * m, bits)
+    expected = HEADER_BYTES + cb_bytes + code_bytes
+    if len(payload) != expected:
+        raise ValueError(f"payload is {len(payload)} B, expected {expected}")
+    cbs = np.frombuffer(payload, dtype, count=r * num_clusters * dsub,
+                        offset=HEADER_BYTES).reshape(r, num_clusters, dsub)
+    codes = _unpack_codes(payload[HEADER_BYTES + cb_bytes:], r * m, bits) \
+        .reshape(r, m)
+    return WireBatch(codes=codes, codebooks=cbs, n=n, d=d)
+
+
+def dequantize(wb: WireBatch) -> np.ndarray:
+    """Server-side reconstruction z̃ = codebook gather, (n, d).
+
+    Inverts the grouping of ``quantizer._to_groups``: group r holds
+    subvector positions [r·q/R, (r+1)·q/R) of every example.
+    """
+    r, m = wb.codes.shape
+    dsub = wb.codebooks.shape[-1]
+    q = r * m // wb.n
+    groups = wb.codebooks[np.arange(r)[:, None], wb.codes]  # (R, M, dsub)
+    sub = groups.reshape(q, wb.n, dsub).transpose(1, 0, 2)
+    return sub.reshape(wb.n, wb.d)
+
+
+# ---------------------------------------------------------------------------
+# analytic size accounting (must match len(encode_bytes(...)) exactly)
+# ---------------------------------------------------------------------------
+
+def _code_stream_bytes(num_codes: int, bits: int) -> int:
+    return (num_codes * bits + 7) // 8
+
+
+def wire_bits(cfg: PQConfig, n: int, d: int,
+              codebook_dtype: Union[str, np.dtype] = "float16") -> int:
+    """Exact wire payload size in bits for an (n, d) batch under ``cfg``.
+
+    ``tests/test_wire.py`` asserts this equals ``8 * len(encode_bytes(...))``
+    and stays within ``HEADER_BYTES*8 + 7`` bits of
+    ``cfg.message_bits(n, d, phi_bits=<wire width>)``.
+    """
+    w = _np_dtype(_dtype_name(codebook_dtype)).itemsize * 8
+    r, num_clusters, dsub = cfg.codebook_shape(d)
+    cb_bits = r * num_clusters * dsub * w
+    code_bits = 8 * _code_stream_bytes(cfg.num_codes(n), cfg.bits_per_code)
+    return HEADER_BYTES * 8 + cb_bits + code_bits

@@ -80,8 +80,10 @@ def test_comm_report_matches_paper_table1():
     model_d = 9216
     B = 20
     # monkey-typed: FemnistCNN has no .cfg.d_model; build the report manually
+    # at the paper's fixed accounting width phi=64 (tree_bits would otherwise
+    # derive phi=32 from the fp32 params)
     from repro.core.split import tree_bits
-    client_bits = tree_bits(params["client"])
+    client_bits = tree_bits(params["client"], phi_bits=64)
     act_bits = 64 * model_d * B
     msg_bits = pq.message_bits(B, model_d)
     # paper's 490x on the activation payload
@@ -90,6 +92,29 @@ def test_comm_report_matches_paper_table1():
     splitfed = client_bits + act_bits
     fedlite = client_bits + msg_bits
     assert splitfed / fedlite > 9  # paper: "about 10x smaller overall uplink"
+
+
+def test_tree_bits_derives_width_from_dtype():
+    """Default accounting counts each leaf at its actual dtype width; an
+    explicit phi_bits reproduces the paper's fixed-width model."""
+    from repro.core.split import tree_bits
+    tree = {"a": jnp.zeros((4,), jnp.float32), "b": jnp.zeros((2,), jnp.bfloat16)}
+    assert tree_bits(tree) == 4 * 32 + 2 * 16
+    assert tree_bits(tree, phi_bits=64) == 6 * 64
+
+
+def test_comm_report_default_phi_tracks_dtype():
+    """With phi unset, the report accounts fp32 activations at 32 bits."""
+    from repro.configs.base import get_arch
+    from repro.launch.specs import make_model
+    cfg = get_arch("llama3_8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rep32 = comm_report(model, params, tokens_per_client=64)
+    rep64 = comm_report(model, params, tokens_per_client=64, phi_bits=64)
+    assert rep32["phi_bits"] == 32.0 and rep64["phi_bits"] == 64.0
+    assert rep64["splitfed_activation_bits"] == \
+        2 * rep32["splitfed_activation_bits"]
 
 
 def test_split_summary_client_fraction():

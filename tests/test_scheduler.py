@@ -1,0 +1,250 @@
+"""Scheduler/network/runtime tests: determinism, bitwise ideal-profile
+reproduction, participation policies, and weighted client sampling."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.quantizer import PQConfig
+from repro.data.synthetic import make_federated_image_data
+from repro.federated import (AsyncBuffer, ClientProfile, Deadline,
+                             DropSlowestK, FederatedTrainer, FullSync,
+                             Scheduler, lognormal_fleet, mobile_fleet,
+                             sample_clients, uniform_fleet, weighted_average)
+from repro.models.paper_models import FemnistCNN
+from repro.optim import sgd
+
+
+def _trainer(policy=None, fleet=None, seed=0, quantize=True):
+    data = make_federated_image_data(num_clients=8, seed=0)
+    pq = PQConfig(num_subvectors=288, num_clusters=4, kmeans_iters=2) \
+        if quantize else None
+    model = FemnistCNN(pq=pq, lam=1e-4)
+    return FederatedTrainer(model, sgd(0.03), data, cohort=4, client_batch=8,
+                            quantize=quantize, seed=seed,
+                            fleet=fleet, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# bitwise preservation of the pre-subsystem behavior
+# ---------------------------------------------------------------------------
+
+def test_ideal_profile_reproduces_manual_loop_bitwise():
+    """run() under the default (ideal, full-sync) scheduler == the plain
+    round()-by-round() synchronous loop, bit for bit."""
+    key = jax.random.PRNGKey(0)
+    tr = _trainer()
+    state, hist = tr.run(5, key)
+
+    tr2 = _trainer()
+    st = tr2.init_state(key)
+    losses = []
+    for t in range(5):
+        st, m = tr2.round(st, jax.random.fold_in(key, t + 1))
+        losses.append(float(m["loss"]))
+
+    assert [h["loss"] for h in hist] == losses
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(st.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ideal_trace_is_free_of_network_cost():
+    tr = _trainer()
+    _, hist = tr.run(3, jax.random.PRNGKey(0))
+    trace = tr.last_trace
+    # ideal clients: each round costs exactly the reference compute time
+    assert trace.simulated_seconds == pytest.approx(3 * tr.client_step_seconds)
+    assert trace.total_dropped == 0
+    assert all(len(r.participants) == 4 for r in trace)
+    assert trace.total_uplink_bytes > 0  # measured, not analytic
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def _stub_run(fleet, policy, seed=0, rounds=6, cohort=4, cohort_ids=None):
+    """Drive the scheduler with a stub executor (no model math).
+
+    ``cohort_ids=None`` draws a fixed random cohort stream (deterministic
+    across calls); an explicit list pins every round's cohort."""
+    rng = np.random.default_rng(123)
+    cohorts = [rng.choice(len(fleet), cohort, replace=False)
+               for _ in range(rounds + 64)]
+    sample = (lambda rd: cohort_ids) if cohort_ids is not None \
+        else (lambda rd: cohorts[rd])
+    sched = Scheduler(fleet=fleet, policy=policy, seed=seed)
+    return sched.run(rounds, sample_cohort=sample,
+                     uplink_bytes=1000, downlink_bytes=4000,
+                     execute=lambda i, parts, w: {"loss": float(len(parts))})
+
+
+@pytest.mark.parametrize("policy", [
+    FullSync(), DropSlowestK(1), Deadline(8.0), AsyncBuffer(3)])
+def test_same_seed_same_profiles_identical_trace(policy):
+    fleet = mobile_fleet(8, flaky_fraction=0.5, seed=7)
+    t1 = _stub_run(fleet, policy)
+    t2 = _stub_run(fleet, policy)
+    assert len(t1) == len(t2)
+    for a, b in zip(t1, t2):
+        assert a == b  # RoundRecord dataclass equality: every field
+
+
+def test_different_seed_changes_dropout_draws():
+    fleet = uniform_fleet(8, ClientProfile(dropout_prob=0.5))
+    t1 = _stub_run(fleet, FullSync(), seed=0)
+    t2 = _stub_run(fleet, FullSync(), seed=1)
+    assert [r.dropped for r in t1] != [r.dropped for r in t2]
+
+
+# ---------------------------------------------------------------------------
+# policy semantics
+# ---------------------------------------------------------------------------
+
+def _two_speed_fleet(n=8, slow_every=2):
+    """Even clients fast, odd clients 10x slower."""
+    return [ClientProfile(compute_multiplier=10.0 if i % slow_every else 1.0)
+            for i in range(n)]
+
+
+def test_full_sync_waits_for_slowest():
+    trace = _stub_run(_two_speed_fleet(), FullSync(), rounds=3,
+                      cohort_ids=[0, 1, 2, 3])
+    for r in trace:
+        assert r.duration == pytest.approx(10.0)  # gated by slow clients
+        assert len(r.participants) == 4
+
+
+def test_drop_slowest_k_cuts_stragglers():
+    trace = _stub_run(_two_speed_fleet(), DropSlowestK(2), rounds=3,
+                      cohort_ids=[0, 1, 2, 3])
+    for r in trace:
+        assert len(r.participants) == 2
+        assert len(r.dropped) == 2
+        # slow clients (odd ids) never survive a 2-fast/2-slow cohort
+        assert all(c % 2 == 0 for c in r.participants)
+        assert r.duration == pytest.approx(1.0)
+        # cut uploads still crossed the wire: all 4 count against the link
+        assert r.uplink_bytes == 4 * 1000
+
+
+def test_deadline_drops_late_uploads():
+    trace = _stub_run(_two_speed_fleet(), Deadline(5.0), rounds=3,
+                      cohort_ids=[0, 1, 2, 3])
+    for r in trace:
+        assert r.duration == pytest.approx(5.0)  # closed at the budget
+        assert all(c % 2 == 0 for c in r.participants)
+
+
+def test_async_buffer_flushes_and_tracks_staleness():
+    fleet = _two_speed_fleet()
+    trace = _stub_run(fleet, AsyncBuffer(2), rounds=6,
+                      cohort_ids=[0, 1, 2, 3])
+    assert len(trace) == 6
+    for r in trace:
+        assert len(r.participants) == 2
+        assert len(r.staleness) == 2
+    # fast clients lap the slow ones -> some contribution must be stale
+    assert trace.mean_staleness > 0
+
+
+def test_async_all_dropout_terminates():
+    """A fleet that always drops out must not spin the event loop forever:
+    the guard stops the run with an empty trace."""
+    fleet = uniform_fleet(4, ClientProfile(dropout_prob=1.0))
+    trace = _stub_run(fleet, AsyncBuffer(2), rounds=3, cohort_ids=[0, 1, 2, 3])
+    assert len(trace) == 0
+
+
+def test_async_rotates_through_population():
+    """Async redispatch draws fresh cohorts: with a round-robin cohort
+    stream, clients beyond the initial in-flight set must participate."""
+    fleet = uniform_fleet(8)
+    rng = np.random.default_rng(5)
+    sched = Scheduler(fleet=fleet, policy=AsyncBuffer(2), seed=0)
+    trace = sched.run(12, sample_cohort=lambda w: rng.choice(8, 4, replace=False),
+                      uplink_bytes=10, downlink_bytes=10,
+                      execute=lambda i, parts, w: {"loss": 0.0})
+    seen = {c for r in trace for c in r.participants}
+    assert len(seen) > 4
+
+
+def test_dropout_only_round_executes_no_step():
+    fleet = uniform_fleet(8, ClientProfile(dropout_prob=1.0))
+    calls = []
+    sched = Scheduler(fleet=fleet, policy=FullSync(), seed=0)
+    trace = sched.run(2, sample_cohort=lambda rd: [0, 1],
+                      uplink_bytes=10, downlink_bytes=10,
+                      execute=lambda *a: calls.append(a) or {})
+    assert not calls
+    assert all(r.participants == () and len(r.dropped) == 2 for r in trace)
+    assert trace.total_uplink_bytes == 0
+
+
+def test_heterogeneous_fleet_still_trains():
+    """End-to-end: lognormal fleet + drop-slowest policy reduces the loss
+    and records nonzero network time."""
+    fleet = lognormal_fleet(8, median_uplink_bps=2e6, seed=3)
+    tr = _trainer(policy=DropSlowestK(1), fleet=fleet)
+    state, hist = tr.run(6, jax.random.PRNGKey(0))
+    losses = [h["loss"] for h in hist if "loss" in h]
+    assert losses and np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+    trace = tr.last_trace
+    assert trace.total_dropped >= len(trace)  # one cut per round minimum
+    assert trace.simulated_seconds > 6 * tr.client_step_seconds
+
+
+def test_async_trainer_run_smoke():
+    tr = _trainer(policy=AsyncBuffer(2))
+    state, hist = tr.run(4, jax.random.PRNGKey(0))
+    assert len(hist) == 4
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert all(len(r.staleness) == 2 for r in tr.last_trace)
+
+
+# ---------------------------------------------------------------------------
+# weighted client sampling (FedAvg baseline)
+# ---------------------------------------------------------------------------
+
+def test_weighted_sampling_tracks_client_weights():
+    rng = np.random.default_rng(0)
+    num_clients, cohort = 16, 4
+    w = np.arange(1, num_clients + 1, dtype=np.float64)
+    w /= w.sum()
+    counts = np.zeros(num_clients)
+    draws = 3000
+    for _ in range(draws):
+        ids = sample_clients(rng, num_clients, cohort, weights=w)
+        assert len(ids) == cohort and len(set(ids.tolist())) == cohort
+        counts[ids] += 1
+    freq = counts / draws
+    # inclusion frequency increases with p_i and beats uniform for the
+    # heaviest clients (exact inclusion probs are not proportional under
+    # without-replacement sampling, but monotonicity must hold)
+    assert freq[-1] > freq[0]
+    assert np.corrcoef(w, freq)[0, 1] > 0.95
+
+
+def test_weighted_average_renormalizes_under_partial_participation():
+    """Aggregation weights of a PARTIAL cohort must be renormalized to sum
+    to one — the p_i of unsampled clients cannot leak into the average."""
+    trees = [{"a": np.full((2,), 1.0)}, {"a": np.full((2,), 3.0)}]
+    # raw p_i sum to 0.5: a partial cohort of a larger population
+    out = weighted_average(trees, [0.2, 0.3])
+    np.testing.assert_allclose(out["a"], 0.4 * 1.0 + 0.6 * 3.0)
+
+
+def test_uniform_sampling_unchanged():
+    rng = np.random.default_rng(0)
+    ids = sample_clients(rng, 10, 4)
+    assert len(ids) == 4 and len(set(ids.tolist())) == 4
+    assert sample_clients(rng, 3, 8).shape == (3,)
+
+
+def test_sample_clients_rejects_bad_weights():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        sample_clients(rng, 4, 2, weights=np.array([1.0, -1.0, 1.0, 1.0]))
+    with pytest.raises(ValueError):
+        sample_clients(rng, 4, 2, weights=np.zeros(3))

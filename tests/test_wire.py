@@ -1,0 +1,107 @@
+"""Wire codec tests: bit-exact round-trips and measured-vs-analytic bytes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import PQConfig, QuantizedBatch, quantize
+from repro.federated import wire
+
+
+def _qb(backend="jnp", q=8, L=5, r=1, n=24, d=64, seed=0):
+    cfg = PQConfig(num_subvectors=q, num_clusters=L, num_groups=r,
+                   kmeans_iters=3, backend=backend)
+    z = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    return quantize(z, cfg), cfg, z
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_roundtrip_bit_exact(backend):
+    """decode(encode(qb)) reproduces codes/codebooks/z̃ exactly at fp32."""
+    qb, cfg, _ = _qb(backend=backend)
+    buf = wire.encode_bytes(qb, "float32")
+    wb = wire.decode_bytes(buf)
+    np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
+    np.testing.assert_array_equal(wb.codebooks, np.asarray(qb.codebooks))
+    # server-side reconstruction == the training-path dequantized batch
+    np.testing.assert_array_equal(wire.dequantize(wb),
+                                  np.asarray(qb.dequantized))
+
+
+def test_roundtrip_idempotent_bytes():
+    """Re-encoding a decoded payload is byte-identical (codec is lossless)."""
+    qb, cfg, _ = _qb()
+    buf = wire.encode_bytes(qb, "float16")
+    wb = wire.decode_bytes(buf)
+    qb2 = QuantizedBatch(
+        dequantized=jnp.asarray(wire.dequantize(wb).astype(np.float32)),
+        codes=jnp.asarray(wb.codes),
+        codebooks=jnp.asarray(np.asarray(wb.codebooks)),
+        distortion=qb.distortion, residual=qb.residual)
+    assert wire.encode_bytes(qb2, "float16") == buf
+
+
+def test_fp16_codebooks_are_exact_cast():
+    qb, cfg, _ = _qb()
+    wb = wire.decode_bytes(wire.encode_bytes(qb, "float16"))
+    np.testing.assert_array_equal(
+        wb.codebooks, np.asarray(qb.codebooks).astype(np.float16))
+    np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
+
+
+@pytest.mark.parametrize("q,L,r,n,d", [
+    (8, 5, 1, 24, 64),      # paper default R=1
+    (8, 4, 4, 16, 64),      # grouped codebooks R>1
+    (1, 7, 1, 32, 16),      # whole-vector K-means
+    (4, 1, 1, 10, 32),      # L=1: codebook only, zero code bits
+    (16, 256, 2, 12, 64),   # 8-bit codes (byte-aligned)
+    (6, 3, 3, 9, 48),       # non-power-of-two L, odd sizes
+])
+def test_measured_bytes_match_analytic(q, L, r, n, d):
+    """len(encode_bytes) == wire_bits exactly, and wire_bits is within the
+    documented header overhead of PQConfig.message_bits at the wire φ."""
+    cfg = PQConfig(num_subvectors=q, num_clusters=L, num_groups=r,
+                   kmeans_iters=2)
+    z = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    qb = quantize(z, cfg)
+    buf = wire.encode_bytes(qb, "float16")
+    assert len(buf) * 8 == wire.wire_bits(cfg, n, d, "float16")
+    overhead = wire.wire_bits(cfg, n, d, "float16") \
+        - cfg.message_bits(n, d, phi_bits=16)
+    # header + sub-byte padding of the packed code stream, nothing else
+    assert 0 <= overhead <= wire.HEADER_BYTES * 8 + 7
+
+
+def test_multidim_leading_shape():
+    """(B, S, d) activations flatten to n=B*S vectors on the wire."""
+    cfg = PQConfig(num_subvectors=4, num_clusters=4, kmeans_iters=2)
+    z = jax.random.normal(jax.random.PRNGKey(2), (3, 5, 32))
+    qb = quantize(z, cfg)
+    wb = wire.decode_bytes(wire.encode_bytes(qb, "float32"))
+    assert wb.n == 15 and wb.d == 32
+    np.testing.assert_array_equal(
+        wire.dequantize(wb), np.asarray(qb.dequantized).reshape(15, 32))
+
+
+def test_bits_per_code_metadata():
+    assert PQConfig(num_subvectors=1, num_clusters=1).bits_per_code == 0
+    assert PQConfig(num_subvectors=1, num_clusters=2).bits_per_code == 1
+    assert PQConfig(num_subvectors=1, num_clusters=5).bits_per_code == 3
+    assert PQConfig(num_subvectors=1, num_clusters=256).bits_per_code == 8
+    cfg = PQConfig(num_subvectors=8, num_clusters=16, num_groups=2)
+    assert cfg.codebook_shape(64) == (2, 16, 8)
+    assert cfg.num_codes(10) == 80
+    # codes_bits stays consistent with the metadata it is derived from
+    assert cfg.codes_bits(10) == 80 * 4
+
+
+def test_decode_rejects_garbage():
+    with pytest.raises(ValueError):
+        wire.decode_bytes(b"nope")
+    qb, _, _ = _qb()
+    buf = wire.encode_bytes(qb)
+    with pytest.raises(ValueError):
+        wire.decode_bytes(b"XXXX" + buf[4:])       # bad magic
+    with pytest.raises(ValueError):
+        wire.decode_bytes(buf[:-1])                # truncated

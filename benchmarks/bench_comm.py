@@ -14,14 +14,22 @@ The ``femnist_wire_measured`` row closes the loop analytically asserted
 above: it pushes a real quantized batch through the bit-packed wire codec
 (``federated/wire.py``) and reports measured payload bytes next to
 ``PQConfig.message_bits`` at the wire width — they must agree to within
-the 24-byte header (+ <1 byte of code padding)."""
+the 24-byte header (+ <1 byte of code padding).
+
+The ``femnist_downlink_measured`` row does the same for the OTHER
+direction: the cut-layer gradient message through the acceptance downlink
+codec (``chain:topk(k=0.1)+scalarq(bits=8)``) vs the dense fp32 baseline —
+the measured reduction must be >= 8x and agree with the compressor's
+``analytic_bits`` to within the per-stage headers."""
 
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.base import get_arch
+from repro.core.compressors import make_compressor
 from repro.core.fedlite import comm_report
 from repro.core.quantizer import PQConfig, quantize
 from repro.core.split import split_summary
@@ -74,6 +82,34 @@ def run(fast: bool = True):
         "header_overhead_bits": overhead_bits,
         "measured_compression_vs_fp32": round(
             32 * d * B / (len(payload) * 8), 1),
+    })
+
+    # ---- measured DOWNLINK bytes: compressed gradient vs dense -------------
+    # the cut-layer gradient message (shape-alike stand-in: the activations)
+    # through the acceptance-criteria chain codec; dense fp32 is what the
+    # pre-refactor downlink shipped every round
+    dl = make_compressor("chain:topk(k=0.1)+scalarq(bits=8)")
+    comp = dl.compress(acts)
+    dl_payload = dl.wire_payload(comp)
+    dense_bytes = acts.size * 4
+    dl_analytic = dl.analytic_bits(B, d, phi_bits=32)
+    reduction = dense_bytes / len(dl_payload)
+    assert reduction >= 8.0, \
+        f"downlink reduction {reduction:.2f}x below the 8x acceptance bar"
+    # wire overhead: one header per chain stage + <1 B packing pad each
+    dl_overhead = len(dl_payload) * 8 - dl_analytic
+    assert 0 <= dl_overhead <= 2 * (wire.HEADER_BYTES * 8 + 7), \
+        f"downlink wire overhead {dl_overhead} bits exceeds stage headers"
+    rec = wire.reconstruct(wire.decode_payload(dl_payload))
+    assert np.isfinite(rec).all()
+    rows.append({
+        "name": "femnist_downlink_measured_b20_topk0.1_sq8",
+        "us_per_call": 0.0,
+        "measured_bytes": len(dl_payload),
+        "dense_bytes": dense_bytes,
+        "analytic_bits": dl_analytic,
+        "header_overhead_bits": dl_overhead,
+        "measured_downlink_reduction": round(reduction, 1),
     })
 
     # ---- big-arch accounting (smoke-size params, dtype-derived phi) --------

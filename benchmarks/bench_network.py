@@ -14,10 +14,15 @@ Scenario axes (fast mode keeps a 2x3 slice; --full runs the grid):
     broadband (heavy straggler tail), wired/mobile mixture with dropout.
   * policy      — full sync, drop-slowest-k, per-round deadline,
     FedBuff-style async buffer.
+  * downlink    — (``--downlink`` / ``downlink=True``) the server->client
+    gradient codec: dense vs ``chain:topk(k=0.1)+scalarq(bits=8)``. The
+    compressed cell must show >= 8x measured downlink-bytes reduction
+    (asserted — acceptance criterion) and still reach the round-0-derived
+    target loss.
 
 Emitted per row: simulated seconds, simulated time and uplink bytes to
-reach the target loss (0.9x the round-0 loss), measured uplink MB/round,
-stragglers dropped, mean staleness.
+reach the target loss (0.9x the round-0 loss), measured uplink AND
+downlink MB/round, stragglers dropped, mean staleness.
 """
 
 from __future__ import annotations
@@ -38,6 +43,8 @@ from repro.optim import sgd
 NUM_CLIENTS = 16
 COHORT = 4
 CLIENT_BATCH = 8
+
+DOWNLINK_CHAIN = "chain:topk(k=0.1)+scalarq(bits=8)"
 
 
 def _fleets():
@@ -76,7 +83,42 @@ FAST_SCENARIOS = [
 ]
 
 
-def run(fast: bool = True):
+def _run_cell(data, fleet, policy, pq, downlink, rounds, fast):
+    model = FemnistCNN(pq=pq, lam=1e-4)
+    trainer = FederatedTrainer(
+        model, sgd(10 ** -1.5), data, cohort=COHORT,
+        client_batch=CLIENT_BATCH, quantize=pq is not None,
+        fleet=fleet, policy=policy, downlink_compressor=downlink)
+    t0 = time.perf_counter()
+    state, hist = trainer.run(rounds, jax.random.PRNGKey(0))
+    wall_us = (time.perf_counter() - t0) * 1e6 / max(rounds, 1)
+    trace = trainer.last_trace
+    losses = [h["loss"] for h in hist if "loss" in h]
+    # fast mode only runs 8 rounds; use a reachable smoke target
+    factor = 0.93 if fast else 0.9
+    target = factor * losses[0] if losses else float("nan")
+    t_target = trace.time_to_target(target)
+    b_target = trace.bytes_to_target(target)
+    s = trace.summary()
+    row = {
+        "us_per_call": wall_us,
+        "sim_seconds": round(s["simulated_seconds"], 2),
+        "sim_seconds_to_target": None if t_target is None
+        else round(t_target, 2),
+        "uplink_mb_to_target": None if b_target is None
+        else round(b_target / 1e6, 4),
+        "uplink_mb_per_round": round(s["uplink_bytes_per_round"] / 1e6, 4),
+        "downlink_mb_per_round": round(
+            s["downlink_bytes_per_round"] / 1e6, 4),
+        "stragglers_dropped": s["stragglers_dropped"],
+        "mean_staleness": round(s["mean_staleness"], 2),
+        "final_loss": round(losses[-1], 4) if losses else None,
+        "reached_target": t_target is not None,
+    }
+    return row, trainer, state
+
+
+def run(fast: bool = True, downlink: bool = False):
     data = make_federated_image_data(num_clients=NUM_CLIENTS, seed=0)
     fleets, policies, pqs = _fleets(), _policies(), _compressions()
     scenarios = FAST_SCENARIOS if fast else \
@@ -86,44 +128,54 @@ def run(fast: bool = True):
     rows = []
     for fleet_name, policy_name in scenarios:
         for pq_name, pq in pqs.items():
-            model = FemnistCNN(pq=pq, lam=1e-4)
-            trainer = FederatedTrainer(
-                model, sgd(10 ** -1.5), data, cohort=COHORT,
-                client_batch=CLIENT_BATCH, quantize=pq is not None,
-                fleet=fleets[fleet_name], policy=policies[policy_name])
-            t0 = time.perf_counter()
-            _, hist = trainer.run(rounds, jax.random.PRNGKey(0))
-            wall_us = (time.perf_counter() - t0) * 1e6 / max(rounds, 1)
-            trace = trainer.last_trace
-            losses = [h["loss"] for h in hist if "loss" in h]
-            # fast mode only runs 8 rounds; use a reachable smoke target
-            factor = 0.93 if fast else 0.9
-            target = factor * losses[0] if losses else float("nan")
-            t_target = trace.time_to_target(target)
-            b_target = trace.bytes_to_target(target)
-            s = trace.summary()
-            rows.append({
-                "name": f"{fleet_name}_{policy_name}_{pq_name}",
-                "us_per_call": wall_us,
-                "sim_seconds": round(s["simulated_seconds"], 2),
-                "sim_seconds_to_target": None if t_target is None
-                else round(t_target, 2),
-                "uplink_mb_to_target": None if b_target is None
-                else round(b_target / 1e6, 4),
-                "uplink_mb_per_round": round(
-                    s["uplink_bytes_per_round"] / 1e6, 4),
-                "downlink_mb_per_round": round(
-                    s["downlink_bytes"] / max(len(trace), 1) / 1e6, 4),
-                "stragglers_dropped": s["stragglers_dropped"],
-                "mean_staleness": round(s["mean_staleness"], 2),
-                "final_loss": round(losses[-1], 4) if losses else None,
-            })
+            row, _, _ = _run_cell(data, fleets[fleet_name],
+                                  policies[policy_name], pq, None,
+                                  rounds, fast)
+            rows.append(dict(
+                {"name": f"{fleet_name}_{policy_name}_{pq_name}"}, **row))
+
+    if downlink:
+        rows.extend(run_downlink_sweep(data, fleets, policies, rounds, fast))
     return rows
 
 
-def main(fast: bool = True):
-    emit(run(fast), "network_tradeoff")
+def run_downlink_sweep(data, fleets, policies, rounds, fast):
+    """The --downlink dimension: dense vs chained gradient codec on the
+    default (ideal, full-sync) fleet, FedLite uplink. The compressed cell
+    must cut measured downlink bytes >= 8x (acceptance criterion)."""
+    pq = _compressions()["fedlite_q1152_L2"]
+    rows = []
+    per_round = {}
+    for dl_name, dl in [("dense", None), ("topk0.1_sq8", DOWNLINK_CHAIN)]:
+        row, trainer, state = _run_cell(
+            data, fleets["ideal"], policies["full_sync"], pq, dl,
+            rounds, fast)
+        per_round[dl_name] = row["downlink_mb_per_round"]
+        rows.append(dict(
+            {"name": f"downlink_{dl_name}_ideal_full_sync_fedlite"}, **row))
+    reduction = per_round["dense"] / max(per_round["topk0.1_sq8"], 1e-12)
+    assert reduction >= 8.0, \
+        f"measured downlink reduction {reduction:.2f}x below the 8x bar"
+    assert rows[-1]["reached_target"], \
+        "compressed-downlink run failed to reach the target loss"
+    rows.append({
+        "name": "downlink_claim",
+        "us_per_call": 0.0,
+        "measured_downlink_reduction": round(reduction, 1),
+        "compressed_reached_target": rows[-1]["reached_target"],
+    })
+    return rows
+
+
+def main(fast: bool = True, downlink: bool = False):
+    emit(run(fast, downlink=downlink), "network_tradeoff")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--downlink", action="store_true",
+                    help="sweep the downlink gradient codec too")
+    args = ap.parse_args()
+    main(fast=not args.full, downlink=args.downlink)

@@ -14,6 +14,13 @@ reporting measured wire bytes and simulated wall-clock:
 
     PYTHONPATH=src python examples/femnist_federated_training.py \
         --rounds 100 --fleet mobile --policy deadline
+
+Downlink-compressed variant (the cut-layer gradient message through a
+`core/compressors.py` codec instead of dense fp32):
+
+    PYTHONPATH=src python examples/femnist_federated_training.py \
+        --rounds 100 --fleet lognormal \
+        --downlink "chain:topk(k=0.1)+scalarq(bits=8)"
 """
 
 import argparse
@@ -58,6 +65,9 @@ def main():
                     help="client population for the virtual-clock scheduler")
     ap.add_argument("--policy", choices=sorted(POLICIES), default="full_sync",
                     help="round participation policy")
+    ap.add_argument("--downlink", default=None, metavar="SPEC",
+                    help="downlink gradient codec spec, e.g. "
+                         "'chain:topk(k=0.1)+scalarq(bits=8)'")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -71,9 +81,11 @@ def main():
                                client_batch=args.client_batch,
                                quantize=not args.baseline,
                                fleet=FLEETS[args.fleet](num_clients),
-                               policy=POLICIES[args.policy]())
+                               policy=POLICIES[args.policy](),
+                               downlink_compressor=args.downlink)
     eval_batch = data.eval_batch(jax.random.PRNGKey(99), 512)
-    heterogeneous = args.fleet != "ideal" or args.policy != "full_sync"
+    heterogeneous = args.fleet != "ideal" or args.policy != "full_sync" \
+        or args.downlink is not None
 
     if heterogeneous:
         # scheduled run: measured wire bytes + simulated wall-clock per round

@@ -66,6 +66,12 @@ class ArchConfig:
     # FedLite split --------------------------------------------------------
     cut_periods: int = 1              # client keeps embed + this many periods
     pq_backend: str = "auto"          # quantizer backend: jnp | pallas | auto
+    # per-direction cut-layer codecs (core/compressors.py spec strings):
+    # uplink "pq" = the paper's grouped PQ (built by launch/specs.default_pq),
+    # "none" = raw activations (SplitFed). Downlink compresses the
+    # server->client gradient message, e.g. "chain:topk(k=0.1)+scalarq(bits=8)"
+    uplink_compressor: str = "pq"
+    downlink_compressor: str = "none"
     # numerics / memory -----------------------------------------------------
     dtype: str = "float32"            # activation/compute dtype
     param_dtype: str = "float32"

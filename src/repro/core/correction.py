@@ -13,6 +13,10 @@ model toward activations with low quantization error.
 Implemented as a ``jax.custom_vjp``: the forward pass runs the grouped PQ and
 emits z̃; the backward pass adds λ·(z − z̃) to the incoming cotangent. λ = 0
 recovers the naive straight-through estimator the paper ablates against.
+
+This module is the PQ-specialized fast path; the direction-agnostic
+generalization (same VJP structure over any registered codec, plus the
+downlink hook) lives in ``core/compressors.py``.
 """
 
 from __future__ import annotations
@@ -84,14 +88,16 @@ quantize_with_correction_stats.defvjp(_sfwd, _sbwd)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
 def quantize_downlink(z: jax.Array, cfg: PQConfig) -> jax.Array:
-    """Beyond-paper: compress the *downlink* (server -> client gradient).
+    """Beyond-paper: compress the *downlink* (server -> client gradient)
+    with the grouped PQ.
 
-    FedLite compresses only the uplink; the gradient message returned to the
-    client is the same B·d floats. This layer is the identity in the forward
-    pass and applies the grouped PQ to the activation COTANGENT in the
-    backward pass — the client receives a codebook+codes message instead of
-    raw gradients, making the link symmetric. Same per-client (vmap-outside)
-    usage as quantize_with_correction.
+    Kept for backward compatibility; the general mechanism is
+    ``core/compressors.compress_downlink``, which accepts ANY registered
+    `CutCompressor` (topk, scalarq, chains, ...) — this function is the
+    ``compressor=PQCompressor(cfg)`` special case. Identity in the forward
+    pass; the backward pass applies the codec to the activation COTANGENT,
+    so the client receives a compressed payload instead of raw gradients.
+    Same per-client (vmap-outside) usage as quantize_with_correction.
     """
     return z
 

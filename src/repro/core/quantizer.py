@@ -17,6 +17,19 @@ Special cases recovered exactly:
   * R = q  (q > 1)    → vanilla product quantization (codebook per position)
   * R = 1  (default)  → the paper's best trade-off: one shared codebook
 
+Where this sits in the compressor stack
+---------------------------------------
+This module is the PQ *math*; it is one codec among several. The
+direction-agnostic registry in ``core/compressors.py`` wraps it as the
+``"pq"`` `CutCompressor` (the uplink default — what runs at the cut in
+`TransformerLM.cut_activation` and the paper models), next to ``none``,
+``topk``, ``scalarq`` and ``chain`` (the downlink gradient codecs). Analytic
+bits come from ``PQConfig.message_bits`` here (the paper's §4.1 cost model,
+φdRL/q + Bq·log2 L); *measured* bits come from the tagged wire codec in
+``federated/wire.py``, which serializes the `QuantizedBatch` produced here
+as a ``pq`` payload (fp16 codebooks + ceil(log2 L)-bit packed codes) and
+must agree with the analytic count to within the 24 B header.
+
 Selecting a quantizer backend
 -----------------------------
 ``PQConfig.backend`` picks the compute backend for both the Lloyd
@@ -30,11 +43,13 @@ iterations and the final encode (assignment + dequantize + residual):
 
 The final encode is *fused*: one pass produces the dequantized activations
 z̃, the residual z − z̃ (consumed by the gradient-corrected VJP in
-``core/correction.py`` — it is NOT recomputed there), and the integer codes.
-On TPU this is one HBM read + two writes per element instead of the three
-sweeps (assign, gather, subtract) of the naive path. Backends live in a
-registry (``repro.core.kmeans.register_backend``) so new substrates can be
-added without touching this module.
+``core/correction.py`` and ``core/compressors.compress_with_correction`` —
+it is NOT recomputed there), and the integer codes. On TPU this is one HBM
+read + two writes per element instead of the three sweeps (assign, gather,
+subtract) of the naive path. Backends live in a registry
+(``repro.core.kmeans.register_backend``) so new substrates can be added
+without touching this module; the scalarq compressor's quantize/pack
+kernels (``repro.kernels.scalar_quant``) ride the same registry resolution.
 """
 
 from __future__ import annotations

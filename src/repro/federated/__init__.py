@@ -1,17 +1,31 @@
 """Heterogeneous federated simulation subsystem.
 
-The paper's value proposition is what FedLite saves on the client->server
-uplink; this package *measures* it instead of only asserting it
-analytically. Four layers, composed by `FederatedTrainer`:
+The paper's value proposition is what FedLite saves on the wire; this
+package *measures* it — in BOTH directions — instead of only asserting it
+analytically. Compression is direction-agnostic: each side of the cut runs
+a codec from the `core/compressors.py` registry (``none`` | ``pq`` |
+``topk`` | ``scalarq`` | ``chain:...``), configured per direction on
+`FederatedTrainer` (``uplink_compressor`` / ``downlink_compressor`` spec
+strings) or on `ArchConfig` for the big archs. The uplink default is the
+paper's grouped PQ; the downlink default is dense — the measured traffic
+that motivated the stack, since the cut-layer *gradient* dominates
+bytes-on-the-wire once the uplink is PQ-compressed.
+
+Five layers, composed by `FederatedTrainer`:
 
   runtime.py    — the algorithm drivers (FedAvg / SplitFed / FedLite round
                   logic, cohort sampling — uniform or p_i-weighted — and
                   weighted aggregation). `FederatedTrainer.run` executes
-                  training rounds through the scheduler below.
-  wire.py       — the bit-packed wire codec for the cut-layer payload: a
-                  `QuantizedBatch` becomes header + fp16 codebooks +
-                  ceil(log2 L)-bit packed codes. Bit-exact round-trip;
-                  measured byte counts validate `PQConfig.message_bits`.
+                  training rounds through the scheduler below; it installs
+                  the downlink codec into the model's VJP and measures
+                  both directions' payloads through the wire codec.
+  wire.py       — the versioned tagged wire codec: every payload is a 24 B
+                  header + a kind-specific body (``pq`` codebooks+packed
+                  codes, ``dense`` tensors, ``sparse`` top-k indices with
+                  optionally *nested* values, ``scalar`` b-bit packed
+                  codes). Bit-exact round-trips; unknown versions/kinds are
+                  rejected loudly; measured bytes validate the compressors'
+                  ``analytic_bits``.
   network.py    — `ClientProfile` (asymmetric bandwidth, latency, compute
                   multiplier, dropout) and fleet samplers: `uniform_fleet`
                   (the IDEAL pre-subsystem clients), `lognormal_fleet`
@@ -19,17 +33,20 @@ analytically. Four layers, composed by `FederatedTrainer`:
                   mixture).
   scheduler.py  — a virtual-clock event loop dispatching rounds under a
                   participation policy: `FullSync`, `DropSlowestK`,
-                  `Deadline`, or FedBuff-style `AsyncBuffer` with
-                  staleness-weighted aggregation.
+                  `Deadline`, or FedBuff-style `AsyncBuffer` whose
+                  staleness weights are applied per contribution
+                  (``core/fedlite.make_weighted_step``).
   trace.py      — per-round `RoundRecord`s (simulated wall-clock, measured
-                  uplink/downlink bytes, stragglers dropped, staleness)
-                  collected into a `Trace` with time-to-target /
-                  bytes-to-target reductions.
+                  uplink AND downlink bytes, stragglers dropped, staleness)
+                  collected into a `Trace` with per-direction
+                  time/bytes-to-target reductions and run-level codec
+                  metadata in ``Trace.meta``.
 
-The ideal fleet + `FullSync` reproduces the original synchronous
-simulation bitwise (tests/test_scheduler.py); heterogeneous fleets turn
-the same trainer into the paper-§5 trade-off harness driven by
-``benchmarks/bench_network.py``.
+The ideal fleet + `FullSync` + dense downlink reproduces the original
+synchronous simulation bitwise (tests/test_scheduler.py,
+tests/test_compressors.py); heterogeneous fleets and per-direction codecs
+turn the same trainer into the paper-§5 trade-off harness driven by
+``benchmarks/bench_network.py`` (``--downlink`` sweeps the gradient codec).
 """
 
 from repro.federated.network import (

@@ -35,11 +35,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fedlite import TrainState, make_train_step
-from repro.core.quantizer import quantize
+from repro.core.compressors import (CutCompressor, NoneCompressor,
+                                    PQCompressor, make_compressor)
+from repro.core.fedlite import TrainState, make_train_step, make_weighted_step
 from repro.data.synthetic import FederatedDataset
 from repro.federated.network import ClientProfile, uniform_fleet, validate_fleet
-from repro.federated.scheduler import Arrival, FullSync, Policy, Scheduler
+from repro.federated.scheduler import (Arrival, AsyncBuffer, FullSync,
+                                       Policy, Scheduler)
 from repro.federated.trace import Trace
 from repro.optim import Optimizer
 
@@ -162,10 +164,53 @@ class FederatedTrainer:
     client_step_seconds: float = 1.0
     server_step_seconds: float = 0.0
     codebook_wire_dtype: str = "float16"
+    # per-direction cut-layer codecs (spec string or CutCompressor; see
+    # core/compressors.py). Uplink default: the model's PQ ("pq") or dense
+    # ("none"). Downlink default: whatever the model carries, else dense.
+    # A downlink spec is installed INTO the model (dataclasses.replace), so
+    # the training VJP and the measured wire bytes use the same codec.
+    uplink_compressor: Any = None
+    downlink_compressor: Any = None
 
     def __post_init__(self):
+        pq = getattr(self.model, "pq", None)
+        dl = make_compressor(self.downlink_compressor, pq=pq)
+        if dl is not None and hasattr(self.model, "downlink_compressor"):
+            self.model = dataclasses.replace(self.model,
+                                             downlink_compressor=dl)
+        self.downlink = dl if dl is not None else \
+            getattr(self.model, "downlink_compressor", None)
+        # the uplink codec is INSTALLED into the model (or must match what
+        # the model already runs) so the trained path and the measured
+        # traffic never diverge
+        up = make_compressor(self.uplink_compressor, pq=pq)
+        if up is None:
+            up = PQCompressor(pq) if (self.quantize and pq is not None) \
+                else NoneCompressor()
+        elif isinstance(up, NoneCompressor):
+            if self.quantize and pq is not None:
+                raise ValueError(
+                    "uplink_compressor='none' conflicts with the model's PQ "
+                    "config; pass quantize=False or a model without pq")
+        elif isinstance(up, PQCompressor):
+            if not self.quantize:
+                raise ValueError("uplink_compressor='pq' needs quantize=True")
+            if up.cfg != pq:
+                self.model = dataclasses.replace(self.model, pq=up.cfg)
+        elif hasattr(self.model, "uplink_compressor"):
+            if not self.quantize:
+                raise ValueError(
+                    f"uplink_compressor={up.spec!r} needs quantize=True")
+            self.model = dataclasses.replace(self.model, uplink_compressor=up)
+        else:
+            raise ValueError(
+                f"{type(self.model).__name__} has no uplink_compressor "
+                f"field; only 'pq'/'none' uplinks are realizable for it")
+        self.uplink = up
         self._step = make_train_step(self.model, self.optimizer,
                                      quantize=self.quantize, donate=False)
+        self._weighted_step = make_weighted_step(self.model, self.optimizer,
+                                                 quantize=self.quantize)
         self._rng = np.random.default_rng(self.seed)
         if self.fleet is None:
             self.fleet = uniform_fleet(self.data.num_clients)
@@ -200,31 +245,49 @@ class FederatedTrainer:
     def measure_round_bytes(self, state: TrainState, key: jax.Array):
         """Measured per-client (uplink, downlink) payload bytes for a round.
 
-        One real client forward feeds both numbers. Uplink — FedLite: the
-        PQ-encoded activations through the wire codec (`federated/wire.py`);
-        the payload layout is shape-determined, so a single measurement is
-        exact for every round. SplitFed: the raw activation tensor at its
-        native dtype. Downlink — the cut-layer activation gradient, same
-        shape/dtype as the uncompressed activations.
+        One real client forward feeds both directions. Uplink: the cut
+        activations through the configured uplink codec and the tagged wire
+        format (`federated/wire.py`). Downlink: the cut-layer gradient
+        message through the downlink codec — its payload layout is
+        shape-determined (indices count, code widths), so the activation
+        tensor stands in for the gradient and a single measurement is exact
+        for every round. ``none`` on either side measures the dense tensor
+        at its native dtype.
         """
         batch = self.data.sample_batch(0, key, self.client_batch,
                                        **(self.batch_kwargs or {}))
         acts = self.model.client_forward(state.params["client"], batch)
         if isinstance(acts, tuple):   # TransformerLM returns (acts, aux...)
             acts = acts[0]
-        raw_bytes = acts.size * jnp.dtype(acts.dtype).itemsize
-        pq = getattr(self.model, "pq", None)
-        if not self.quantize or pq is None:
-            return raw_bytes, raw_bytes
-        from repro.federated.wire import encode_bytes
-        qb = quantize(acts.reshape(-1, acts.shape[-1]), pq)
-        return len(encode_bytes(qb, self.codebook_wire_dtype)), raw_bytes
+        acts2 = acts.reshape(-1, acts.shape[-1])
+        raw_bytes = int(acts.size * jnp.dtype(acts.dtype).itemsize)
+
+        def measured(compressor: Optional[CutCompressor]) -> int:
+            # quantize=False disables the cut codecs in the training VJP
+            # (models gate on it), so the measurement must stay dense too
+            if not self.quantize or compressor is None \
+                    or compressor.name == "none":
+                return raw_bytes
+            comp = compressor.compress(acts2)
+            return len(compressor.wire_payload(
+                comp, value_dtype=self.codebook_wire_dtype))
+
+        return measured(self.uplink), measured(self.downlink)
 
     def measure_uplink_bytes(self, state: TrainState, key: jax.Array) -> int:
         return self.measure_round_bytes(state, key)[0]
 
     def measure_downlink_bytes(self, state: TrainState, key: jax.Array) -> int:
         return self.measure_round_bytes(state, key)[1]
+
+    def measure_dense_bytes(self, state: TrainState, key: jax.Array) -> int:
+        """The uncompressed cut tensor (either direction's dense baseline)."""
+        batch = self.data.sample_batch(0, key, self.client_batch,
+                                       **(self.batch_kwargs or {}))
+        acts = self.model.client_forward(state.params["client"], batch)
+        if isinstance(acts, tuple):
+            acts = acts[0]
+        return int(acts.size * jnp.dtype(acts.dtype).itemsize)
 
     # ---- scheduled run -----------------------------------------------------
     def run(self, steps: int, key: jax.Array, log_every: int = 0):
@@ -247,17 +310,20 @@ class FederatedTrainer:
                 rk = round_keys.setdefault(
                     a.version, jax.random.fold_in(key, a.version + 1))
                 parts.append(self.client_batch_for(a.client, rk))
-            batch = self.stack_batches(parts)
-            prev = state
-            state, metrics = self._step(prev, batch)
-            w = float(np.mean(weights)) if weights else 1.0
-            if w != 1.0:
-                # staleness-discounted server update (FedBuff, cohort-level):
-                # params <- params_old + w * delta
-                state = TrainState(
-                    params=jax.tree.map(lambda p0, p1: p0 + w * (p1 - p0),
-                                        prev.params, state.params),
-                    opt_state=state.opt_state, step=state.step)
+            if isinstance(self.policy, AsyncBuffer):
+                # per-contribution staleness weighting (FedBuff): each
+                # client's gradient split is discounted by ITS OWN staleness
+                # before aggregation — not by the cohort mean. Every async
+                # flush takes this path (even all-fresh buffers) so the
+                # per-client quantization granularity is consistent across
+                # a run instead of flipping with the staleness draw.
+                batches = jax.tree.map(
+                    lambda *xs: jnp.stack(xs, axis=0), *parts)
+                state, metrics = self._weighted_step(
+                    state, batches, jnp.asarray(weights, jnp.float32))
+            else:
+                batch = self.stack_batches(parts)
+                state, metrics = self._step(state, batch)
             device_metrics.append(metrics)
             if log_every and update_idx % log_every == 0:
                 # the only mid-run host sync, at the caller-chosen cadence
@@ -275,6 +341,15 @@ class FederatedTrainer:
             steps, sample_cohort=lambda rd: sample_clients(
                 self._rng, self.data.num_clients, self.cohort),
             uplink_bytes=uplink, downlink_bytes=downlink, execute=execute)
+        dl = self.downlink
+        trace.meta.update({
+            "uplink_compressor": getattr(self.uplink, "spec",
+                                         self.uplink.name),
+            "downlink_compressor": "none" if dl is None
+            else getattr(dl, "spec", dl.name),
+            "uplink_bytes_per_client": uplink,
+            "downlink_bytes_per_client": downlink,
+        })
 
         # one blocking transfer for the whole run
         host_metrics = jax.device_get(device_metrics)

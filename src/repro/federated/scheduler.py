@@ -23,13 +23,12 @@ Policies
                          missed it is dropped.
   * ``AsyncBuffer``    — FedBuff-style asynchrony: clients run
                          continuously, the server updates whenever
-                         ``buffer_size`` uploads have accumulated,
-                         weighting the aggregate by a staleness discount.
-                         (The discount is applied at cohort granularity —
-                         the mean of the per-contribution weights scales
-                         the fused server update; exact FedBuff when all
-                         buffered contributions share one staleness, e.g.
-                         under uniform fleets.)
+                         ``buffer_size`` uploads have accumulated. The
+                         scheduler hands ``execute`` one staleness weight
+                         PER CONTRIBUTION; `FederatedTrainer` applies them
+                         per client gradient split (exact FedBuff — see
+                         ``core/fedlite.make_weighted_step``), not as a
+                         cohort-mean scale on the fused update.
 
 Determinism: given the same seed, fleet, policy and cohort stream, the
 event loop (a heapq keyed on (time, sequence number)) produces an
@@ -117,6 +116,9 @@ class AsyncBuffer:
     is discounted by ``staleness_weight(staleness)`` where staleness is
     the number of server updates that happened since the client pulled
     its model. The default ``1/sqrt(1+s)`` is FedBuff's polynomial decay.
+    The weights are delivered per contribution (aligned with the buffer
+    order) so the executor can discount each client's gradient split by
+    its own staleness.
     """
 
     def __init__(self, buffer_size: int = 4,

@@ -38,8 +38,14 @@ class RoundRecord:
 
 @dataclasses.dataclass
 class Trace:
-    """Ordered round records plus whole-run reductions."""
+    """Ordered round records plus whole-run reductions.
+
+    ``meta`` carries run-level context the records do not repeat per row:
+    which codec each direction ran (`core/compressors.py` spec names) and
+    the measured per-client payload bytes behind the per-round totals.
+    """
     records: List[RoundRecord] = dataclasses.field(default_factory=list)
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     def append(self, rec: RoundRecord) -> None:
         self.records.append(rec)
@@ -79,23 +85,37 @@ class Trace:
                 return r.t_end
         return None
 
-    def bytes_to_target(self, target: float, key: str = "loss") -> Optional[int]:
-        """Cumulative uplink bytes until ``metrics[key]`` first <= target."""
+    def bytes_to_target(self, target: float, key: str = "loss",
+                        direction: str = "uplink") -> Optional[int]:
+        """Cumulative wire bytes until ``metrics[key]`` first <= target.
+
+        ``direction``: "uplink" (the paper's axis), "downlink", or "total"
+        (both directions — the whole WAN bill)."""
+        if direction not in ("uplink", "downlink", "total"):
+            raise ValueError(f"unknown direction {direction!r}")
         total = 0
         for r in self.records:
-            total += r.uplink_bytes
+            if direction in ("uplink", "total"):
+                total += r.uplink_bytes
+            if direction in ("downlink", "total"):
+                total += r.downlink_bytes
             if key in r.metrics and r.metrics[key] <= target:
                 return total
         return None
 
     def summary(self) -> Dict[str, float]:
         n = max(len(self.records), 1)
-        return {
+        out = {
             "rounds": len(self.records),
             "simulated_seconds": self.simulated_seconds,
             "uplink_bytes": self.total_uplink_bytes,
             "downlink_bytes": self.total_downlink_bytes,
             "uplink_bytes_per_round": self.total_uplink_bytes / n,
+            "downlink_bytes_per_round": self.total_downlink_bytes / n,
             "stragglers_dropped": self.total_dropped,
             "mean_staleness": self.mean_staleness,
         }
+        for k in ("uplink_compressor", "downlink_compressor"):
+            if k in self.meta:
+                out[k] = self.meta[k]
+        return out

@@ -1,53 +1,77 @@
-"""Bit-packed wire codec for the cut-layer uplink (`QuantizedBatch`).
+"""Versioned, tagged wire codec for cut-layer payloads (both directions).
 
-This is the byte layout that would actually cross the client->server WAN
-link, so measured payload sizes replace/validate the analytic
-``PQConfig.message_bits`` accounting:
+Every payload that crosses the simulated client<->server WAN link is a
+24-byte header followed by a kind-specific body:
 
-    +--------+---------------------+------------------------------+
-    | header | codebooks           | codes                        |
-    | 24 B   | R*L*(d/q) * w bytes | ceil(N*q*b / 8) bytes        |
-    +--------+---------------------+------------------------------+
+    +--------+----------------------------------------------------------+
+    | header | body (kind-specific, see below)                          |
+    | 24 B   |                                                          |
+    +--------+----------------------------------------------------------+
 
-  * header — magic ``FLW1``, version, codebook dtype, bits-per-code b,
-    and the shape tuple (n, d, q, R, L); see ``_HEADER``.
-  * codebooks — the (R, L, d/q) centroid tensor at wire width ``w``
-    (fp16 by default; fp32/bf16 supported for lossless round-trips of
-    higher-precision codebooks).
-  * codes — all R*(q/R)*N cluster indices packed at b = ceil(log2 L)
-    bits each into one little-endian bit stream (L=1 needs no codes).
+  header — magic ``FLW1``, **format version**, value dtype code, bit width,
+  **payload kind**, and the geometry tuple (n, d, q, R, L); see ``_HEADER``.
+  Version-2 payload kinds:
 
-The codec is bit-exact: ``decode_bytes(encode_bytes(qb))`` reproduces the
-codes exactly and the codebooks exactly at the wire dtype, and
-``encode_bytes`` of the decoded batch is byte-identical (idempotent).
-The only lossy step is the explicit codebook dtype cast, which is the
+  * ``pq``     — FedLite's uplink message: (R, L, d/q) codebooks at the wire
+                 dtype + all R·(q/R)·N cluster indices packed at
+                 b = ceil(log2 L) bits (L=1 needs no codes).
+  * ``dense``  — the uncompressed tensor (SplitFed activations, dense
+                 downlink gradients): n·d values at the wire dtype.
+  * ``sparse`` — top-k sparsification: nnz indices into the flattened
+                 tensor packed at ceil(log2 n·d) bits, then either nnz
+                 values at the wire dtype or — when the value dtype code is
+                 0 — a complete *nested* payload carrying the values (how
+                 ``chain:topk+scalarq`` lands on the wire).
+  * ``scalar`` — uniform b-bit quantization: an 8-byte f32 (lo, scale)
+                 range followed by n·d codes packed at b bits.
+
+Unknown versions and kinds are rejected with a clear error — a stale or
+foreign payload fails loudly instead of decoding as garbage. Version-1
+payloads (the PR 2 codec, which only ever carried PQ uplink messages with a
+zero flags byte where the kind now lives) still decode.
+
+The codec is bit-exact: ``decode_payload(encode)`` reproduces every code,
+index and range word exactly, values exactly at the wire dtype, and
+re-encoding a decoded payload is byte-identical (idempotent; asserted in
+tests). The only lossy step is the explicit value dtype cast, which is the
 transport decision the paper's φ accounts for — not a codec artifact.
 
-Total size is ``wire_bits(cfg, n, d)`` bits, which differs from
-``PQConfig.message_bits(n, d, phi_bits=w)`` only by the 24-byte header
-plus <1 byte of code-stream padding (asserted in tests/test_wire.py).
-
 Everything here is host-side numpy — the codec runs outside jit, on the
-simulation's measurement path, never inside the train step.
+simulation's measurement path, never inside the train step. (The b-bit
+code packing also has a Pallas twin for on-device producers:
+``repro.kernels.scalar_quant`` writes the identical little-endian LSB-first
+stream when 32 % b == 0.)
 """
 
 from __future__ import annotations
 
 import struct
-from typing import NamedTuple, Union
+from typing import NamedTuple, Optional, Union
 
 import numpy as np
 
+from repro.core import compressors as comps
 from repro.core.quantizer import PQConfig, QuantizedBatch, bits_per_code
 
-# magic, version, dtype code, bits-per-code, flags, n, d, q, R, L
+# magic, version, dtype code, bit width, payload kind, n, d, q, R, L
 _HEADER = struct.Struct("<4sBBBBIIHHI")
 HEADER_BYTES = _HEADER.size  # 24
 _MAGIC = b"FLW1"
-_VERSION = 1
+_VERSION = 2
+_SUPPORTED_VERSIONS = (1, 2)
 
+KIND_PQ = 0        # == the version-1 flags byte, so v1 payloads parse as pq
+KIND_DENSE = 1
+KIND_SPARSE = 2
+KIND_SCALAR = 3
+_KIND_NAMES = {KIND_PQ: "pq", KIND_DENSE: "dense", KIND_SPARSE: "sparse",
+               KIND_SCALAR: "scalar"}
+
+# value dtype code 0 is reserved: in a sparse payload it means "the values
+# are carried by a nested payload" (chained compressors)
 _DTYPE_CODES = {"float16": 1, "float32": 2, "bfloat16": 3}
 _CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+_NESTED = 0
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -61,17 +85,47 @@ def _dtype_name(dtype) -> str:
     name = np.dtype(dtype).name if np.dtype(dtype).name in _DTYPE_CODES \
         else str(dtype)
     if name not in _DTYPE_CODES:
-        raise ValueError(f"unsupported wire codebook dtype {dtype!r}; "
+        raise ValueError(f"unsupported wire value dtype {dtype!r}; "
                          f"supported: {sorted(_DTYPE_CODES)}")
     return name
 
 
+def _check_header(payload: bytes):
+    if len(payload) < HEADER_BYTES:
+        raise ValueError(f"payload shorter than header ({len(payload)} B)")
+    fields = _HEADER.unpack_from(payload)
+    magic, version, kind = fields[0], fields[1], fields[4]
+    if magic != _MAGIC:
+        raise ValueError(f"bad magic {magic!r}")
+    if version not in _SUPPORTED_VERSIONS:
+        raise ValueError(
+            f"unsupported wire format version {version}; this codec "
+            f"understands versions {_SUPPORTED_VERSIONS} — refusing to "
+            f"decode a stale or foreign payload")
+    if kind not in _KIND_NAMES:
+        raise ValueError(f"unknown payload kind {kind}; known kinds: "
+                         f"{sorted(_KIND_NAMES.values())}")
+    if version == 1 and kind != KIND_PQ:
+        raise ValueError(f"version-1 payloads are always pq; got kind {kind}")
+    return fields
+
+
 class WireBatch(NamedTuple):
-    """Decoded wire payload: everything the server needs to dequantize."""
+    """Decoded pq payload: everything the server needs to dequantize."""
     codes: np.ndarray      # (R, (q/R)*n) int32, values in [0, L)
     codebooks: np.ndarray  # (R, L, d/q) at the wire dtype
     n: int                 # activation vectors in the batch
     d: int                 # activation dim
+
+
+class Decoded(NamedTuple):
+    """One parsed tagged payload (``inner`` set for chained sparse)."""
+    kind: str                       # "pq" | "dense" | "sparse" | "scalar"
+    n: int
+    d: int
+    bits: int                       # code/index bit width (kind-specific)
+    arrays: dict                    # kind-specific numpy arrays
+    inner: Optional["Decoded"] = None
 
 
 # ---------------------------------------------------------------------------
@@ -98,13 +152,17 @@ def _unpack_codes(buf: bytes, count: int, bits: int) -> np.ndarray:
         .sum(axis=1).astype(np.int32)
 
 
+def _code_stream_bytes(num_codes: int, bits: int) -> int:
+    return (num_codes * bits + 7) // 8
+
+
 # ---------------------------------------------------------------------------
-# encode / decode
+# pq payloads (the PR 2 codec, now kind-tagged)
 # ---------------------------------------------------------------------------
 
 def encode_bytes(qb: QuantizedBatch,
                  codebook_dtype: Union[str, np.dtype] = "float16") -> bytes:
-    """Serialize a ``QuantizedBatch`` to the wire layout above.
+    """Serialize a ``QuantizedBatch`` to a ``pq`` payload.
 
     The geometry (n, d, q, R, L) is derived from the batch itself, so the
     payload is self-describing — ``decode_bytes`` needs no side channel.
@@ -126,22 +184,20 @@ def encode_bytes(qb: QuantizedBatch,
     bits = bits_per_code(num_clusters)
     if codes.min(initial=0) < 0 or codes.max(initial=0) >= num_clusters:
         raise ValueError("codes out of range [0, L)")
-    header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES[name], bits, 0,
+    header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES[name], bits, KIND_PQ,
                           n, d, q, r, num_clusters)
     return header + cbs.astype(_np_dtype(name)).tobytes() \
         + _pack_codes(codes, bits)
 
 
 def decode_bytes(payload: bytes) -> WireBatch:
-    """Parse a wire payload back into codes + codebooks, bit-exactly."""
-    if len(payload) < HEADER_BYTES:
-        raise ValueError(f"payload shorter than header ({len(payload)} B)")
-    (magic, version, dtype_code, bits, _flags,
-     n, d, q, r, num_clusters) = _HEADER.unpack_from(payload)
-    if magic != _MAGIC:
-        raise ValueError(f"bad magic {magic!r}")
-    if version != _VERSION:
-        raise ValueError(f"unsupported wire version {version}")
+    """Parse a ``pq`` payload back into codes + codebooks, bit-exactly."""
+    (_, _, dtype_code, bits, kind,
+     n, d, q, r, num_clusters) = _check_header(payload)
+    if kind != KIND_PQ:
+        raise ValueError(
+            f"expected a pq payload, got kind {_KIND_NAMES[kind]!r}; "
+            f"use decode_payload for tagged payloads")
     dtype = _np_dtype(_CODE_DTYPES[dtype_code])
     dsub = d // q
     cb_bytes = r * num_clusters * dsub * dtype.itemsize
@@ -172,16 +228,222 @@ def dequantize(wb: WireBatch) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# analytic size accounting (must match len(encode_bytes(...)) exactly)
+# dense / sparse / scalar payloads
 # ---------------------------------------------------------------------------
 
-def _code_stream_bytes(num_codes: int, bits: int) -> int:
-    return (num_codes * bits + 7) // 8
+def encode_dense(values: np.ndarray, n: int, d: int,
+                 dtype: Union[str, np.dtype] = "float32") -> bytes:
+    name = _dtype_name(dtype)
+    vals = np.asarray(values).reshape(n * d).astype(_np_dtype(name))
+    header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES[name], 0, KIND_DENSE,
+                          n, d, 0, 0, 0)
+    return header + vals.tobytes()
 
+
+def encode_sparse(indices: np.ndarray, n: int, d: int, *,
+                  values: Optional[np.ndarray] = None,
+                  inner: Optional[bytes] = None,
+                  value_dtype: Union[str, np.dtype] = "float16") -> bytes:
+    """Top-k payload: packed flat indices + values (or a nested payload)."""
+    if (values is None) == (inner is None):
+        raise ValueError("pass exactly one of values / inner")
+    idx = np.asarray(indices).reshape(-1).astype(np.int64)
+    if idx.size and (idx.min() < 0 or idx.max() >= n * d):
+        raise ValueError(f"indices out of range [0, {n * d})")
+    bits = comps.index_bits(n * d)
+    if values is not None:
+        name = _dtype_name(value_dtype)
+        body = np.asarray(values).reshape(-1).astype(_np_dtype(name)).tobytes()
+        dtype_code = _DTYPE_CODES[name]
+    else:
+        body = inner
+        dtype_code = _NESTED
+    header = _HEADER.pack(_MAGIC, _VERSION, dtype_code, bits, KIND_SPARSE,
+                          n, d, 0, 0, idx.size)
+    return header + _pack_codes(idx.astype(np.uint32), bits) + body
+
+
+def encode_scalar(codes: np.ndarray, lo: float, scale: float, bits: int,
+                  n: int, d: int) -> bytes:
+    """Uniform b-bit payload: 8 B f32 (lo, scale) + packed codes."""
+    c = np.asarray(codes).reshape(-1).astype(np.int64)
+    if c.size != n * d:
+        raise ValueError(f"expected {n * d} codes, got {c.size}")
+    if c.size and (c.min() < 0 or c.max() >= (1 << bits)):
+        raise ValueError(f"codes out of range [0, 2^{bits})")
+    header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES["float32"], bits,
+                          KIND_SCALAR, n, d, 0, 0, 0)
+    rng = np.array([lo, scale], np.float32).tobytes()
+    return header + rng + _pack_codes(c.astype(np.uint32), bits)
+
+
+def decode_payload(payload: bytes) -> Decoded:
+    """Parse any tagged payload (recursing into nested sparse values)."""
+    (_, _, dtype_code, bits, kind, n, d, q, r, L) = _check_header(payload)
+    body = payload[HEADER_BYTES:]
+    if kind == KIND_PQ:
+        wb = decode_bytes(payload)
+        return Decoded("pq", n, d, bits,
+                       {"codes": wb.codes, "codebooks": wb.codebooks})
+    if kind == KIND_DENSE:
+        dtype = _np_dtype(_CODE_DTYPES[dtype_code])
+        expected = n * d * dtype.itemsize
+        if len(body) != expected:
+            raise ValueError(f"dense body is {len(body)} B, expected {expected}")
+        vals = np.frombuffer(payload, dtype, count=n * d,
+                             offset=HEADER_BYTES).reshape(n, d)
+        return Decoded("dense", n, d, 0, {"values": vals})
+    if kind == KIND_SPARSE:
+        nnz = L
+        idx_bytes = _code_stream_bytes(nnz, bits)
+        idx = _unpack_codes(body[:idx_bytes], nnz, bits)
+        rest = body[idx_bytes:]
+        if dtype_code == _NESTED:
+            inner = decode_payload(rest)
+            return Decoded("sparse", n, d, bits, {"indices": idx},
+                           inner=inner)
+        dtype = _np_dtype(_CODE_DTYPES[dtype_code])
+        if len(rest) != nnz * dtype.itemsize:
+            raise ValueError(f"sparse values are {len(rest)} B, expected "
+                             f"{nnz * dtype.itemsize}")
+        vals = np.frombuffer(rest, dtype, count=nnz)
+        return Decoded("sparse", n, d, bits,
+                       {"indices": idx, "values": vals})
+    # KIND_SCALAR
+    expected = 8 + _code_stream_bytes(n * d, bits)
+    if len(body) != expected:
+        raise ValueError(f"scalar body is {len(body)} B, expected {expected}")
+    rng = np.frombuffer(body[:8], np.float32, count=2)
+    codes = _unpack_codes(body[8:], n * d, bits)
+    return Decoded("scalar", n, d, bits,
+                   {"codes": codes, "lo": rng[0], "scale": rng[1]})
+
+
+def reconstruct(dp: Decoded) -> np.ndarray:
+    """Receiver-side reconstruction of a decoded payload, (n, d)."""
+    if dp.kind == "pq":
+        wb = WireBatch(codes=dp.arrays["codes"],
+                       codebooks=dp.arrays["codebooks"], n=dp.n, d=dp.d)
+        return dequantize(wb)
+    if dp.kind == "dense":
+        return np.asarray(dp.arrays["values"], np.float32)
+    if dp.kind == "scalar":
+        return (dp.arrays["lo"]
+                + dp.arrays["codes"].astype(np.float32) * dp.arrays["scale"]
+                ).reshape(dp.n, dp.d)
+    # sparse
+    vals = reconstruct(dp.inner).reshape(-1) if dp.inner is not None \
+        else np.asarray(dp.arrays["values"], np.float32)
+    flat = np.zeros(dp.n * dp.d, np.float32)
+    flat[dp.arrays["indices"]] = vals
+    return flat.reshape(dp.n, dp.d)
+
+
+def encode_decoded(dp: Decoded,
+                   value_dtype: Union[str, np.dtype] = "float16") -> bytes:
+    """Re-serialize a decoded payload (round-trip idempotence helper).
+
+    ``value_dtype`` applies only where the decoded arrays do not already
+    carry a wire dtype (they always do after ``decode_payload``, so a
+    re-encode of a decode is byte-identical)."""
+    if dp.kind == "pq":
+        qb = QuantizedBatch(
+            dequantized=reconstruct(dp), codes=dp.arrays["codes"],
+            codebooks=dp.arrays["codebooks"],
+            distortion=np.zeros(()), residual=np.zeros(()))
+        return encode_bytes(qb, dp.arrays["codebooks"].dtype)
+    if dp.kind == "dense":
+        return encode_dense(dp.arrays["values"], dp.n, dp.d,
+                            dp.arrays["values"].dtype)
+    if dp.kind == "scalar":
+        return encode_scalar(dp.arrays["codes"], dp.arrays["lo"],
+                             dp.arrays["scale"], dp.bits, dp.n, dp.d)
+    if dp.inner is not None:
+        return encode_sparse(dp.arrays["indices"], dp.n, dp.d,
+                             inner=encode_decoded(dp.inner, value_dtype))
+    return encode_sparse(dp.arrays["indices"], dp.n, dp.d,
+                         values=dp.arrays["values"],
+                         value_dtype=dp.arrays["values"].dtype)
+
+
+# ---------------------------------------------------------------------------
+# compressor -> wire bytes (the `CutCompressor.wire_payload` backend)
+# ---------------------------------------------------------------------------
+
+def _geometry(comp: comps.Compressed):
+    d = int(comp.recon.shape[-1])
+    return int(comp.recon.size // d), d
+
+
+def encode_compressed(compressor: "comps.CutCompressor",
+                      comp: comps.Compressed,
+                      value_dtype: Union[str, np.dtype] = "float16") -> bytes:
+    """Serialize a `Compressed` result to its tagged wire payload.
+
+    Dense payloads keep the tensor's native dtype (lossless — they ARE the
+    uncompressed baseline); sparse/pq values ride at ``value_dtype``.
+    """
+    n, d = _geometry(comp)
+    if isinstance(compressor, comps.ChainCompressor):
+        payloads = comp.payload
+        executed = compressor.stages[:len(payloads)]
+        # each stage's payload is encoded against the stage's OWN input
+        # geometry: the full tensor for stage 0, the previous stage's
+        # carrier (a flat (k, 1) vector) for every later stage
+        geoms = []
+        cur = (n, d)
+        for payload in payloads:
+            geoms.append(cur)
+            if isinstance(payload, comps.SparsePayload):
+                cur = (int(np.asarray(payload.values).size), 1)
+            # dense (identity) stages pass their input through unchanged;
+            # terminal payloads (pq/scalar) end the walk with the loop
+        inner: Optional[bytes] = None
+        for stage, payload, (sn, sd) in zip(reversed(executed),
+                                            reversed(payloads),
+                                            reversed(geoms)):
+            inner = _encode_stage(stage, payload, sn, sd, inner, value_dtype)
+        return inner
+    return _encode_stage(compressor, comp.payload, n, d, None, value_dtype)
+
+
+def _encode_stage(stage, payload, n, d, inner, value_dtype) -> bytes:
+    if isinstance(payload, comps.DensePayload):
+        if inner is not None:
+            return inner   # the identity stage adds nothing to the wire
+        vals = np.asarray(payload.values)
+        return encode_dense(vals, n, d, vals.dtype)
+    if isinstance(payload, QuantizedBatch):
+        if inner is not None:
+            raise ValueError("pq payloads are terminal; nothing may nest")
+        return encode_bytes(payload, value_dtype)
+    if isinstance(payload, comps.SparsePayload):
+        if inner is not None:
+            return encode_sparse(np.asarray(payload.indices), n, d,
+                                 inner=inner)
+        return encode_sparse(np.asarray(payload.indices), n, d,
+                             values=np.asarray(payload.values),
+                             value_dtype=value_dtype)
+    if isinstance(payload, comps.ScalarPayload):
+        if inner is not None:
+            raise ValueError("scalar payloads are terminal; nothing may nest")
+        # geometry comes from the stage's OWN input (the chain carrier when
+        # nested, the full tensor when standalone), i.e. the codes shape
+        codes = np.asarray(payload.codes)
+        sd = codes.shape[-1] if codes.ndim >= 2 else 1
+        return encode_scalar(codes, float(np.asarray(payload.lo)),
+                             float(np.asarray(payload.scale)),
+                             stage.bits, codes.size // sd, sd)
+    raise TypeError(f"no wire encoding for payload type {type(payload)!r}")
+
+
+# ---------------------------------------------------------------------------
+# analytic size accounting (must match len(encode_...) exactly)
+# ---------------------------------------------------------------------------
 
 def wire_bits(cfg: PQConfig, n: int, d: int,
               codebook_dtype: Union[str, np.dtype] = "float16") -> int:
-    """Exact wire payload size in bits for an (n, d) batch under ``cfg``.
+    """Exact pq payload size in bits for an (n, d) batch under ``cfg``.
 
     ``tests/test_wire.py`` asserts this equals ``8 * len(encode_bytes(...))``
     and stays within ``HEADER_BYTES*8 + 7`` bits of

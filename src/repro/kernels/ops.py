@@ -69,6 +69,60 @@ def pq_quantize(x: jax.Array, centroids: jax.Array, *,
     return zt[:n], resid[:n], codes[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("bits", "block_n", "interpret"))
+def scalar_quantize(x: jax.Array, lo: jax.Array, scale: jax.Array,
+                    bits: int, *, block_n: int = 512,
+                    interpret: bool | None = None):
+    """Fused uniform b-bit quantize + dequantize (scalarq compressor hot
+    loop). x: (N, D) any float dtype; lo/scale: () tensor-wide range.
+    Returns (codes (N, D) int32, recon (N, D) f32)."""
+    from repro.kernels.scalar_quant import scalar_quantize_kernel
+    interpret = _interpret_default() if interpret is None else interpret
+    block_n = min(block_n, max(8, x.shape[0]))
+    xp, n = _pad_rows(x, block_n)
+    codes, recon = scalar_quantize_kernel(xp, lo, scale, bits=bits,
+                                          block_n=block_n,
+                                          interpret=interpret)
+    return codes[:n], recon[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_n", "interpret"))
+def pack_codes(codes: jax.Array, bits: int, *, block_n: int = 512,
+               interpret: bool | None = None) -> jax.Array:
+    """Pack flat int32 codes at ``bits`` bits each into little-endian uint32
+    words (32 % bits == 0). Bit-identical to the LSB-first numpy stream
+    ``federated/wire.py`` writes. Returns (ceil(N·bits/32),) uint32."""
+    from repro.kernels.scalar_quant import pack_codes_kernel
+    assert 32 % bits == 0, "device packing needs bits in {1, 2, 4, 8, 16}"
+    interpret = _interpret_default() if interpret is None else interpret
+    per_word = 32 // bits
+    flat = codes.reshape(-1)
+    pad = (-flat.shape[0]) % per_word
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    mat = flat.reshape(-1, per_word)
+    block_n = min(block_n, max(8, mat.shape[0]))
+    matp, n = _pad_rows(mat, block_n)
+    return pack_codes_kernel(matp, bits=bits, block_n=block_n,
+                             interpret=interpret)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("count", "bits", "block_n",
+                                             "interpret"))
+def unpack_codes(words: jax.Array, count: int, bits: int, *,
+                 block_n: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """Inverse of ``pack_codes``: (N_words,) uint32 -> (count,) int32."""
+    from repro.kernels.scalar_quant import unpack_codes_kernel
+    assert 32 % bits == 0, "device unpacking needs bits in {1, 2, 4, 8, 16}"
+    interpret = _interpret_default() if interpret is None else interpret
+    block_n = min(block_n, max(8, words.shape[0]))
+    wp, n = _pad_rows(words, block_n)
+    codes = unpack_codes_kernel(wp, bits=bits, block_n=block_n,
+                                interpret=interpret)
+    return codes.reshape(-1)[:count]
+
+
 def assign_impl_for_kmeans(x: jax.Array, centroids: jax.Array) -> jax.Array:
     """Adapter matching the ``Backend.assign`` signature in
     ``repro.core.kmeans`` (used by the built-in "pallas" backend)."""

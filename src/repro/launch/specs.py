@@ -39,7 +39,28 @@ def default_pq(cfg: ArchConfig, *, subvector_dim: int = 8,
 
 def make_model(cfg: ArchConfig, *, with_pq: bool = True,
                lam: float = 1e-4) -> TransformerLM:
-    return TransformerLM(cfg, pq=default_pq(cfg) if with_pq else None, lam=lam)
+    """Build the split LM with the arch's per-direction cut codecs.
+
+    ``cfg.uplink_compressor`` — "pq" keeps the paper's grouped PQ fast path
+    (``with_pq=False`` or "none" disables it → SplitFed); any other spec is
+    parsed by ``core/compressors.make_compressor``. ``cfg.downlink_compressor``
+    installs a codec on the server→client gradient message ("none": the
+    dense baseline, bitwise-identical backward pass).
+    """
+    from repro.core.compressors import make_compressor
+    # the PQ config exists only when the uplink actually runs PQ — a
+    # non-pq uplink spec must not leave a misleading model.pq behind
+    # (comm_report attributes PQ bits to whatever model.pq says)
+    pq = default_pq(cfg) if with_pq and cfg.uplink_compressor == "pq" \
+        else None
+    uplink = None if cfg.uplink_compressor in ("pq", "none") \
+        else make_compressor(cfg.uplink_compressor,
+                             pq=default_pq(cfg) if with_pq else None)
+    downlink = None if cfg.downlink_compressor == "none" \
+        else make_compressor(cfg.downlink_compressor,
+                             pq=default_pq(cfg) if with_pq else None)
+    return TransformerLM(cfg, pq=pq, lam=lam, uplink_compressor=uplink,
+                         downlink_compressor=downlink)
 
 
 # ---------------------------------------------------------------------------

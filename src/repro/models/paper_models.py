@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.compressors import CutCompressor, compress_downlink
 from repro.core.correction import quantize_with_correction_stats
 from repro.core.quantizer import PQConfig
 
@@ -29,26 +30,48 @@ Params = Dict[str, Any]
 
 
 def _maybe_quantize(x, pq: Optional[PQConfig], lam, quantize: bool,
-                    client_batch: int = 0, lam_override=None):
+                    client_batch: int = 0, lam_override=None,
+                    downlink: Optional[CutCompressor] = None):
+    """Apply the cut-layer codecs per client: the leading dim is split into
+    cohorts of ``client_batch`` examples, each clustered with its own
+    codebooks (vmap). client_batch=0 treats the whole batch as a single
+    client. ``downlink`` (a `CutCompressor`) squeezes the server→client
+    gradient cotangent inside the VJP; None/"none" leaves the backward
+    pass bitwise-untouched."""
     if lam_override is not None:
         lam = lam_override
-    """Quantize per client: the leading dim is split into cohorts of
-    ``client_batch`` examples, each clustered with its own codebooks (vmap).
-    client_batch=0 treats the whole batch as a single client."""
-    if not quantize or pq is None:
+    has_dl = quantize and downlink is not None and downlink.name != "none"
+    if not quantize or (pq is None and not has_dl):
         return x, {}
-    if client_batch and x.shape[0] % client_batch == 0 and x.shape[0] > client_batch:
-        xs = x.reshape(x.shape[0] // client_batch, client_batch, *x.shape[1:])
-        zt, dist = jax.vmap(
-            lambda zi: quantize_with_correction_stats(zi, lam, pq))(xs)
-        zt, dist = zt.reshape(x.shape), jnp.mean(dist)
-    else:
-        zt, dist = quantize_with_correction_stats(x, lam, pq)
-    n = x.size // x.shape[-1]
-    return zt, {
-        "pq_distortion": dist,
-        "pq_compression_ratio": float(pq.compression_ratio(int(n), x.shape[-1])),
-    }
+    per_client = bool(client_batch and x.shape[0] % client_batch == 0
+                      and x.shape[0] > client_batch)
+    stats = {}
+    zt = x
+    if pq is not None:
+        if per_client:
+            xs = x.reshape(x.shape[0] // client_batch, client_batch,
+                           *x.shape[1:])
+            zt, dist = jax.vmap(
+                lambda zi: quantize_with_correction_stats(zi, lam, pq))(xs)
+            zt, dist = zt.reshape(x.shape), jnp.mean(dist)
+        else:
+            zt, dist = quantize_with_correction_stats(x, lam, pq)
+        n = x.size // x.shape[-1]
+        stats = {
+            "pq_distortion": dist,
+            "pq_compression_ratio": float(
+                pq.compression_ratio(int(n), x.shape[-1])),
+        }
+    if has_dl:
+        if per_client:
+            zs = zt.reshape(zt.shape[0] // client_batch, client_batch,
+                            *zt.shape[1:])
+            zt = jax.vmap(
+                lambda zi: compress_downlink(zi, downlink))(zs) \
+                .reshape(zt.shape)
+        else:
+            zt = compress_downlink(zt, downlink)
+    return zt, stats
 
 
 # ---------------------------------------------------------------------------
@@ -63,6 +86,7 @@ class FemnistCNN:
     lam: float = 0.0
     dropout: float = 0.0
     client_batch: int = 0   # examples per client for per-client PQ codebooks
+    downlink_compressor: Optional[CutCompressor] = None
 
     cut_dim: int = 9216  # 12*12*64
 
@@ -103,7 +127,8 @@ class FemnistCNN:
              lam_override=None):
         acts = self.client_forward(params["client"], batch)
         acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
-                                       self.client_batch, lam_override)
+                                       self.client_batch, lam_override,
+                                       self.downlink_compressor)
         logits = self.server_logits(params["server"], acts)
         labels = batch["label"]
         ce = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(labels.shape[0]),
@@ -128,6 +153,7 @@ class SOTagMLP:
     pq: Optional[PQConfig] = None
     lam: float = 0.0
     client_batch: int = 0
+    downlink_compressor: Optional[CutCompressor] = None
 
     def init(self, key) -> Params:
         k1, k2 = jax.random.split(key)
@@ -149,7 +175,8 @@ class SOTagMLP:
              lam_override=None):
         acts = self.client_forward(params["client"], batch)
         acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
-                                       self.client_batch, lam_override)
+                                       self.client_batch, lam_override,
+                                       self.downlink_compressor)
         logits = self.server_logits(params["server"], acts)
         y = batch["tags"].astype(jnp.float32)  # (B, num_tags) multi-hot
         bce = jnp.mean(jnp.maximum(logits, 0) - logits * y +
@@ -178,6 +205,7 @@ class SONwpLSTM:
     pq: Optional[PQConfig] = None
     lam: float = 0.0
     client_batch: int = 0
+    downlink_compressor: Optional[CutCompressor] = None
 
     def init(self, key) -> Params:
         ks = jax.random.split(key, 5)
@@ -221,7 +249,8 @@ class SONwpLSTM:
              lam_override=None):
         acts = self.client_forward(params["client"], batch)
         acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
-                                       self.client_batch, lam_override)
+                                       self.client_batch, lam_override,
+                                       self.downlink_compressor)
         logits = self.server_logits(params["server"], acts)
         labels = batch["labels"]  # (B, S), -1 = ignore
         mask = labels >= 0

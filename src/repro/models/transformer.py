@@ -29,8 +29,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.compressors import (CutCompressor, PQCompressor,
+                                    compress_downlink,
+                                    compress_with_correction_stats)
 from repro.core.correction import quantize_with_correction_stats
 from repro.core.quantizer import PQConfig
+from repro.core.split import dtype_bits
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -46,8 +50,13 @@ class TransformerLM:
     cfg: ArchConfig
     pq: Optional[PQConfig] = None     # FedLite quantizer at the cut layer
     lam: float = 0.0                  # gradient-correction strength (eq. 5)
-    downlink_pq: Optional[PQConfig] = None  # beyond-paper: compress the
-    #                                   server->client gradient message too
+    downlink_pq: Optional[PQConfig] = None  # legacy: PQ on the downlink
+    #                                   (subsumed by downlink_compressor)
+    # direction-agnostic cut-layer codecs (core/compressors.py):
+    # uplink_compressor replaces the PQ fast path when set; the downlink
+    # compressor squeezes the server->client gradient COTANGENT in the VJP
+    uplink_compressor: Optional[CutCompressor] = None
+    downlink_compressor: Optional[CutCompressor] = None
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> Params:
@@ -229,37 +238,71 @@ class TransformerLM:
                                              positions, mode, caches, decode_pos)
         return x, new_caches, aux
 
+    def _downlink(self) -> Optional[CutCompressor]:
+        if self.downlink_compressor is not None:
+            return self.downlink_compressor
+        if self.downlink_pq is not None:       # legacy PQConfig field
+            return PQCompressor(self.downlink_pq)
+        return None
+
     def cut_activation(self, x: jax.Array, *, quantize: bool,
                        lam_override=None) -> Tuple[jax.Array, Dict]:
-        """Apply FedLite's quantization layer (paper Fig. 1) at the cut.
+        """Apply the cut-layer codecs (paper Fig. 1 generalized) at the cut.
 
         Each batch row (sequence) is one *client*: codebooks are built
         per-row (vmap), matching the paper's per-client, per-iteration
-        clustering — and making the PQ step embarrassingly parallel over the
-        batch-sharded mesh axis (zero added collectives).
+        clustering — and making the compression step embarrassingly parallel
+        over the batch-sharded mesh axis (zero added collectives).
+
+        Uplink: ``pq`` (the paper's grouped PQ with the corrected VJP — the
+        exact pre-refactor path) unless ``uplink_compressor`` overrides it.
+        Downlink: ``downlink_compressor`` squeezes the activation COTANGENT
+        inside the VJP before it reaches the client stack; ``None``/"none"
+        leaves the backward pass untouched bitwise.
         """
-        if not quantize or self.pq is None:
+        up = self.uplink_compressor
+        dl = self._downlink()
+        has_up = quantize and (up is not None or self.pq is not None)
+        has_dl = quantize and dl is not None and dl.name != "none"
+        if not has_up and not has_dl:
             return x, {}
         # gather each client's (sequence-sharded) activation so the per-client
-        # K-means runs locally — exactly what a real client does, and it keeps
-        # the quantizer free of collectives
+        # compression runs locally — exactly what a real client does, and it
+        # keeps the codecs free of collectives
         x = shard(x, ("pod", "data"), None, None)
         lam = self.lam if lam_override is None else lam_override
-        z_tilde, dist = jax.vmap(
-            lambda zi: quantize_with_correction_stats(zi, lam, self.pq))(x)
-        if self.downlink_pq is not None:
-            from repro.core.correction import quantize_downlink
-            z_tilde = jax.vmap(
-                lambda zi: quantize_downlink(zi, self.downlink_pq))(z_tilde)
-        z_tilde = shard_residual(z_tilde)
         n_per_client = int(x.shape[1])  # tokens per client (= sequence)
-        stats = {
-            "pq_distortion": jnp.mean(dist),
-            "pq_message_bits": float(
-                x.shape[0] * self.pq.message_bits(n_per_client, x.shape[-1])),
-            "pq_compression_ratio": float(
-                self.pq.compression_ratio(n_per_client, x.shape[-1])),
-        }
+        phi = dtype_bits(getattr(self.cfg, "dtype", "float32"))
+        z_tilde, stats = x, {}
+        if has_up and up is None:
+            # the PQ fast path: fused backend encode + residual reuse
+            z_tilde, dist = jax.vmap(
+                lambda zi: quantize_with_correction_stats(zi, lam, self.pq))(x)
+            stats = {
+                "pq_distortion": jnp.mean(dist),
+                "pq_message_bits": float(
+                    x.shape[0] * self.pq.message_bits(n_per_client,
+                                                      x.shape[-1])),
+                "pq_compression_ratio": float(
+                    self.pq.compression_ratio(n_per_client, x.shape[-1])),
+            }
+        elif has_up:
+            z_tilde, dist = jax.vmap(
+                lambda zi: compress_with_correction_stats(zi, lam, up))(x)
+            msg = up.analytic_bits(n_per_client, x.shape[-1], phi_bits=phi)
+            stats = {
+                "pq_distortion": jnp.mean(dist),
+                "uplink_message_bits": float(x.shape[0] * msg),
+                "uplink_compression_ratio":
+                    phi * n_per_client * x.shape[-1] / max(msg, 1),
+            }
+        if has_dl:
+            z_tilde = jax.vmap(
+                lambda zi: compress_downlink(zi, dl))(z_tilde)
+            stats["downlink_message_bits"] = float(
+                x.shape[0] * dl.analytic_bits(n_per_client, x.shape[-1],
+                                              phi_bits=phi))
+        z_tilde = shard_residual(z_tilde)
         return z_tilde, stats
 
     def server_forward(self, server_params: Params, acts, batch, *, mode="train",

@@ -105,3 +105,45 @@ def test_decode_rejects_garbage():
         wire.decode_bytes(b"XXXX" + buf[4:])       # bad magic
     with pytest.raises(ValueError):
         wire.decode_bytes(buf[:-1])                # truncated
+
+
+def test_unknown_version_rejected_with_clear_error():
+    """A stale/foreign payload must fail loudly, not decode as garbage."""
+    qb, _, _ = _qb()
+    buf = bytearray(wire.encode_bytes(qb))
+    assert buf[4] == 2                              # current format version
+    buf[4] = 7                                      # a future/stale version
+    with pytest.raises(ValueError, match="version 7"):
+        wire.decode_bytes(bytes(buf))
+    with pytest.raises(ValueError, match="version 7"):
+        wire.decode_payload(bytes(buf))
+
+
+def test_version1_payloads_still_decode():
+    """The PR 2 codec (version 1, zero flags byte) remains readable."""
+    qb, _, _ = _qb()
+    buf = bytearray(wire.encode_bytes(qb, "float16"))
+    buf[4] = 1                                      # rewrite as version 1
+    wb = wire.decode_bytes(bytes(buf))
+    np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
+
+
+def test_unknown_kind_rejected():
+    qb, _, _ = _qb()
+    buf = bytearray(wire.encode_bytes(qb))
+    buf[7] = 9                                      # kind byte: unknown tag
+    with pytest.raises(ValueError, match="kind"):
+        wire.decode_payload(bytes(buf))
+    # version 1 never carried a non-pq kind either
+    buf[4] = 1
+    buf[7] = wire.KIND_SPARSE
+    with pytest.raises(ValueError, match="version-1"):
+        wire.decode_payload(bytes(buf))
+
+
+def test_pq_decode_refuses_other_kinds():
+    dense = wire.encode_dense(np.zeros((4, 8), np.float32), 4, 8)
+    with pytest.raises(ValueError, match="pq payload"):
+        wire.decode_bytes(dense)
+    dp = wire.decode_payload(dense)                 # the tagged API decodes it
+    assert dp.kind == "dense" and dp.n == 4 and dp.d == 8

@@ -20,7 +20,14 @@ The ``femnist_downlink_measured`` row does the same for the OTHER
 direction: the cut-layer gradient message through the acceptance downlink
 codec (``chain:topk(k=0.1)+scalarq(bits=8)``) vs the dense fp32 baseline —
 the measured reduction must be >= 8x and agree with the compressor's
-``analytic_bits`` to within the per-stage headers."""
+``analytic_bits`` to within the per-stage headers.
+
+The ``pq_delta`` rows measure the cross-round codebook-reuse win: round 1's
+codebook (warm-started Lloyd) is shipped as the ``pq-delta`` wire kind —
+8-bit quantized deltas against the acked round-0 reference — and the
+measured codebook component must shrink >= 1.5x vs fresh fp16 codebooks
+(asserted; acceptance criterion), with the closed-loop reconstruction
+decoding bit-exactly."""
 
 from __future__ import annotations
 
@@ -110,6 +117,44 @@ def run(fast: bool = True):
         "analytic_bits": dl_analytic,
         "header_overhead_bits": dl_overhead,
         "measured_downlink_reduction": round(reduction, 1),
+    })
+
+    # ---- measured pq-delta codebook bytes vs fresh fp16 codebooks ----------
+    # the LM-cut-shaped config (d/q = 8, L = 16 — launch/specs.default_pq):
+    # this is where codebook bytes matter; FEMNIST's L=2 codebook is 32 B
+    from repro.core.quantizer import quantize_stateful
+    d_lm, q_lm = 512, 64
+    pq_lm = PQConfig(num_subvectors=q_lm, num_clusters=16, kmeans_iters=4)
+    acts1 = jax.random.normal(jax.random.PRNGKey(2), (256, d_lm))
+    acts2 = acts1 + 0.05 * jax.random.normal(jax.random.PRNGKey(3),
+                                             (256, d_lm))
+    qb1, qstate = quantize_stateful(acts1, pq_lm)
+    full0 = wire.encode_bytes(qb1, "float16")
+    ref = wire.decode_bytes(full0).codebooks.astype(np.float32)  # acked
+    qb2, _ = quantize_stateful(acts2, pq_lm, qstate)             # warm round
+    full1 = wire.encode_bytes(qb2, "float16")
+    delta1, recon = wire.encode_pq_delta(qb2, ref, delta_bits=8)
+    assert len(delta1) * 8 == wire.pq_delta_wire_bits(pq_lm, 256, d_lm, 8)
+    wb = wire.decode_pq_delta(delta1, ref)
+    assert (wb.codes == np.asarray(qb2.codes)).all()
+    np.testing.assert_array_equal(wb.codebooks, recon)   # closed loop exact
+    cb_full = int(np.prod(pq_lm.codebook_shape(d_lm))) * 2   # fp16 bytes
+    code_bytes = len(full1) - wire.HEADER_BYTES - cb_full
+    cb_delta = len(delta1) - wire.HEADER_BYTES - code_bytes
+    cb_reduction = cb_full / cb_delta
+    assert cb_reduction >= 1.5, \
+        f"pq-delta codebook reduction {cb_reduction:.2f}x below the 1.5x bar"
+    rows.append({
+        "name": "pq_delta_measured_lmcut_d512_L16_b8",
+        "us_per_call": 0.0,
+        "codebook_bytes_full_fp16": cb_full,
+        "codebook_bytes_delta": cb_delta,
+        "codebook_reduction": round(cb_reduction, 2),
+        "payload_bytes_full": len(full1),
+        "payload_bytes_delta": len(delta1),
+        "delta_recon_max_err": round(
+            float(np.abs(recon - np.asarray(qb2.codebooks,
+                                            np.float32)).max()), 6),
     })
 
     # ---- big-arch accounting (smoke-size params, dtype-derived phi) --------

@@ -19,6 +19,10 @@ Scenario axes (fast mode keeps a 2x3 slice; --full runs the grid):
     compressed cell must show >= 8x measured downlink-bytes reduction
     (asserted — acceptance criterion) and still reach the round-0-derived
     target loss.
+  * warm-start  — always-on extra cell: cross-round codebook warm-start
+    (half the Lloyd iterations per steady-state round) + pq-delta codebook
+    wire encoding on the default fleet; must still reach the target loss
+    (asserted — acceptance criterion).
 
 Emitted per row: simulated seconds, simulated time and uplink bytes to
 reach the target loss (0.9x the round-0 loss), measured uplink AND
@@ -83,12 +87,14 @@ FAST_SCENARIOS = [
 ]
 
 
-def _run_cell(data, fleet, policy, pq, downlink, rounds, fast):
+def _run_cell(data, fleet, policy, pq, downlink, rounds, fast,
+              warm_start=False, delta_bits=None):
     model = FemnistCNN(pq=pq, lam=1e-4)
     trainer = FederatedTrainer(
         model, sgd(10 ** -1.5), data, cohort=COHORT,
         client_batch=CLIENT_BATCH, quantize=pq is not None,
-        fleet=fleet, policy=policy, downlink_compressor=downlink)
+        fleet=fleet, policy=policy, downlink_compressor=downlink,
+        warm_start=warm_start, codebook_delta_bits=delta_bits)
     t0 = time.perf_counter()
     state, hist = trainer.run(rounds, jax.random.PRNGKey(0))
     wall_us = (time.perf_counter() - t0) * 1e6 / max(rounds, 1)
@@ -134,9 +140,31 @@ def run(fast: bool = True, downlink: bool = False):
             rows.append(dict(
                 {"name": f"{fleet_name}_{policy_name}_{pq_name}"}, **row))
 
+    rows.extend(run_warm_start_cell(data, fleets, policies, rounds, fast))
     if downlink:
         rows.extend(run_downlink_sweep(data, fleets, policies, rounds, fast))
     return rows
+
+
+def run_warm_start_cell(data, fleets, policies, rounds, fast):
+    """Cross-round codebook warm-start on the default (ideal, full-sync)
+    fleet: steady-state rounds run PQConfig.warm_iters Lloyd iterations
+    from last round's codebook and ship pq-delta codebooks. The run must
+    still reach the round-0-derived target loss (acceptance criterion)."""
+    pq = _compressions()["fedlite_q1152_L2"]
+    row, trainer, _ = _run_cell(
+        data, fleets["ideal"], policies["full_sync"], pq, None, rounds,
+        fast, warm_start=True, delta_bits=8)
+    assert row["reached_target"], \
+        "warm-start run failed to reach the target loss"
+    meta = trainer.last_trace.meta
+    return [dict({"name": "warmstart_delta8_ideal_full_sync_fedlite"}, **row),
+            {"name": "warmstart_claim", "us_per_call": 0.0,
+             "reached_target": row["reached_target"],
+             "codebook_bytes_reduction": round(
+                 meta.get("codebook_bytes_reduction", 0.0), 2),
+             "warm_iters": pq.effective_warm_iters,
+             "cold_iters": pq.kmeans_iters}]
 
 
 def run_downlink_sweep(data, fleets, policies, rounds, fast):

@@ -4,6 +4,10 @@ report. Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run             # fast (default)
   PYTHONPATH=src python -m benchmarks.run --full      # paper-scale grids
   PYTHONPATH=src python -m benchmarks.run --only fig3_quantizer_tradeoff
+
+The ``kernels`` suite additionally writes ``BENCH_kernels.json`` at the
+repo root (per-backend Lloyd-update / scalarq / PQ-encode rows + analytic
+HBM-traffic models) so the kernel perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations

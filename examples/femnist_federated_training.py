@@ -68,6 +68,12 @@ def main():
     ap.add_argument("--downlink", default=None, metavar="SPEC",
                     help="downlink gradient codec spec, e.g. "
                          "'chain:topk(k=0.1)+scalarq(bits=8)'")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="carry PQ codebooks across rounds (half the Lloyd "
+                         "iterations on steady-state rounds)")
+    ap.add_argument("--delta-bits", type=int, default=0,
+                    help="ship codebooks as pq-delta wire payloads at this "
+                         "many bits per delta (0 = fresh fp16 codebooks)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -82,10 +88,13 @@ def main():
                                quantize=not args.baseline,
                                fleet=FLEETS[args.fleet](num_clients),
                                policy=POLICIES[args.policy](),
-                               downlink_compressor=args.downlink)
+                               downlink_compressor=args.downlink,
+                               warm_start=args.warm_start,
+                               codebook_delta_bits=args.delta_bits or None)
     eval_batch = data.eval_batch(jax.random.PRNGKey(99), 512)
     heterogeneous = args.fleet != "ideal" or args.policy != "full_sync" \
-        or args.downlink is not None
+        or args.downlink is not None or args.warm_start \
+        or bool(args.delta_bits)
 
     if heterogeneous:
         # scheduled run: measured wire bytes + simulated wall-clock per round

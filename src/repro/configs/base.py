@@ -72,6 +72,12 @@ class ArchConfig:
     # server->client gradient message, e.g. "chain:topk(k=0.1)+scalarq(bits=8)"
     uplink_compressor: str = "pq"
     downlink_compressor: str = "none"
+    # cross-round PQ codebook reuse (core/quantizer.QuantizerState):
+    # warm-started rounds run pq_warm_iters Lloyd iterations (None =
+    # kmeans_iters // 2); pq_delta_bits > 0 ships codebooks as `pq-delta`
+    # wire payloads (b-bit deltas vs the acked reference, federated/wire.py)
+    pq_warm_iters: Optional[int] = None
+    pq_delta_bits: int = 0            # 0 = fresh fp16 codebooks every round
     # numerics / memory -----------------------------------------------------
     dtype: str = "float32"            # activation/compute dtype
     param_dtype: str = "float32"

@@ -41,10 +41,18 @@ Direction hooks (``jax.custom_vjp``):
   * ``compress_with_correction(_stats)`` — the uplink: forward emits the
     reconstruction, backward adds FedLite's λ·(z − z̃) correction (eq. 5)
     using the residual fused with the forward compress.
+  * ``compress_with_correction_carry`` — the state-carrying uplink: same
+    correction, but a `CutState` threads cross-round carry through the
+    round — PQ codebook warm-start (``compress_stateful`` /
+    `core/quantizer.QuantizerState`) and per-client `ErrorFeedback` memory
+    — returning ``(recon, distortion, new_state)``.
   * ``compress_downlink`` — the downlink: forward is the identity, backward
     passes the activation COTANGENT through the configured compressor
     before it reaches the client submodel. ``none`` reproduces the
     uncompressed backward pass bitwise (asserted in tests).
+  * ``compress_downlink_keyed`` — same, with a per-step PRNG key threaded
+    to the backward codec: ``scalarq`` downlinks round stochastically
+    (unbiased) instead of to-nearest.
 
 Spec strings (``ArchConfig.uplink_compressor`` / ``downlink_compressor``,
 `FederatedTrainer` fields) are parsed by ``make_compressor``:
@@ -64,8 +72,11 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import kmeans as _km
-from repro.core.quantizer import PQConfig, QuantizedBatch, quantize
+from repro.core.quantizer import (PQConfig, QuantizedBatch, QuantizerState,
+                                  quantize, quantize_stateful)
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +105,26 @@ class Compressed(NamedTuple):
     residual: jax.Array        # z − recon, input shape + dtype
     payload: Any               # DensePayload | QuantizedBatch | SparsePayload
     #                            | ScalarPayload | tuple of stage payloads
+
+
+class CutState(NamedTuple):
+    """Cross-round carry for one cut-layer direction.
+
+    Both fields are optional pytrees; ``None`` means the corresponding
+    mechanism is off and its trace never changes:
+
+      * ``quantizer`` — `core/quantizer.QuantizerState`: the previous
+        round's PQ codebooks (warm-started Lloyd; also the ``pq-delta``
+        wire reference).
+      * ``ef_memory`` — error-feedback memory, same shape as the cut
+        tensor: the accumulated compression error re-added to the next
+        round's input (`ErrorFeedback` semantics, exact telescoping).
+
+    Passing a ``CutState`` (even one with both fields ``None``) to the
+    state-aware hooks requests a new state back — the bootstrap round.
+    """
+    quantizer: Any = None
+    ef_memory: Any = None
 
 
 def index_bits(num_slots: int) -> int:
@@ -127,6 +158,17 @@ class CutCompressor:
     def compress(self, z: jax.Array, *,
                  key: Optional[jax.Array] = None) -> Compressed:
         raise NotImplementedError
+
+    def compress_stateful(self, z: jax.Array, state: Any = None, *,
+                          key: Optional[jax.Array] = None
+                          ) -> Tuple[Compressed, Any]:
+        """Warm-start-aware compress: (Compressed, next-round codec state).
+
+        The base implementation is stateless (returns ``None`` state);
+        `PQCompressor` overrides it with the cross-round codebook
+        warm-start (`core/quantizer.quantize_stateful`)."""
+        del state
+        return self.compress(z, key=key), None
 
     def decompress(self, comp: Compressed) -> jax.Array:
         return comp.recon
@@ -211,6 +253,15 @@ class PQCompressor(CutCompressor):
         qb = quantize(z, self.cfg, key=key)
         return Compressed(recon=qb.dequantized, residual=qb.residual,
                           payload=qb)
+
+    def compress_stateful(self, z, state: Optional[QuantizerState] = None, *,
+                          key=None) -> Tuple[Compressed, QuantizerState]:
+        """Cross-round warm-start: a prior `QuantizerState` makes Lloyd
+        resume from last round's codebooks at ``cfg.effective_warm_iters``
+        iterations; ``None`` runs the cold path and bootstraps the state."""
+        qb, new_state = quantize_stateful(z, self.cfg, state, key)
+        return Compressed(recon=qb.dequantized, residual=qb.residual,
+                          payload=qb), new_state
 
     def overhead_bits(self, n, d, phi_bits):
         return self.cfg.message_bits(n, d, phi_bits=phi_bits)
@@ -576,3 +627,99 @@ def _dl_bwd(compressor, _, g):
 
 
 compress_downlink.defvjp(_dl_fwd, _dl_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def compress_downlink_keyed(z: jax.Array, key: jax.Array,
+                            compressor: CutCompressor) -> jax.Array:
+    """``compress_downlink`` with a per-step PRNG key threaded into the
+    backward codec: ``scalarq`` (standalone or as a chain stage) then uses
+    *stochastic* rounding on the gradient cotangent — unbiased,
+    E[recon] = g (Caldas et al. 2018) — instead of round-to-nearest.
+
+    ``key`` is a raw uint32 PRNG key (``jax.random.PRNGKey`` /
+    ``fold_in``); its cotangent is the symbolic float0 zero. The keyless
+    ``compress_downlink`` remains the deterministic path and is
+    bitwise-unchanged."""
+    return z
+
+
+def _dlk_fwd(z, key, compressor):
+    return z, key
+
+
+def _dlk_bwd(compressor, key, g):
+    if isinstance(compressor, NoneCompressor):
+        gz = g
+    else:
+        gz = compressor.compress(g, key=key).recon.astype(g.dtype)
+    # integer-dtype primals take float0 cotangents
+    return (gz, np.zeros(key.shape, jax.dtypes.float0))
+
+
+compress_downlink_keyed.defvjp(_dlk_fwd, _dlk_bwd)
+
+
+# ---------------------------------------------------------------------------
+# the state-carrying uplink hook (warm-start + error feedback)
+# ---------------------------------------------------------------------------
+
+def _zero_state_cotangent(state):
+    """Cotangent pytree for a `CutState` primal: zeros for float leaves,
+    float0 for integer leaves (the round counter). The state is auxiliary
+    carry — no gradient may flow into last round's codebooks or memory."""
+    return jax.tree.map(
+        lambda x: np.zeros(jnp.shape(x), jax.dtypes.float0)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer)
+        else jnp.zeros_like(x), state)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def compress_with_correction_carry(z: jax.Array, lam, state: CutState,
+                                   compressor: CutCompressor):
+    """State-carrying uplink hook: like ``compress_with_correction_stats``
+    but threading a `CutState` across rounds. Returns
+    ``(recon, distortion, new_state)``.
+
+    Forward:
+      1. error feedback (iff ``state.ef_memory`` is not None):
+         ``z_in = z + memory`` — the accumulated compression error is
+         re-added before compressing (`ErrorFeedback` semantics); the new
+         memory is ``z_in − recon`` (== the compress residual), so the
+         telescoped sum of transmissions recovers the full signal.
+      2. warm-started compress: ``compressor.compress_stateful`` resumes
+         from ``state.quantizer`` (PQ codebook warm-start; stateless
+         codecs ignore it and return ``None``).
+
+    Backward: FedLite's eq.-5 correction ``g + λ·(z_in − recon)`` on the
+    activation cotangent, reusing the residual fused with the forward
+    compress; ``lam`` and the state get zero cotangents (the state is
+    auxiliary carry, not a differentiable input).
+    """
+    recon, dist, new_state, _ = _cwcarry(z, state, compressor)
+    return recon, dist, new_state
+
+
+def _cwcarry(z, state, compressor):
+    z_in = z if state.ef_memory is None \
+        else z + state.ef_memory.astype(z.dtype)
+    comp, new_q = compressor.compress_stateful(z_in, state.quantizer)
+    new_ef = None if state.ef_memory is None else comp.residual
+    new_state = CutState(quantizer=new_q, ef_memory=new_ef)
+    return comp.recon, _distortion(comp.residual), new_state, comp.residual
+
+
+def _cwcarry_fwd(z, lam, state, compressor):
+    recon, dist, new_state, residual = _cwcarry(z, state, compressor)
+    return ((recon, dist, new_state),
+            (residual, jnp.asarray(lam, jnp.float32), state))
+
+
+def _cwcarry_bwd(compressor, res, g):
+    gz = g[0]   # distortion and state outputs are carry/metrics: dropped
+    residual, lam, state = res
+    return (gz + lam.astype(gz.dtype) * residual.astype(gz.dtype),
+            jnp.zeros_like(lam), _zero_state_cotangent(state))
+
+
+compress_with_correction_carry.defvjp(_cwcarry_fwd, _cwcarry_bwd)

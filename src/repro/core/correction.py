@@ -15,8 +15,9 @@ emits z̃; the backward pass adds λ·(z − z̃) to the incoming cotangent. λ 
 recovers the naive straight-through estimator the paper ablates against.
 
 This module is the PQ-specialized fast path; the direction-agnostic
-generalization (same VJP structure over any registered codec, plus the
-downlink hook) lives in ``core/compressors.py``.
+generalization (same VJP structure over any registered codec, the downlink
+hooks, and the state-carrying variant that threads codebook warm-start +
+error-feedback memory across rounds) lives in ``core/compressors.py``.
 """
 
 from __future__ import annotations

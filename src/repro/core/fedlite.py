@@ -49,7 +49,8 @@ def make_train_step(model: TransformerLM, optimizer: Optimizer, *,
                     quantize: bool = True,
                     microbatches: int = 1,
                     lam_schedule: Optional[Callable] = None,
-                    donate: bool = True) -> Callable:
+                    donate: bool = True,
+                    step_key: Optional[jax.Array] = None) -> Callable:
     """Build the jitted FedLite (quantize=True) / SplitFed (False) step.
 
     ``microbatches > 1`` runs gradient accumulation inside the step: the
@@ -63,19 +64,42 @@ def make_train_step(model: TransformerLM, optimizer: Optimizer, *,
     keeps λ≈0 until the server head carries signal, avoiding the
     activation-collapse failure mode of a strong constant λ at extreme
     compression (see EXPERIMENTS.md §Perf).
+
+    ``step_key`` (beyond-paper): a base PRNG key; each step folds in
+    ``state.step`` and hands the derived key to the model's cut-layer
+    codecs — today that enables stochastic rounding on the ``scalarq``
+    downlink. ``None`` keeps the deterministic, bitwise-historical path.
+
+    The returned step accepts an optional third argument ``cut_state``
+    (`core/compressors.CutState`): when passed, the model threads codebook
+    warm-start / error-feedback state through the round and returns the
+    updated state under ``metrics["cut_state"]`` (callers pop it before
+    treating metrics as scalars). Incompatible with ``microbatches > 1``.
     """
 
-    def loss_fn(params, batch, step):
+    def loss_fn(params, batch, step, cut_state):
         lam = None if lam_schedule is None else lam_schedule(step)
-        return model.loss(params, batch, quantize=quantize, lam_override=lam)
+        kw = {}
+        if step_key is not None:
+            kw["key"] = jax.random.fold_in(step_key, step)
+        if cut_state is not None:
+            kw["cut_state"] = cut_state
+        return model.loss(params, batch, quantize=quantize, lam_override=lam,
+                          **kw)
 
-    def grads_of(params, batch, step):
-        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, step)
+    def grads_of(params, batch, step, cut_state=None):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, step,
+                                                         cut_state)
 
-    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+    def train_step(state: TrainState, batch,
+                   cut_state=None) -> Tuple[TrainState, Dict]:
         if microbatches == 1:
-            (loss, metrics), grads = grads_of(state.params, batch, state.step)
+            (loss, metrics), grads = grads_of(state.params, batch, state.step,
+                                              cut_state)
         else:
+            if cut_state is not None:
+                raise ValueError(
+                    "cut_state is not supported with microbatches > 1")
             def split(x):
                 return x.reshape((microbatches, x.shape[0] // microbatches)
                                  + x.shape[1:])
@@ -109,7 +133,8 @@ def make_train_step(model: TransformerLM, optimizer: Optimizer, *,
 
 
 def make_weighted_step(model, optimizer: Optimizer, *,
-                       quantize: bool = True) -> Callable:
+                       quantize: bool = True, donate: bool = True,
+                       step_key: Optional[jax.Array] = None) -> Callable:
     """Per-contribution staleness-weighted server update (FedBuff, exact).
 
     ``step(state, batches, weights)`` takes client-major batches (every leaf
@@ -123,20 +148,40 @@ def make_weighted_step(model, optimizer: Optimizer, *,
     scaled the fused cohort gradient by mean(w). The two agree exactly only
     when all buffered contributions share one staleness. Weights are traced
     (no recompile per staleness multiset); one optimizer update per flush.
+
+    ``donate=True`` donates the train state to the jit — like
+    ``make_train_step`` — so the optimizer update reuses the parameter
+    buffers instead of copying the full params per async flush (pass False
+    when the caller keeps using the pre-step state). ``step_key`` and the
+    optional ``cut_state`` argument (leaves with a leading client axis)
+    mirror ``make_train_step``'s cut-layer threading, per client.
     """
 
-    def loss_fn(params, batch):
-        return model.loss(params, batch, quantize=quantize)
+    def loss_fn(params, batch, key, cut_state):
+        kw = {}
+        if key is not None:
+            kw["key"] = key
+        if cut_state is not None:
+            kw["cut_state"] = cut_state
+        return model.loss(params, batch, quantize=quantize, **kw)
 
-    def weighted_step(state: TrainState, batches, weights
-                      ) -> Tuple[TrainState, Dict]:
-        def per_client(params, b):
+    def weighted_step(state: TrainState, batches, weights,
+                      cut_state=None) -> Tuple[TrainState, Dict]:
+        num_clients = weights.shape[0]
+        base = None if step_key is None \
+            else jax.random.fold_in(step_key, state.step)
+        keys = None if base is None else jax.random.split(base, num_clients)
+
+        def per_client(params, b, key, cs):
             (loss, metrics), g = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, b)
+                loss_fn, has_aux=True)(params, b, key, cs)
             return g, loss, metrics
 
         grads, losses, metrics = jax.vmap(
-            per_client, in_axes=(None, 0))(state.params, batches)
+            per_client,
+            in_axes=(None, 0, None if keys is None else 0,
+                     None if cut_state is None else 0))(
+            state.params, batches, keys, cut_state)
         w = weights.astype(jnp.float32) / weights.shape[0]
         ghat = jax.tree.map(
             lambda g: jnp.tensordot(w, g.astype(jnp.float32), axes=1)
@@ -144,12 +189,16 @@ def make_weighted_step(model, optimizer: Optimizer, *,
         updates, opt_state = optimizer.update(ghat, state.opt_state,
                                               state.params)
         params = jax.tree.map(operator.add, state.params, updates)
+        # the cut state is carry, not a scalar metric: keep its client axis
+        new_cut = metrics.pop("cut_state", None)
         metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
         metrics = dict(metrics, loss=jnp.mean(losses),
                        mean_staleness_weight=jnp.mean(weights))
+        if new_cut is not None:
+            metrics["cut_state"] = new_cut
         return TrainState(params, opt_state, state.step + 1), metrics
 
-    return jax.jit(weighted_step)
+    return jax.jit(weighted_step, donate_argnums=(0,) if donate else ())
 
 
 def make_eval_step(model: TransformerLM) -> Callable:

@@ -20,7 +20,7 @@ The assignment / encode primitives are pluggable via a named registry:
                    otherwise (interpret-mode Pallas is for correctness, not
                    speed, so it is never auto-selected off-TPU).
 
-A backend bundles two functions:
+A backend bundles the quantizer's compute primitives:
 
   * ``assign(x, cents) -> codes`` — nearest-centroid assignment, used inside
     the Lloyd iterations (``x`` is a (chunk, D) tile).
@@ -29,6 +29,18 @@ A backend bundles two functions:
     implementation (``repro.kernels.pq_quantize``) does one HBM read and two
     writes per element instead of the three separate sweeps the naive path
     takes.
+  * ``update(x, weights, cents, chunk) -> (dsums, counts)`` — one Lloyd
+    iteration's statistics: assign + deviation-accumulate fused in a single
+    HBM sweep (``repro.kernels.lloyd_update`` under the Pallas backend).
+    ``None`` (the jnp default, and any backend registered without one) falls
+    back to a ``lax.scan`` over chunks built on ``assign``, which
+    materializes a (chunk, L) one-hot and re-reads the centroids per step —
+    the structure the fused kernel eliminates.
+
+Warm-start: ``lloyd``/``kmeans`` accept ``init_centroids`` to resume from a
+previous round's codebook instead of re-seeding — the cross-round codebook
+reuse ``core/quantizer.QuantizerState`` builds on (steady-state rounds run
+``PQConfig.warm_iters`` ≈ half the cold-start Lloyd iterations).
 
 Numerics: the Lloyd centroid update accumulates *deviations from the current
 centroid* (``Σ onehot·(x − c_old)``, then ``c_new = c_old + Σ/count``) rather
@@ -36,7 +48,10 @@ than raw coordinate sums. This is algebraically the same mean but loses far
 less precision in fp32 — in particular, a cluster whose members all equal its
 centroid gets an exactly-zero update, so exact-reconstruction inputs yield an
 exactly-zero quantization residual (required by the FedLite → SplitFed
-gradient-equivalence property, tests/test_fedlite.py).
+gradient-equivalence property, tests/test_fedlite.py). Empty clusters keep
+their previous centroid exactly (``counts == 0`` gates the update). Both
+properties hold on every backend: the fused update kernel preserves the
+deviation accumulation bit-structure (tests/test_lloyd_update.py).
 """
 
 from __future__ import annotations
@@ -66,6 +81,8 @@ class Backend(NamedTuple):
                      Tuple[jax.Array, jax.Array, jax.Array]]
     # (x, cents, chunk) -> (codes, sqdist); None = derive from encode
     assign_dist: Optional[Callable] = None
+    # (x, weights, cents, chunk) -> (dsums, counts); None = scan over assign
+    update: Optional[Callable] = None
 
 
 def _pad_chunks(x: jax.Array, chunk: int):
@@ -134,10 +151,43 @@ def _assign_dist_pallas(x: jax.Array, centroids: jax.Array, chunk: int):
     return ops.kmeans_assign(x, centroids, block_n=min(512, max(chunk, 8)))
 
 
+def _update_scan(assign, x, weights, centroids, chunk):
+    """Fallback Lloyd-update: scan over chunks on top of ``assign``.
+
+    This is the pre-kernel structure: per scan step XLA materializes a
+    (chunk, L) one-hot and re-reads the centroids for the deviation gather.
+    Bitwise-identical to the historical in-``lloyd`` accumulation."""
+    L, d = centroids.shape
+    xc = x.reshape(-1, min(chunk, max(x.shape[0], 1)), d)  # x pre-padded
+    wc = weights.reshape(xc.shape[0], -1)
+
+    def acc(carry, inp):
+        dsums, counts = carry
+        xb, wb = inp
+        codes = assign(xb, centroids)
+        onehot = jax.nn.one_hot(codes, L, dtype=jnp.float32) * wb[:, None]
+        # deviation accumulation: exact-cover clusters contribute 0
+        delta = xb - centroids[codes]
+        return (dsums + onehot.T @ delta,
+                counts + onehot.sum(axis=0)), None
+
+    (dsums, counts), _ = jax.lax.scan(
+        acc, (jnp.zeros((L, d), jnp.float32), jnp.zeros((L,), jnp.float32)),
+        (xc, wc))
+    return dsums, counts
+
+
+def _update_pallas(x: jax.Array, weights: jax.Array, centroids: jax.Array,
+                   chunk: int):
+    from repro.kernels import ops
+    return ops.lloyd_update(x, centroids, weights,
+                            block_n=min(512, max(chunk, 8)))
+
+
 _REGISTRY: Dict[str, Backend] = {
     "jnp": Backend("jnp", _assign_jnp, _encode_jnp, _assign_dist_jnp),
     "pallas": Backend("pallas", _assign_pallas, _encode_pallas,
-                      _assign_dist_pallas),
+                      _assign_dist_pallas, _update_pallas),
 }
 
 
@@ -216,41 +266,46 @@ def _init_centroids(x: jax.Array, num_clusters: int,
 
 def lloyd(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
           key: Optional[jax.Array] = None, chunk: int = 4096,
-          backend: str = "jnp") -> jax.Array:
+          backend: str = "jnp",
+          init_centroids: Optional[jax.Array] = None) -> jax.Array:
     """Lloyd iterations only: returns fp32 centroids (L, D), no final assign.
 
-    The centroid update is accumulated as deviations from the current
-    centroids (see module docstring) so clusters that exactly cover their
-    points are fixed points of the update in fp32, not just in exact
-    arithmetic.
+    ``init_centroids`` (L, D) warm-starts the iterations from a previous
+    round's codebook instead of FPS/kmeans++ seeding — the cross-round
+    reuse path (``num_iters`` is then typically ``PQConfig.warm_iters``;
+    ``num_iters=0`` returns the initializer unchanged).
+
+    Each iteration's statistics come from the backend's fused ``update``
+    (one HBM sweep under Pallas) or the ``assign``-based scan fallback. The
+    centroid update is accumulated as deviations from the current centroids
+    (see module docstring) so clusters that exactly cover their points are
+    fixed points of the update in fp32, not just in exact arithmetic.
     """
     x = x.astype(jnp.float32)
     n, d = x.shape
     L = num_clusters
-    assign = get_backend(backend).assign
+    b = get_backend(backend)
 
     # pad N up to a multiple of chunk; padded rows carry zero weight
     xc, n, n_pad = _pad_chunks(x, chunk)
     weights = jnp.concatenate(
         [jnp.ones((n,), jnp.float32), jnp.zeros((n_pad,), jnp.float32)])
-    wc = weights.reshape(xc.shape[0], xc.shape[1])
+    x_flat = xc.reshape(-1, d)
+    chunk_eff = xc.shape[1]
 
-    cents0 = _init_centroids(x, L, key)
+    if init_centroids is not None:
+        cents0 = init_centroids.astype(jnp.float32)
+        if cents0.shape != (L, d):
+            raise ValueError(f"init_centroids {cents0.shape} != ({L}, {d})")
+    else:
+        cents0 = _init_centroids(x, L, key)
 
     def lloyd_iter(_, cents):
-        def acc(carry, inp):
-            dsums, counts = carry
-            xb, wb = inp
-            codes = assign(xb, cents)
-            onehot = jax.nn.one_hot(codes, L, dtype=jnp.float32) * wb[:, None]
-            # deviation accumulation: exact-cover clusters contribute 0
-            delta = xb - cents[codes]
-            return (dsums + onehot.T @ delta,
-                    counts + onehot.sum(axis=0)), None
-
-        (dsums, counts), _ = jax.lax.scan(
-            acc, (jnp.zeros((L, d), jnp.float32), jnp.zeros((L,), jnp.float32)),
-            (xc, wc))
+        if b.update is not None:
+            dsums, counts = b.update(x_flat, weights, cents, chunk_eff)
+        else:
+            dsums, counts = _update_scan(b.assign, x_flat, weights, cents,
+                                         chunk_eff)
         # empty clusters keep their previous centroid
         return cents + jnp.where(counts[:, None] > 0,
                                  dsums / jnp.maximum(counts[:, None], 1.0),
@@ -261,7 +316,8 @@ def lloyd(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
 
 def kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
            key: Optional[jax.Array] = None, chunk: int = 4096,
-           backend: str = "jnp") -> KMeansResult:
+           backend: str = "jnp",
+           init_centroids: Optional[jax.Array] = None) -> KMeansResult:
     """Lloyd's algorithm with a fixed iteration count.
 
     Args:
@@ -271,6 +327,7 @@ def kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
       key: optional PRNG key for random init; None = deterministic strided.
       chunk: points per scan step for the assign/accumulate pass.
       backend: "jnp" | "pallas" | "auto" (see module docstring).
+      init_centroids: optional (L, D) warm-start codebook (skips seeding).
     Returns:
       KMeansResult(centroids (L, D) in x.dtype, codes (N,) int32, distortion).
     """
@@ -278,7 +335,7 @@ def kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
     xf = x.astype(jnp.float32)
     n = xf.shape[0]
     cents = lloyd(xf, num_clusters, num_iters, key=key, chunk=chunk,
-                  backend=backend)
+                  backend=backend, init_centroids=init_centroids)
     b = get_backend(backend)
     if b.assign_dist is not None:
         codes, sqdist = b.assign_dist(xf, cents, chunk)
@@ -294,25 +351,35 @@ def kmeans_jit(x, num_clusters, num_iters):
     return kmeans(x, num_clusters, num_iters)
 
 
-def _vmap_groups(per_group_fn, x, key, **kw):
+def _vmap_groups(per_group_fn, x, key, init=None, **kw):
     fn = functools.partial(per_group_fn, **kw)
-    if key is None:
+    keys = None if key is None else jax.random.split(key, x.shape[0])
+    if init is None and keys is None:
         return jax.vmap(lambda g: fn(g))(x)
-    keys = jax.random.split(key, x.shape[0])
-    return jax.vmap(lambda g, k: fn(g, key=k))(x, keys)
+    if init is None:
+        return jax.vmap(lambda g, k: fn(g, key=k))(x, keys)
+    if keys is None:
+        return jax.vmap(lambda g, c: fn(g, init_centroids=c))(x, init)
+    return jax.vmap(
+        lambda g, k, c: fn(g, key=k, init_centroids=c))(x, keys, init)
 
 
 def batched_lloyd(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
                   key: Optional[jax.Array] = None, chunk: int = 4096,
-                  backend: str = "jnp") -> jax.Array:
-    """vmapped ``lloyd`` over a leading group axis. x: (G, N, D) -> (G, L, D)."""
-    return _vmap_groups(lloyd, x, key, num_clusters=num_clusters,
-                        num_iters=num_iters, chunk=chunk, backend=backend)
+                  backend: str = "jnp",
+                  init_centroids: Optional[jax.Array] = None) -> jax.Array:
+    """vmapped ``lloyd`` over a leading group axis. x: (G, N, D) -> (G, L, D).
+    ``init_centroids``: optional (G, L, D) per-group warm-start codebooks."""
+    return _vmap_groups(lloyd, x, key, init_centroids,
+                        num_clusters=num_clusters, num_iters=num_iters,
+                        chunk=chunk, backend=backend)
 
 
 def batched_kmeans(x: jax.Array, num_clusters: int, num_iters: int = 8, *,
                    key: Optional[jax.Array] = None, chunk: int = 4096,
-                   backend: str = "jnp"):
+                   backend: str = "jnp",
+                   init_centroids: Optional[jax.Array] = None):
     """vmapped kmeans over a leading group axis.  x: (G, N, D)."""
-    return _vmap_groups(kmeans, x, key, num_clusters=num_clusters,
-                        num_iters=num_iters, chunk=chunk, backend=backend)
+    return _vmap_groups(kmeans, x, key, init_centroids,
+                        num_clusters=num_clusters, num_iters=num_iters,
+                        chunk=chunk, backend=backend)

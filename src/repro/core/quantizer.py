@@ -30,10 +30,32 @@ bits come from ``PQConfig.message_bits`` here (the paper's §4.1 cost model,
 as a ``pq`` payload (fp16 codebooks + ceil(log2 L)-bit packed codes) and
 must agree with the analytic count to within the 24 B header.
 
+Cross-round codebook warm-start
+-------------------------------
+FedLite's stateless-client story rebuilds codebooks from scratch every
+round; in the simulation (and in any deployment where a client persists a
+few KB between rounds) the previous round's codebook is an excellent
+initializer, because activation distributions drift slowly. `QuantizerState`
+carries the per-group fp32 codebooks plus a round counter across rounds:
+
+  * cold round (``state is None`` / ``quantize``'s default): FPS/kmeans++
+    seeding + ``kmeans_iters`` Lloyd iterations — the paper's behavior.
+  * warm round (``quantize_stateful`` with a prior state): Lloyd resumes
+    from ``state.codebooks`` and runs only ``PQConfig.warm_iters``
+    iterations (default ``kmeans_iters // 2``), roughly halving the
+    steady-state per-step K-means cost.
+
+The state is threaded by the callers that own round boundaries —
+``core/compressors.PQCompressor.compress_stateful`` inside the train step
+and ``federated/runtime.FederatedTrainer`` across scheduler rounds — and it
+is also what the ``pq-delta`` wire kind (``federated/wire.py``) diffs
+against to shrink the codebook component of the uplink message.
+
 Selecting a quantizer backend
 -----------------------------
-``PQConfig.backend`` picks the compute backend for both the Lloyd
-iterations and the final encode (assignment + dequantize + residual):
+``PQConfig.backend`` picks the compute backend for the Lloyd iterations
+(assign + the fused deviation-accumulate update, ``repro.kernels.
+lloyd_update``) and the final encode (assignment + dequantize + residual):
 
   * ``"auto"`` (default) — the fused Pallas kernel (compiled Mosaic) on TPU,
     pure-jnp elsewhere. This is what production configs should use.
@@ -56,7 +78,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +105,8 @@ class PQConfig:
     phi_bits: int = 64           # float width used for *accounting* (paper: 64)
     kmeans_chunk: int = 4096
     backend: str = "auto"        # "jnp" | "pallas" | "auto" (see module doc)
+    warm_iters: Optional[int] = None  # Lloyd iters on warm rounds
+    #                                   (None = kmeans_iters // 2)
 
     def __post_init__(self):
         if self.num_subvectors % self.num_groups != 0:
@@ -93,6 +117,8 @@ class PQConfig:
         if self.backend not in _km.available_backends():
             raise ValueError(
                 f"backend={self.backend!r} not one of {_km.available_backends()}")
+        if self.warm_iters is not None and self.warm_iters < 0:
+            raise ValueError(f"warm_iters={self.warm_iters} must be >= 0")
 
     @property
     def q(self) -> int:
@@ -105,6 +131,12 @@ class PQConfig:
     @property
     def l(self) -> int:
         return self.num_clusters
+
+    @property
+    def effective_warm_iters(self) -> int:
+        """Lloyd iterations on a warm-started round (see module docstring)."""
+        return self.kmeans_iters // 2 if self.warm_iters is None \
+            else self.warm_iters
 
     def subvector_dim(self, d: int) -> int:
         if d % self.num_subvectors != 0:
@@ -157,6 +189,23 @@ class QuantizedBatch(NamedTuple):
                              # distortion is accumulated in fp32 before the cast)
 
 
+class QuantizerState(NamedTuple):
+    """Cross-round quantizer carry: the per-group codebooks of the last
+    round (kept in fp32 — the Lloyd compute dtype) and a round counter.
+
+    An all-array NamedTuple: jit/vmap-transparent, so trainers thread it
+    through jitted steps and stack it per client. ``rounds`` counts how many
+    quantizes contributed to ``codebooks`` (0-based warm lineage length)."""
+    codebooks: jax.Array     # (R, L, d/q) fp32
+    rounds: jax.Array        # () int32
+
+
+def init_quantizer_state(qb: QuantizedBatch) -> QuantizerState:
+    """Bootstrap a warm-start state from a cold round's output."""
+    return QuantizerState(codebooks=qb.codebooks.astype(jnp.float32),
+                          rounds=jnp.ones((), jnp.int32))
+
+
 def _to_groups(z: jax.Array, cfg: PQConfig) -> jax.Array:
     """(N, d) -> (R, (q/R)·N, d/q) grouping consecutive subvector positions."""
     n, d = z.shape
@@ -173,7 +222,8 @@ def _from_groups(groups: jax.Array, n: int, d: int, cfg: PQConfig) -> jax.Array:
 
 
 def quantize(z: jax.Array, cfg: PQConfig,
-             key: Optional[jax.Array] = None) -> QuantizedBatch:
+             key: Optional[jax.Array] = None, *,
+             state: Optional[QuantizerState] = None) -> QuantizedBatch:
     """Quantize a batch of activation vectors with the grouped PQ scheme.
 
     ``z`` may have any leading shape; it is flattened to (N, d) where d is the
@@ -183,6 +233,12 @@ def quantize(z: jax.Array, cfg: PQConfig,
     the backend's fused encode (``repro.kernels.pq_quantize`` under the
     Pallas backend), so callers that need the residual — the gradient
     correction — get it for free instead of re-deriving it from z̃.
+
+    ``state`` (a previous round's `QuantizerState`) switches Lloyd to the
+    warm-start path: seeding is skipped and only ``cfg.effective_warm_iters``
+    iterations run from ``state.codebooks``. Callers that carry state across
+    rounds should use ``quantize_stateful``, which also returns the updated
+    state.
     """
     orig_shape = z.shape
     d = orig_shape[-1]
@@ -190,9 +246,15 @@ def quantize(z: jax.Array, cfg: PQConfig,
     n = z2.shape[0]
 
     groups = _to_groups(z2.astype(jnp.float32), cfg)  # (R, M, dsub)
-    cents = _km.batched_lloyd(
-        groups, cfg.num_clusters, cfg.kmeans_iters, key=key,
-        chunk=cfg.kmeans_chunk, backend=cfg.backend)
+    if state is None:
+        cents = _km.batched_lloyd(
+            groups, cfg.num_clusters, cfg.kmeans_iters, key=key,
+            chunk=cfg.kmeans_chunk, backend=cfg.backend)
+    else:
+        cents = _km.batched_lloyd(
+            groups, cfg.num_clusters, cfg.effective_warm_iters, key=None,
+            chunk=cfg.kmeans_chunk, backend=cfg.backend,
+            init_centroids=state.codebooks.astype(jnp.float32))
     # fused final pass per group: z̃ + residual + codes in one sweep
     enc = _km.get_backend(cfg.backend).encode
     recon, resid, codes = jax.vmap(
@@ -206,6 +268,24 @@ def quantize(z: jax.Array, cfg: PQConfig,
     return QuantizedBatch(z_tilde.reshape(orig_shape), codes,
                           cents.astype(z.dtype), per_vec,
                           residual.reshape(orig_shape))
+
+
+def quantize_stateful(z: jax.Array, cfg: PQConfig,
+                      state: Optional[QuantizerState] = None,
+                      key: Optional[jax.Array] = None
+                      ) -> Tuple[QuantizedBatch, QuantizerState]:
+    """Warm-start-aware quantize: returns (batch, next round's state).
+
+    ``state=None`` runs the cold path (full seeding + ``kmeans_iters``) and
+    bootstraps the state; a prior state runs ``effective_warm_iters`` Lloyd
+    iterations from its codebooks. The returned state's codebooks are the
+    fp32 Lloyd output (the wire's acked copy is the fp16/delta-reconstructed
+    view — see ``federated/wire.encode_pq_delta``)."""
+    qb = quantize(z, cfg, key, state=state)
+    rounds = jnp.zeros((), jnp.int32) if state is None else state.rounds
+    new_state = QuantizerState(codebooks=qb.codebooks.astype(jnp.float32),
+                               rounds=rounds + 1)
+    return qb, new_state
 
 
 def quantization_error(z: jax.Array, cfg: PQConfig) -> jax.Array:

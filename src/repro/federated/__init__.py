@@ -42,6 +42,16 @@ Five layers, composed by `FederatedTrainer`:
                   time/bytes-to-target reductions and run-level codec
                   metadata in ``Trace.meta``.
 
+Cross-round state (all default-off): `FederatedTrainer` can additionally
+carry cut-layer state across scheduler rounds — PQ codebook warm-start
+(``warm_start=True``: Lloyd resumes from last round's codebook at
+``PQConfig.warm_iters`` iterations; cohort-global under the stacked
+policies, per-client under `AsyncBuffer`), per-client error-feedback
+memory (``error_feedback=True``), stochastic downlink rounding
+(``stochastic_downlink=True``) and ``pq-delta`` codebook wire encoding
+(``codebook_delta_bits``: the uplink ships b-bit quantized codebook deltas
+against the acked reference; ``wire.encode_pq_delta``).
+
 The ideal fleet + `FullSync` + dense downlink reproduces the original
 synchronous simulation bitwise (tests/test_scheduler.py,
 tests/test_compressors.py); heterogeneous fleets and per-direction codecs

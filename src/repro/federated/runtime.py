@@ -35,9 +35,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compressors import (CutCompressor, NoneCompressor,
+from repro.core.compressors import (CutCompressor, CutState, NoneCompressor,
                                     PQCompressor, make_compressor)
 from repro.core.fedlite import TrainState, make_train_step, make_weighted_step
+from repro.core.quantizer import QuantizerState, quantize_stateful
 from repro.data.synthetic import FederatedDataset
 from repro.federated.network import ClientProfile, uniform_fleet, validate_fleet
 from repro.federated.scheduler import (Arrival, AsyncBuffer, FullSync,
@@ -171,6 +172,25 @@ class FederatedTrainer:
     # the training VJP and the measured wire bytes use the same codec.
     uplink_compressor: Any = None
     downlink_compressor: Any = None
+    # ---- cross-round cut-layer state (all default-off: bitwise-historical)
+    # warm_start: carry the PQ codebooks across scheduler rounds — Lloyd
+    # resumes from last round's codebook at PQConfig.warm_iters iterations
+    # (cohort-global on the stacked/FullSync path; per-client under
+    # AsyncBuffer, falling back to a cold round whenever the buffer holds a
+    # first-time client).
+    warm_start: bool = False
+    # error_feedback: per-client uplink error-feedback memory (the
+    # `ErrorFeedback` telescoping semantics), gathered/scattered by client
+    # id across rounds — clients re-add their accumulated compression error
+    # before compressing.
+    error_feedback: bool = False
+    # stochastic_downlink: thread a per-step PRNG key into the downlink
+    # VJP so scalarq gradient codecs round stochastically (unbiased).
+    stochastic_downlink: bool = False
+    # codebook_delta_bits: measure the uplink with the `pq-delta` wire kind
+    # (quantized codebook deltas vs the acked reference) instead of fresh
+    # fp16 codebooks; the measured steady-state bytes feed the scheduler.
+    codebook_delta_bits: Optional[int] = None
 
     def __post_init__(self):
         pq = getattr(self.model, "pq", None)
@@ -207,10 +227,37 @@ class FederatedTrainer:
                 f"{type(self.model).__name__} has no uplink_compressor "
                 f"field; only 'pq'/'none' uplinks are realizable for it")
         self.uplink = up
+        if self.codebook_delta_bits is not None:
+            if not 1 <= self.codebook_delta_bits <= 16:
+                raise ValueError(f"codebook_delta_bits="
+                                 f"{self.codebook_delta_bits} not in [1, 16]")
+            if not isinstance(up, PQCompressor):
+                raise ValueError("codebook_delta_bits needs a pq uplink")
+        if self.warm_start and not isinstance(up, PQCompressor):
+            raise ValueError("warm_start needs a pq uplink")
+        if (self.warm_start or self.error_feedback) and not self.quantize:
+            raise ValueError("warm_start/error_feedback need quantize=True")
+        step_key = jax.random.PRNGKey(self.seed) \
+            if self.stochastic_downlink else None
         self._step = make_train_step(self.model, self.optimizer,
-                                     quantize=self.quantize, donate=False)
+                                     quantize=self.quantize, donate=False,
+                                     step_key=step_key)
+        # the weighted step is only called inside run()'s execute, which
+        # rebinds the state — donate it (no full-params copy per async
+        # flush on donation-capable backends); self._step stays
+        # non-donating because round() is public API whose callers may
+        # reuse the input state
         self._weighted_step = make_weighted_step(self.model, self.optimizer,
-                                                 quantize=self.quantize)
+                                                 quantize=self.quantize,
+                                                 donate=True,
+                                                 step_key=step_key)
+        self._wants_cut_state = self.warm_start or self.error_feedback
+        self._global_q: Optional[QuantizerState] = None   # stacked path
+        self._global_q_nparts = 0                         # cohort size of it
+        self._client_q: Dict[int, Any] = {}               # AsyncBuffer path
+        self._ef_memory: Dict[int, Any] = {}              # per-client rows
+        self._act_struct = None                           # per-client acts
+        self.last_codebook_meta: Dict[str, Any] = {}
         self._rng = np.random.default_rng(self.seed)
         if self.fleet is None:
             self.fleet = uniform_fleet(self.data.num_clients)
@@ -241,6 +288,79 @@ class FederatedTrainer:
         batch = self.cohort_batch(key)
         return self._step(state, batch)
 
+    # ---- cross-round cut-layer state ---------------------------------------
+    def _client_act_struct(self, params, part):
+        """Shape/dtype of one client's cut activation (eval_shape, cached)."""
+        if self._act_struct is None:
+            acts = jax.eval_shape(
+                lambda p, b: self.model.client_forward(p, b),
+                params["client"], part)
+            if isinstance(acts, tuple):   # TransformerLM: (acts, caches, aux)
+                acts = acts[0]
+            self._act_struct = acts
+        return self._act_struct
+
+    def _client_ef(self, cid: int):
+        mem = self._ef_memory.get(int(cid))
+        return mem if mem is not None \
+            else jnp.zeros(self._act_struct.shape, self._act_struct.dtype)
+
+    def _cut_state_for(self, participants, params, parts, stacked: bool):
+        """Assemble the round's `CutState` (or None when both features are
+        off). Stacked path: cohort-global codebooks + per-client EF rows
+        concatenated in participant order. Per-client (AsyncBuffer) path:
+        every leaf gains a leading client axis; warm-start falls back to a
+        cold round when any buffered client has no codebook yet (the vmap
+        needs a uniform state structure)."""
+        if not self._wants_cut_state:
+            return None
+        self._client_act_struct(params, parts[0])
+        cids = [int(a.client) for a in participants]
+        if stacked:
+            q = self._global_q if self.warm_start else None
+            # models that vmap the cut per client/row (TransformerLM per
+            # sequence, paper models with client_batch > 0) return state
+            # with a leading stacked axis — detectable as codebooks rank >
+            # (R, L, dsub). Such state only fits a cohort of the same
+            # size: fall back to a cold round when the count changes.
+            if q is not None and q.codebooks.ndim > 3 \
+                    and len(cids) != self._global_q_nparts:
+                q = None
+            ef = jnp.concatenate([self._client_ef(c) for c in cids], axis=0) \
+                if self.error_feedback else None
+            return CutState(quantizer=q, ef_memory=ef)
+        q = None
+        if self.warm_start and all(c in self._client_q for c in cids):
+            q = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                             *[self._client_q[c] for c in cids])
+        ef = jnp.stack([self._client_ef(c) for c in cids], axis=0) \
+            if self.error_feedback else None
+        return CutState(quantizer=q, ef_memory=ef)
+
+    def _absorb_cut_state(self, participants, new_cut, stacked: bool):
+        """Scatter a step's returned `CutState` back into per-client slots
+        (and the cohort-global codebook slot on the stacked path)."""
+        if new_cut is None:
+            return
+        cids = [int(a.client) for a in participants]
+        if self.warm_start and new_cut.quantizer is not None:
+            if stacked:
+                self._global_q = new_cut.quantizer
+                self._global_q_nparts = len(cids)
+            else:
+                for i, c in enumerate(cids):
+                    self._client_q[c] = jax.tree.map(
+                        lambda x: x[i], new_cut.quantizer)
+        if self.error_feedback and new_cut.ef_memory is not None:
+            if stacked:
+                rows = self._act_struct.shape[0]
+                for i, c in enumerate(cids):
+                    self._ef_memory[c] = \
+                        new_cut.ef_memory[i * rows:(i + 1) * rows]
+            else:
+                for i, c in enumerate(cids):
+                    self._ef_memory[c] = new_cut.ef_memory[i]
+
     # ---- wire measurement --------------------------------------------------
     def measure_round_bytes(self, state: TrainState, key: jax.Array):
         """Measured per-client (uplink, downlink) payload bytes for a round.
@@ -253,6 +373,13 @@ class FederatedTrainer:
         tensor stands in for the gradient and a single measurement is exact
         for every round. ``none`` on either side measures the dense tensor
         at its native dtype.
+
+        With ``codebook_delta_bits`` set, the uplink is measured as the
+        steady-state ``pq-delta`` payload: a second client batch is
+        quantized warm-started from the first, its codebook is delta-encoded
+        against the acked (fp16-decoded) round-0 reference, and the measured
+        codebook-bytes reduction lands in ``self.last_codebook_meta`` (and
+        the run's ``trace.meta``).
         """
         batch = self.data.sample_batch(0, key, self.client_batch,
                                        **(self.batch_kwargs or {}))
@@ -272,7 +399,48 @@ class FederatedTrainer:
             return len(compressor.wire_payload(
                 comp, value_dtype=self.codebook_wire_dtype))
 
-        return measured(self.uplink), measured(self.downlink)
+        uplink_bytes = measured(self.uplink)
+        if self.codebook_delta_bits is not None and self.quantize \
+                and isinstance(self.uplink, PQCompressor):
+            uplink_bytes = self._measure_delta_uplink(state, key, acts2,
+                                                      uplink_bytes)
+        return uplink_bytes, measured(self.downlink)
+
+    def _measure_delta_uplink(self, state: TrainState, key: jax.Array,
+                              acts2, full_bytes: int) -> int:
+        """Steady-state `pq-delta` uplink bytes (see measure_round_bytes)."""
+        from repro.federated import wire
+        cfg = self.uplink.cfg
+        qb1, qstate = quantize_stateful(acts2, cfg)
+        # the acked reference is what the server decoded from round 0 —
+        # the codebook at wire fidelity, not the client's private fp32 copy
+        ref = wire.decode_bytes(
+            wire.encode_bytes(qb1, self.codebook_wire_dtype)) \
+            .codebooks.astype(np.float32)
+        batch2 = self.data.sample_batch(0, jax.random.fold_in(key, 1),
+                                        self.client_batch,
+                                        **(self.batch_kwargs or {}))
+        acts_b = self.model.client_forward(state.params["client"], batch2)
+        if isinstance(acts_b, tuple):
+            acts_b = acts_b[0]
+        qb2, _ = quantize_stateful(acts_b.reshape(-1, acts_b.shape[-1]),
+                                   cfg, qstate)
+        payload, _ = wire.encode_pq_delta(qb2, ref, self.codebook_delta_bits)
+        d = int(acts2.shape[-1])
+        cb_full = int(np.prod(cfg.codebook_shape(d))) \
+            * wire._np_dtype(self.codebook_wire_dtype).itemsize
+        code_bytes = len(wire.encode_bytes(qb2, self.codebook_wire_dtype)) \
+            - wire.HEADER_BYTES - cb_full
+        cb_delta = len(payload) - wire.HEADER_BYTES - code_bytes
+        self.last_codebook_meta = {
+            "codebook_delta_bits": self.codebook_delta_bits,
+            "uplink_bytes_full_codebook": full_bytes,
+            "uplink_bytes_delta_codebook": len(payload),
+            "codebook_bytes_full": cb_full,
+            "codebook_bytes_delta": cb_delta,
+            "codebook_bytes_reduction": cb_full / max(cb_delta, 1),
+        }
+        return len(payload)
 
     def measure_uplink_bytes(self, state: TrainState, key: jax.Array) -> int:
         return self.measure_round_bytes(state, key)[0]
@@ -319,11 +487,29 @@ class FederatedTrainer:
                 # a run instead of flipping with the staleness draw.
                 batches = jax.tree.map(
                     lambda *xs: jnp.stack(xs, axis=0), *parts)
-                state, metrics = self._weighted_step(
-                    state, batches, jnp.asarray(weights, jnp.float32))
+                cut_in = self._cut_state_for(participants, state.params,
+                                             parts, stacked=False)
+                if cut_in is None:
+                    state, metrics = self._weighted_step(
+                        state, batches, jnp.asarray(weights, jnp.float32))
+                else:
+                    state, metrics = self._weighted_step(
+                        state, batches, jnp.asarray(weights, jnp.float32),
+                        cut_in)
+                self._absorb_cut_state(participants,
+                                       metrics.pop("cut_state", None),
+                                       stacked=False)
             else:
                 batch = self.stack_batches(parts)
-                state, metrics = self._step(state, batch)
+                cut_in = self._cut_state_for(participants, state.params,
+                                             parts, stacked=True)
+                if cut_in is None:
+                    state, metrics = self._step(state, batch)
+                else:
+                    state, metrics = self._step(state, batch, cut_in)
+                self._absorb_cut_state(participants,
+                                       metrics.pop("cut_state", None),
+                                       stacked=True)
             device_metrics.append(metrics)
             if log_every and update_idx % log_every == 0:
                 # the only mid-run host sync, at the caller-chosen cadence
@@ -349,7 +535,11 @@ class FederatedTrainer:
             else getattr(dl, "spec", dl.name),
             "uplink_bytes_per_client": uplink,
             "downlink_bytes_per_client": downlink,
+            "warm_start": self.warm_start,
+            "error_feedback": self.error_feedback,
+            "stochastic_downlink": self.stochastic_downlink,
         })
+        trace.meta.update(self.last_codebook_meta)
 
         # one blocking transfer for the whole run
         host_metrics = jax.device_get(device_metrics)

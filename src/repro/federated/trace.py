@@ -41,8 +41,12 @@ class Trace:
     """Ordered round records plus whole-run reductions.
 
     ``meta`` carries run-level context the records do not repeat per row:
-    which codec each direction ran (`core/compressors.py` spec names) and
-    the measured per-client payload bytes behind the per-round totals.
+    which codec each direction ran (`core/compressors.py` spec names), the
+    measured per-client payload bytes behind the per-round totals, the
+    cross-round state flags (``warm_start`` / ``error_feedback`` /
+    ``stochastic_downlink``), and — when ``pq-delta`` codebook encoding is
+    on — the measured codebook-bytes breakdown
+    (``codebook_bytes_full`` / ``codebook_bytes_delta`` / ``_reduction``).
     """
     records: List[RoundRecord] = dataclasses.field(default_factory=list)
     meta: Dict[str, object] = dataclasses.field(default_factory=dict)

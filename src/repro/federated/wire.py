@@ -25,16 +25,35 @@ Every payload that crosses the simulated client<->server WAN link is a
   * ``scalar`` — uniform b-bit quantization: an 8-byte f32 (lo, scale)
                  range followed by n·d codes packed at b bits.
 
+  Version-3 adds one kind (older kinds still ride version 2 so v2 decoders
+  keep working — the kind is *version-gated*):
+
+  * ``pq-delta`` — the codebook-reuse uplink: instead of L·(d/q)·R fresh
+                 fp16 codebook entries, the payload carries uniformly
+                 quantized *deltas* against the last acked codebook — an
+                 8-byte f32 (lo, scale) range + R·L·(d/q) delta codes at
+                 ``delta_bits`` (header ``bits`` field; default 8 → 2× on
+                 the codebook component) + the packed cluster codes (width
+                 derived from L). The codec is closed-loop (DPCM): the
+                 encoder returns the reconstruction ``ref + deq(delta)``
+                 and BOTH sides adopt it as the next acked reference, so
+                 client and server never drift. Decoding requires the
+                 reference (``decode_pq_delta``); the self-describing
+                 ``decode_payload`` rejects it with a pointer to that API.
+
 Unknown versions and kinds are rejected with a clear error — a stale or
 foreign payload fails loudly instead of decoding as garbage. Version-1
 payloads (the PR 2 codec, which only ever carried PQ uplink messages with a
-zero flags byte where the kind now lives) still decode.
+zero flags byte where the kind now lives) still decode, as do all
+version-2 payloads.
 
 The codec is bit-exact: ``decode_payload(encode)`` reproduces every code,
 index and range word exactly, values exactly at the wire dtype, and
 re-encoding a decoded payload is byte-identical (idempotent; asserted in
-tests). The only lossy step is the explicit value dtype cast, which is the
-transport decision the paper's φ accounts for — not a codec artifact.
+tests). The only lossy step is the explicit value dtype cast (and, for
+``pq-delta``, the explicit delta quantization — whose reconstruction is
+itself bit-exactly reproduced on both sides), which is the transport
+decision the paper's φ accounts for — not a codec artifact.
 
 Everything here is host-side numpy — the codec runs outside jit, on the
 simulation's measurement path, never inside the train step. (The b-bit
@@ -46,7 +65,7 @@ stream when 32 % b == 0.)
 from __future__ import annotations
 
 import struct
-from typing import NamedTuple, Optional, Union
+from typing import NamedTuple, Optional, Tuple, Union
 
 import numpy as np
 
@@ -57,15 +76,17 @@ from repro.core.quantizer import PQConfig, QuantizedBatch, bits_per_code
 _HEADER = struct.Struct("<4sBBBBIIHHI")
 HEADER_BYTES = _HEADER.size  # 24
 _MAGIC = b"FLW1"
-_VERSION = 2
-_SUPPORTED_VERSIONS = (1, 2)
+_VERSION = 2          # what the v2 kinds are written as (v2 decoders work)
+_VERSION_DELTA = 3    # pq-delta is version-gated: introduced in v3
+_SUPPORTED_VERSIONS = (1, 2, 3)
 
 KIND_PQ = 0        # == the version-1 flags byte, so v1 payloads parse as pq
 KIND_DENSE = 1
 KIND_SPARSE = 2
 KIND_SCALAR = 3
+KIND_PQ_DELTA = 4  # version >= 3 only
 _KIND_NAMES = {KIND_PQ: "pq", KIND_DENSE: "dense", KIND_SPARSE: "sparse",
-               KIND_SCALAR: "scalar"}
+               KIND_SCALAR: "scalar", KIND_PQ_DELTA: "pq-delta"}
 
 # value dtype code 0 is reserved: in a sparse payload it means "the values
 # are carried by a nested payload" (chained compressors)
@@ -107,6 +128,10 @@ def _check_header(payload: bytes):
                          f"{sorted(_KIND_NAMES.values())}")
     if version == 1 and kind != KIND_PQ:
         raise ValueError(f"version-1 payloads are always pq; got kind {kind}")
+    if kind == KIND_PQ_DELTA and version < _VERSION_DELTA:
+        raise ValueError(
+            f"pq-delta payloads require wire version >= {_VERSION_DELTA}; "
+            f"got version {version}")
     return fields
 
 
@@ -228,6 +253,104 @@ def dequantize(wb: WireBatch) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# pq-delta payloads (cross-round codebook reuse; version >= 3)
+# ---------------------------------------------------------------------------
+
+def encode_pq_delta(qb: QuantizedBatch, ref_codebooks: np.ndarray,
+                    delta_bits: int = 8) -> Tuple[bytes, np.ndarray]:
+    """Serialize a ``QuantizedBatch`` as quantized codebook *deltas* against
+    the last acked codebook (closed-loop DPCM; see module docstring).
+
+    ``ref_codebooks`` is the (R, L, d/q) f32 reference BOTH sides hold —
+    the reconstruction of the previous round's payload, not the client's
+    private fp32 codebook. Returns ``(payload, recon)`` where ``recon`` is
+    the f32 codebook the decoder will reproduce bit-exactly: the caller
+    must adopt it as the next round's reference.
+
+    Codebook bytes: 8 (range) + ceil(R·L·(d/q)·delta_bits / 8), vs
+    2·R·L·(d/q) for the fp16 ``pq`` kind — 2× at the default 8 bits.
+    """
+    if not 1 <= delta_bits <= 16:
+        raise ValueError(f"delta_bits={delta_bits} must be in [1, 16]")
+    codes = np.asarray(qb.codes)
+    cbs = np.asarray(qb.codebooks, np.float32)
+    ref = np.asarray(ref_codebooks, np.float32)
+    if cbs.shape != ref.shape:
+        raise ValueError(
+            f"reference codebooks {ref.shape} do not match {cbs.shape}")
+    r, m = codes.shape
+    _, num_clusters, dsub = cbs.shape
+    d = int(qb.dequantized.shape[-1])
+    n = int(qb.dequantized.size // d)
+    q = r * m // n
+
+    delta = cbs - ref
+    lo = float(delta.min(initial=0.0))
+    hi = float(delta.max(initial=0.0))
+    levels = (1 << delta_bits) - 1
+    scale = (hi - lo) / levels
+    scale = np.float32(scale if scale > 0 else 1.0)
+    lo = np.float32(lo)
+    dcodes = np.clip(np.round((delta - lo) / scale), 0, levels) \
+        .astype(np.uint32)
+    recon = ref + (lo + dcodes.astype(np.float32) * scale)
+
+    bits = bits_per_code(num_clusters)
+    if codes.min(initial=0) < 0 or codes.max(initial=0) >= num_clusters:
+        raise ValueError("codes out of range [0, L)")
+    header = _HEADER.pack(_MAGIC, _VERSION_DELTA, _DTYPE_CODES["float32"],
+                          delta_bits, KIND_PQ_DELTA, n, d, q, r, num_clusters)
+    rng = np.array([lo, scale], np.float32).tobytes()
+    return (header + rng + _pack_codes(dcodes, delta_bits)
+            + _pack_codes(codes, bits), recon)
+
+
+def decode_pq_delta(payload: bytes, ref_codebooks: np.ndarray) -> WireBatch:
+    """Parse a ``pq-delta`` payload against the acked reference codebooks.
+
+    The returned ``codebooks`` are f32 and bit-exactly equal to the
+    ``recon`` the encoder returned — the server must keep them as the next
+    round's reference."""
+    (_, _, _, delta_bits, kind,
+     n, d, q, r, num_clusters) = _check_header(payload)
+    if kind != KIND_PQ_DELTA:
+        raise ValueError(
+            f"expected a pq-delta payload, got kind {_KIND_NAMES[kind]!r}")
+    ref = np.asarray(ref_codebooks, np.float32)
+    dsub = d // q
+    if ref.shape != (r, num_clusters, dsub):
+        raise ValueError(f"reference codebooks {ref.shape} do not match the "
+                         f"payload geometry ({r}, {num_clusters}, {dsub})")
+    body = payload[HEADER_BYTES:]
+    num_delta = r * num_clusters * dsub
+    delta_bytes = _code_stream_bytes(num_delta, delta_bits)
+    m = (q // r) * n
+    bits = bits_per_code(num_clusters)
+    expected = 8 + delta_bytes + _code_stream_bytes(r * m, bits)
+    if len(body) != expected:
+        raise ValueError(f"pq-delta body is {len(body)} B, expected {expected}")
+    rng = np.frombuffer(body[:8], np.float32, count=2)
+    dcodes = _unpack_codes(body[8:8 + delta_bytes], num_delta, delta_bits) \
+        .astype(np.uint32)
+    cbs = ref + (rng[0] + dcodes.astype(np.float32) * rng[1]) \
+        .reshape(r, num_clusters, dsub)
+    codes = _unpack_codes(body[8 + delta_bytes:], r * m, bits).reshape(r, m)
+    return WireBatch(codes=codes, codebooks=cbs, n=n, d=d)
+
+
+def pq_delta_wire_bits(cfg: PQConfig, n: int, d: int,
+                       delta_bits: int = 8) -> int:
+    """Exact ``pq-delta`` payload size in bits (analytic twin of
+    ``wire_bits``; asserted against ``len(encode_pq_delta(...))`` in
+    tests)."""
+    r, num_clusters, dsub = cfg.codebook_shape(d)
+    cb_bits = 8 * (8 + _code_stream_bytes(r * num_clusters * dsub,
+                                          delta_bits))
+    code_bits = 8 * _code_stream_bytes(cfg.num_codes(n), cfg.bits_per_code)
+    return HEADER_BYTES * 8 + cb_bits + code_bits
+
+
+# ---------------------------------------------------------------------------
 # dense / sparse / scalar payloads
 # ---------------------------------------------------------------------------
 
@@ -281,6 +404,10 @@ def decode_payload(payload: bytes) -> Decoded:
     """Parse any tagged payload (recursing into nested sparse values)."""
     (_, _, dtype_code, bits, kind, n, d, q, r, L) = _check_header(payload)
     body = payload[HEADER_BYTES:]
+    if kind == KIND_PQ_DELTA:
+        raise ValueError(
+            "pq-delta payloads are not self-describing: decoding needs the "
+            "acked reference codebooks — use decode_pq_delta(payload, ref)")
     if kind == KIND_PQ:
         wb = decode_bytes(payload)
         return Decoded("pq", n, d, bits,

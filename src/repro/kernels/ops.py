@@ -69,6 +69,32 @@ def pq_quantize(x: jax.Array, centroids: jax.Array, *,
     return zt[:n], resid[:n], codes[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lloyd_update(x: jax.Array, centroids: jax.Array,
+                 weights: jax.Array | None = None, *,
+                 block_n: int = 512, interpret: bool | None = None):
+    """Fused Lloyd-iteration statistics: assign + deviation-accumulate in one
+    HBM sweep (``kernels/lloyd_update.py``).
+
+    x: (N, D) any float dtype; centroids: (L, D); weights: optional (N,)
+    per-row weights (padding rows carry 0). Arbitrary N, L (padded
+    internally; padded rows weigh zero, padded centroids are masked).
+    Returns (dsums (L, D) f32 = Σ onehot·(x − c_old), counts (L,) f32).
+    """
+    from repro.kernels.lloyd_update import lloyd_update_kernel
+    interpret = _interpret_default() if interpret is None else interpret
+    l = centroids.shape[0]
+    if weights is None:
+        weights = jnp.ones((x.shape[0],), jnp.float32)
+    block_n = min(block_n, max(8, x.shape[0]))
+    xp, n = _pad_rows(x, block_n)
+    wp, _ = _pad_rows(weights.astype(jnp.float32), block_n)
+    cp, lmask = _pad_centroids(centroids)
+    dsums, counts = lloyd_update_kernel(xp, wp, cp, lmask, block_n=block_n,
+                                        interpret=interpret)
+    return dsums[:l], counts[:l]
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "block_n", "interpret"))
 def scalar_quantize(x: jax.Array, lo: jax.Array, scale: jax.Array,
                     bits: int, *, block_n: int = 512,

@@ -22,3 +22,15 @@ def pq_quantize_ref(x: jax.Array, centroids: jax.Array, lmask: jax.Array):
     zt = centroids.astype(jnp.float32)[codes]
     resid = x.astype(jnp.float32) - zt
     return zt.astype(x.dtype), resid, codes
+
+
+def lloyd_update_ref(x: jax.Array, weights: jax.Array, centroids: jax.Array,
+                     lmask: jax.Array):
+    """One Lloyd iteration's statistics, deviation-accumulated:
+    dsums[l] = Σ_i w_i·1[codes_i = l]·(x_i − c_l), counts[l] = Σ_i w_i."""
+    codes, _ = kmeans_assign_ref(x, centroids, lmask)
+    cf = centroids.astype(jnp.float32)
+    onehot = jax.nn.one_hot(codes, cf.shape[0], dtype=jnp.float32) \
+        * weights.astype(jnp.float32)[:, None]
+    delta = x.astype(jnp.float32) - cf[codes]
+    return onehot.T @ delta, onehot.sum(axis=0)

@@ -30,11 +30,13 @@ def default_pq(cfg: ArchConfig, *, subvector_dim: int = 8,
                clusters: int = 16, iters: int = 4) -> PQConfig:
     """Paper-faithful defaults scaled to d_model: subvectors of dim 8 (the
     paper's FEMNIST best ratio uses d/q = 8), R=1, L=16. The encode backend
-    comes from the arch config ("auto": fused Pallas on TPU, jnp elsewhere)."""
+    comes from the arch config ("auto": fused Pallas on TPU, jnp elsewhere);
+    ``cfg.pq_warm_iters`` sets the warm-started Lloyd budget for runs that
+    carry `QuantizerState` across rounds (None = kmeans_iters // 2)."""
     q = cfg.d_model // subvector_dim
     return PQConfig(num_subvectors=q, num_clusters=clusters, num_groups=1,
                     kmeans_iters=iters, kmeans_chunk=4096,
-                    backend=cfg.pq_backend)
+                    backend=cfg.pq_backend, warm_iters=cfg.pq_warm_iters)
 
 
 def make_model(cfg: ArchConfig, *, with_pq: bool = True,

@@ -22,7 +22,10 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import CutCompressor, compress_downlink
+from repro.core.compressors import (CutCompressor, CutState, PQCompressor,
+                                    compress_downlink,
+                                    compress_downlink_keyed,
+                                    compress_with_correction_carry)
 from repro.core.correction import quantize_with_correction_stats
 from repro.core.quantizer import PQConfig
 
@@ -31,13 +34,22 @@ Params = Dict[str, Any]
 
 def _maybe_quantize(x, pq: Optional[PQConfig], lam, quantize: bool,
                     client_batch: int = 0, lam_override=None,
-                    downlink: Optional[CutCompressor] = None):
+                    downlink: Optional[CutCompressor] = None, *,
+                    key: Optional[jax.Array] = None,
+                    cut_state: Optional[CutState] = None):
     """Apply the cut-layer codecs per client: the leading dim is split into
     cohorts of ``client_batch`` examples, each clustered with its own
     codebooks (vmap). client_batch=0 treats the whole batch as a single
     client. ``downlink`` (a `CutCompressor`) squeezes the server→client
     gradient cotangent inside the VJP; None/"none" leaves the backward
-    pass bitwise-untouched."""
+    pass bitwise-untouched.
+
+    ``cut_state`` (a `CutState`, leaves with a leading client axis under
+    per-client splitting) switches the uplink to the state-carrying hook:
+    codebook warm-start + optional error feedback, with the updated state
+    returned under ``stats["cut_state"]``. ``key`` is a per-step PRNG key:
+    the downlink codec then uses stochastic rounding (scalarq). Both
+    default to ``None`` — the historical, bitwise-unchanged path."""
     if lam_override is not None:
         lam = lam_override
     has_dl = quantize and downlink is not None and downlink.name != "none"
@@ -48,7 +60,29 @@ def _maybe_quantize(x, pq: Optional[PQConfig], lam, quantize: bool,
     stats = {}
     zt = x
     if pq is not None:
-        if per_client:
+        if cut_state is not None:
+            comp = PQCompressor(pq)
+            if per_client:
+                xs = x.reshape(x.shape[0] // client_batch, client_batch,
+                               *x.shape[1:])
+                # full-tensor EF memory follows the per-client split (and is
+                # flattened back below, so callers see the input layout)
+                if cut_state.ef_memory is not None and \
+                        cut_state.ef_memory.shape == x.shape:
+                    cut_state = cut_state._replace(
+                        ef_memory=cut_state.ef_memory.reshape(xs.shape))
+                zt, dist, new_state = jax.vmap(
+                    lambda zi, si: compress_with_correction_carry(
+                        zi, lam, si, comp))(xs, cut_state)
+                zt, dist = zt.reshape(x.shape), jnp.mean(dist)
+                if new_state.ef_memory is not None:
+                    new_state = new_state._replace(
+                        ef_memory=new_state.ef_memory.reshape(x.shape))
+            else:
+                zt, dist, new_state = compress_with_correction_carry(
+                    x, lam, cut_state, comp)
+            stats["cut_state"] = new_state
+        elif per_client:
             xs = x.reshape(x.shape[0] // client_batch, client_batch,
                            *x.shape[1:])
             zt, dist = jax.vmap(
@@ -57,20 +91,28 @@ def _maybe_quantize(x, pq: Optional[PQConfig], lam, quantize: bool,
         else:
             zt, dist = quantize_with_correction_stats(x, lam, pq)
         n = x.size // x.shape[-1]
-        stats = {
+        stats.update({
             "pq_distortion": dist,
             "pq_compression_ratio": float(
                 pq.compression_ratio(int(n), x.shape[-1])),
-        }
+        })
     if has_dl:
         if per_client:
             zs = zt.reshape(zt.shape[0] // client_batch, client_batch,
                             *zt.shape[1:])
-            zt = jax.vmap(
-                lambda zi: compress_downlink(zi, downlink))(zs) \
-                .reshape(zt.shape)
-        else:
+            if key is None:
+                zs = jax.vmap(
+                    lambda zi: compress_downlink(zi, downlink))(zs)
+            else:
+                dkeys = jax.random.split(key, zs.shape[0])
+                zs = jax.vmap(
+                    lambda zi, ki: compress_downlink_keyed(
+                        zi, ki, downlink))(zs, dkeys)
+            zt = zs.reshape(zt.shape)
+        elif key is None:
             zt = compress_downlink(zt, downlink)
+        else:
+            zt = compress_downlink_keyed(zt, key, downlink)
     return zt, stats
 
 
@@ -124,11 +166,12 @@ class FemnistCNN:
         return h @ sp["dense2_w"] + sp["dense2_b"]
 
     def loss(self, params: Params, batch, *, quantize: bool = True,
-             lam_override=None):
+             lam_override=None, key=None, cut_state=None):
         acts = self.client_forward(params["client"], batch)
         acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
                                        self.client_batch, lam_override,
-                                       self.downlink_compressor)
+                                       self.downlink_compressor,
+                                       key=key, cut_state=cut_state)
         logits = self.server_logits(params["server"], acts)
         labels = batch["label"]
         ce = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(labels.shape[0]),
@@ -172,11 +215,12 @@ class SOTagMLP:
         return acts @ sp["dense2_w"] + sp["dense2_b"]
 
     def loss(self, params, batch, *, quantize: bool = True,
-             lam_override=None):
+             lam_override=None, key=None, cut_state=None):
         acts = self.client_forward(params["client"], batch)
         acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
                                        self.client_batch, lam_override,
-                                       self.downlink_compressor)
+                                       self.downlink_compressor,
+                                       key=key, cut_state=cut_state)
         logits = self.server_logits(params["server"], acts)
         y = batch["tags"].astype(jnp.float32)  # (B, num_tags) multi-hot
         bce = jnp.mean(jnp.maximum(logits, 0) - logits * y +
@@ -246,11 +290,12 @@ class SONwpLSTM:
         return acts @ sp["dense2_w"] + sp["dense2_b"]
 
     def loss(self, params, batch, *, quantize: bool = True,
-             lam_override=None):
+             lam_override=None, key=None, cut_state=None):
         acts = self.client_forward(params["client"], batch)
         acts, stats = _maybe_quantize(acts, self.pq, self.lam, quantize,
                                        self.client_batch, lam_override,
-                                       self.downlink_compressor)
+                                       self.downlink_compressor,
+                                       key=key, cut_state=cut_state)
         logits = self.server_logits(params["server"], acts)
         labels = batch["labels"]  # (B, S), -1 = ignore
         mask = labels >= 0

@@ -29,8 +29,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.compressors import (CutCompressor, PQCompressor,
+from repro.core.compressors import (CutCompressor, CutState, PQCompressor,
                                     compress_downlink,
+                                    compress_downlink_keyed,
+                                    compress_with_correction_carry,
                                     compress_with_correction_stats)
 from repro.core.correction import quantize_with_correction_stats
 from repro.core.quantizer import PQConfig
@@ -246,7 +248,9 @@ class TransformerLM:
         return None
 
     def cut_activation(self, x: jax.Array, *, quantize: bool,
-                       lam_override=None) -> Tuple[jax.Array, Dict]:
+                       lam_override=None, key: Optional[jax.Array] = None,
+                       cut_state: Optional[CutState] = None
+                       ) -> Tuple[jax.Array, Dict]:
         """Apply the cut-layer codecs (paper Fig. 1 generalized) at the cut.
 
         Each batch row (sequence) is one *client*: codebooks are built
@@ -259,6 +263,13 @@ class TransformerLM:
         Downlink: ``downlink_compressor`` squeezes the activation COTANGENT
         inside the VJP before it reaches the client stack; ``None``/"none"
         leaves the backward pass untouched bitwise.
+
+        ``cut_state`` (leaves carrying a leading batch/client axis) routes
+        the uplink through the state-carrying hook — cross-round codebook
+        warm-start + optional error feedback — and the updated state comes
+        back under ``stats["cut_state"]``. ``key`` makes the downlink codec
+        round stochastically. Both default to ``None``: the historical
+        bitwise-identical path.
         """
         up = self.uplink_compressor
         dl = self._downlink()
@@ -274,7 +285,33 @@ class TransformerLM:
         n_per_client = int(x.shape[1])  # tokens per client (= sequence)
         phi = dtype_bits(getattr(self.cfg, "dtype", "float32"))
         z_tilde, stats = x, {}
-        if has_up and up is None:
+        if has_up and cut_state is not None:
+            comp = up if up is not None else PQCompressor(self.pq)
+            z_tilde, dist, new_state = jax.vmap(
+                lambda zi, si: compress_with_correction_carry(
+                    zi, lam, si, comp))(x, cut_state)
+            stats = {"pq_distortion": jnp.mean(dist),
+                     "cut_state": new_state}
+            # same wire accounting the stateless branches emit, so metrics
+            # consumers see identical keys with the carry on or off
+            if up is None:
+                stats.update({
+                    "pq_message_bits": float(
+                        x.shape[0] * self.pq.message_bits(n_per_client,
+                                                          x.shape[-1])),
+                    "pq_compression_ratio": float(
+                        self.pq.compression_ratio(n_per_client,
+                                                  x.shape[-1])),
+                })
+            else:
+                msg = up.analytic_bits(n_per_client, x.shape[-1],
+                                       phi_bits=phi)
+                stats.update({
+                    "uplink_message_bits": float(x.shape[0] * msg),
+                    "uplink_compression_ratio":
+                        phi * n_per_client * x.shape[-1] / max(msg, 1),
+                })
+        elif has_up and up is None:
             # the PQ fast path: fused backend encode + residual reuse
             z_tilde, dist = jax.vmap(
                 lambda zi: quantize_with_correction_stats(zi, lam, self.pq))(x)
@@ -297,8 +334,14 @@ class TransformerLM:
                     phi * n_per_client * x.shape[-1] / max(msg, 1),
             }
         if has_dl:
-            z_tilde = jax.vmap(
-                lambda zi: compress_downlink(zi, dl))(z_tilde)
+            if key is None:
+                z_tilde = jax.vmap(
+                    lambda zi: compress_downlink(zi, dl))(z_tilde)
+            else:
+                dkeys = jax.random.split(key, z_tilde.shape[0])
+                z_tilde = jax.vmap(
+                    lambda zi, ki: compress_downlink_keyed(
+                        zi, ki, dl))(z_tilde, dkeys)
             stats["downlink_message_bits"] = float(
                 x.shape[0] * dl.analytic_bits(n_per_client, x.shape[-1],
                                               phi_bits=phi))
@@ -340,11 +383,12 @@ class TransformerLM:
 
     # ------------------------------------------------------------- losses
     def loss(self, params: Params, batch, *, quantize: bool = True,
-             lam_override=None):
+             lam_override=None, key=None, cut_state=None):
         """Full FedLite forward: client -> PQ (+corrected VJP) -> server -> CE."""
         acts, _, aux_c = self.client_forward(params["client"], batch, mode="train")
         acts, pq_stats = self.cut_activation(acts, quantize=quantize,
-                                             lam_override=lam_override)
+                                             lam_override=lam_override,
+                                             key=key, cut_state=cut_state)
         x, _, aux_s = self.server_forward(params["server"], acts, batch,
                                           mode="train")
         ce = self.chunked_ce(params, x, batch["labels"])

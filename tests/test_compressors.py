@@ -401,7 +401,8 @@ def test_per_contribution_staleness_weighting():
         "label": jnp.zeros((2, 4), jnp.int32),
     }
     weights = jnp.asarray([1.0, 0.25])
-    step = make_weighted_step(model, opt)
+    # donate=False: the manual check below reuses the pre-step params
+    step = make_weighted_step(model, opt, donate=False)
     new_state, metrics = step(state, batches, weights)
 
     # hand-rolled: per-client grads, FedBuff mean of w_i * g_i, one SGD step
@@ -426,3 +427,124 @@ def test_async_run_uses_per_contribution_weights():
     # at least one flush mixed stalenesses -> the weighted path ran
     stale = [r.staleness for r in tr.last_trace]
     assert any(len(set(s)) >= 1 for s in stale)
+
+
+# ---------------------------------------------------------------------------
+# cross-round cut-layer state in the trainer (PR 4)
+# ---------------------------------------------------------------------------
+
+def test_trainer_warm_start_carries_codebooks_across_rounds():
+    tr = _trainer(warm_start=True)
+    _, hist = tr.run(3, jax.random.PRNGKey(0))
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert tr._global_q is not None
+    assert int(tr._global_q.rounds) == 3          # one warm lineage
+    assert tr.last_trace.meta["warm_start"] is True
+    # history metrics stay scalar: the cut state was popped before logging
+    assert all("cut_state" not in h for h in hist)
+
+
+def test_trainer_error_feedback_carries_memory_across_rounds():
+    tr = _trainer(error_feedback=True)
+    _, hist = tr.run(3, jax.random.PRNGKey(0))
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert len(tr._ef_memory) > 0                 # per-client slots populated
+    mem = next(iter(tr._ef_memory.values()))
+    assert mem.shape == (8, 9216)                 # client_batch x cut dim
+    assert float(jnp.abs(mem).max()) > 0.0        # PQ is lossy: error nonzero
+
+
+def test_trainer_async_warm_start_per_client_slots():
+    from repro.federated import AsyncBuffer
+    tr = _trainer(warm_start=True, error_feedback=True,
+                  policy=AsyncBuffer(2))
+    _, hist = tr.run(4, jax.random.PRNGKey(0))
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert len(tr._client_q) > 0                  # per-client codebooks
+    q = next(iter(tr._client_q.values()))
+    assert q.codebooks.shape == (1, 4, 32)        # (R, L, d/q) for q=288
+
+
+def test_trainer_codebook_delta_measured_bytes():
+    tr = _trainer(codebook_delta_bits=8)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    up, _ = tr.measure_round_bytes(state, jax.random.PRNGKey(1))
+    meta = tr.last_codebook_meta
+    assert up == meta["uplink_bytes_delta_codebook"]
+    assert meta["codebook_bytes_delta"] < meta["codebook_bytes_full"]
+    assert meta["codebook_bytes_reduction"] > 1.0
+
+
+def test_trainer_rejects_bad_cut_state_configs():
+    with pytest.raises(ValueError, match="pq uplink"):
+        _trainer(warm_start=True, uplink_compressor="none", quantize=False)
+    with pytest.raises(ValueError, match="quantize"):
+        _trainer(error_feedback=True, quantize=False,
+                 uplink_compressor="none")
+    with pytest.raises(ValueError, match="codebook_delta_bits"):
+        _trainer(codebook_delta_bits=99)
+
+
+def test_stochastic_downlink_key_changes_gradients_not_keyless_path():
+    """A step_key makes the scalarq downlink round stochastically (grads
+    differ across keys); the keyless step stays bitwise-identical to the
+    historical deterministic path."""
+    from repro.core.fedlite import TrainState, make_train_step
+    from repro.models.paper_models import FemnistCNN
+    from repro.optim import sgd
+    pq = PQConfig(num_subvectors=288, num_clusters=4, kmeans_iters=2)
+    model = FemnistCNN(pq=pq, lam=1e-4,
+                       downlink_compressor=C.make_compressor(
+                           "scalarq(bits=4)"))
+    opt = sgd(0.1)
+    state = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
+    batch = {"image": jax.random.normal(jax.random.PRNGKey(1),
+                                        (4, 28, 28, 1)),
+             "label": jnp.zeros((4,), jnp.int32)}
+    plain = make_train_step(model, opt, donate=False)
+    s_a, _ = plain(state, batch)
+    s_b, _ = plain(state, batch)
+    for a, b in zip(jax.tree.leaves(s_a.params), jax.tree.leaves(s_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    keyed1 = make_train_step(model, opt, donate=False,
+                             step_key=jax.random.PRNGKey(7))
+    keyed2 = make_train_step(model, opt, donate=False,
+                             step_key=jax.random.PRNGKey(8))
+    k1, _ = keyed1(state, batch)
+    k2, _ = keyed2(state, batch)
+    diffs = [bool(jnp.any(a != b)) for a, b in
+             zip(jax.tree.leaves(k1.params), jax.tree.leaves(k2.params))]
+    assert any(diffs)                             # stochastic rounding bites
+
+
+def test_trainer_warm_start_stacked_state_cold_falls_back_on_cohort_change():
+    """Per-client/per-row stacked quantizer state (codebooks rank > 3 —
+    TransformerLM per-sequence vmap, paper models with client_batch > 0)
+    only fits a cohort of the size that produced it: a different
+    participant count must fall back to a cold round instead of vmapping
+    mismatched axes."""
+    from repro.core.quantizer import QuantizerState
+    from repro.federated.scheduler import Arrival
+
+    tr = _trainer(warm_start=True)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    part = tr.client_batch_for(0, jax.random.PRNGKey(1))
+    arr = lambda cid: Arrival(client=cid, version=0, t_arrival=0.0)
+
+    # cohort-size-independent state (rank 3): reused across any count
+    tr._global_q = QuantizerState(codebooks=jnp.zeros((1, 4, 32)),
+                                  rounds=jnp.ones((), jnp.int32))
+    tr._global_q_nparts = 4
+    cs = tr._cut_state_for([arr(0), arr(1)], state.params, [part],
+                           stacked=True)
+    assert cs.quantizer is not None
+    # stacked state (rank 4, one slot per client/row): count change -> cold
+    tr._global_q = QuantizerState(codebooks=jnp.zeros((4, 1, 4, 32)),
+                                  rounds=jnp.ones((4,), jnp.int32))
+    tr._global_q_nparts = 4
+    cs = tr._cut_state_for([arr(0), arr(1)], state.params, [part],
+                           stacked=True)
+    assert cs.quantizer is None
+    cs = tr._cut_state_for([arr(0), arr(1), arr(2), arr(3)], state.params,
+                           [part], stacked=True)
+    assert cs.quantizer is not None

@@ -147,3 +147,81 @@ def test_pq_decode_refuses_other_kinds():
         wire.decode_bytes(dense)
     dp = wire.decode_payload(dense)                 # the tagged API decodes it
     assert dp.kind == "dense" and dp.n == 4 and dp.d == 8
+
+
+# ---------------------------------------------------------------------------
+# pq-delta (cross-round codebook reuse; version-gated v3)
+# ---------------------------------------------------------------------------
+
+def _delta_pair(delta_bits=8):
+    """Two consecutive rounds: (round-1 batch, acked round-0 reference)."""
+    from repro.core.quantizer import quantize_stateful
+    cfg = PQConfig(num_subvectors=8, num_clusters=16, kmeans_iters=3)
+    z1 = jax.random.normal(jax.random.PRNGKey(30), (24, 64))
+    z2 = z1 + 0.05 * jax.random.normal(jax.random.PRNGKey(31), (24, 64))
+    qb1, st = quantize_stateful(z1, cfg)
+    ref = wire.decode_bytes(wire.encode_bytes(qb1, "float16")) \
+        .codebooks.astype(np.float32)
+    qb2, _ = quantize_stateful(z2, cfg, st)
+    return cfg, qb2, ref
+
+
+@pytest.mark.parametrize("delta_bits", [4, 8])
+def test_pq_delta_roundtrip_bit_exact(delta_bits):
+    """decode_pq_delta(encode_pq_delta(...)) reproduces the cluster codes
+    exactly and the codebooks bit-exactly equal to the encoder's closed-loop
+    reconstruction (both sides adopt the same acked reference)."""
+    cfg, qb, ref = _delta_pair(delta_bits)
+    payload, recon = wire.encode_pq_delta(qb, ref, delta_bits)
+    wb = wire.decode_pq_delta(payload, ref)
+    np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
+    np.testing.assert_array_equal(wb.codebooks, recon)
+    assert wb.codebooks.dtype == np.float32
+    # analytic size agrees exactly with the measured payload
+    assert len(payload) * 8 == wire.pq_delta_wire_bits(cfg, 24, 64,
+                                                       delta_bits)
+
+
+def test_pq_delta_smaller_than_full_codebooks():
+    cfg, qb, ref = _delta_pair()
+    payload, _ = wire.encode_pq_delta(qb, ref, 8)
+    full = wire.encode_bytes(qb, "float16")
+    cb_full = int(np.prod(cfg.codebook_shape(64))) * 2
+    code_bytes = len(full) - wire.HEADER_BYTES - cb_full
+    cb_delta = len(payload) - wire.HEADER_BYTES - code_bytes
+    assert cb_full / cb_delta >= 1.5
+
+
+def test_pq_delta_version_gated():
+    """pq-delta rides wire version 3; a v2 header with the pq-delta kind is
+    a protocol violation and must be rejected."""
+    cfg, qb, ref = _delta_pair()
+    payload, _ = wire.encode_pq_delta(qb, ref, 8)
+    assert payload[4] == 3                      # written as version 3
+    buf = bytearray(payload)
+    buf[4] = 2
+    with pytest.raises(ValueError, match="version >= 3"):
+        wire.decode_pq_delta(bytes(buf), ref)
+
+
+def test_pq_delta_needs_reference():
+    cfg, qb, ref = _delta_pair()
+    payload, _ = wire.encode_pq_delta(qb, ref, 8)
+    with pytest.raises(ValueError, match="decode_pq_delta"):
+        wire.decode_payload(payload)            # not self-describing
+    with pytest.raises(ValueError, match="reference"):
+        wire.decode_pq_delta(payload, ref[:, :1])   # wrong geometry
+    with pytest.raises(ValueError, match="pq-delta"):
+        wire.decode_pq_delta(wire.encode_bytes(qb, "float16"), ref)
+
+
+def test_v2_payloads_still_decode_after_v3():
+    """v2 decode compatibility: every v2 kind still decodes; the default
+    pq encode still writes version 2 (v2 decoders keep working)."""
+    qb, cfg, _ = _qb()
+    buf = wire.encode_bytes(qb, "float16")
+    assert buf[4] == 2
+    wb = wire.decode_bytes(buf)
+    np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
+    dense = wire.encode_dense(np.zeros((4, 8), np.float32), 4, 8)
+    assert dense[4] == 2 and wire.decode_payload(dense).kind == "dense"

@@ -27,7 +27,17 @@ codebook (warm-started Lloyd) is shipped as the ``pq-delta`` wire kind —
 8-bit quantized deltas against the acked round-0 reference — and the
 measured codebook component must shrink >= 1.5x vs fresh fp16 codebooks
 (asserted; acceptance criterion), with the closed-loop reconstruction
-decoding bit-exactly."""
+decoding bit-exactly.
+
+The ``pq_delta_downlink`` row closes the same loop for the OTHER
+direction: a pq downlink ships the cut-layer *gradient* as
+codebooks+codes, and until the stateful hook
+(``core/compressors.compress_downlink_stateful``) those codebooks were
+fresh every round. A realistic gradient proxy (round-1 gradient = a small
+drift of round-0's) is quantized warm-started from round 0's
+`QuantizerState` and its codebook delta-encoded against the acked
+reference — the measured downlink codebook component must shrink >= 1.5x
+(asserted), decoding bit-exactly."""
 
 from __future__ import annotations
 
@@ -121,41 +131,60 @@ def run(fast: bool = True):
 
     # ---- measured pq-delta codebook bytes vs fresh fp16 codebooks ----------
     # the LM-cut-shaped config (d/q = 8, L = 16 — launch/specs.default_pq):
-    # this is where codebook bytes matter; FEMNIST's L=2 codebook is 32 B
+    # this is where codebook bytes matter; FEMNIST's L=2 codebook is 32 B.
+    # One recipe, both directions: round 0 ships full fp16 codebooks, the
+    # receiver's decode is the acked reference, round 1 quantizes
+    # warm-started and ships b-bit codebook deltas — bit-exact closed loop,
+    # measured codebook component must shrink >= 1.5x (asserted).
     from repro.core.quantizer import quantize_stateful
     d_lm, q_lm = 512, 64
     pq_lm = PQConfig(num_subvectors=q_lm, num_clusters=16, kmeans_iters=4)
+
+    def measure_pq_delta(t0, t1, row_name):
+        qb0, qstate = quantize_stateful(t0, pq_lm)
+        ref = wire.decode_bytes(
+            wire.encode_bytes(qb0, "float16")).codebooks.astype(np.float32)
+        qb1_, _ = quantize_stateful(t1, pq_lm, qstate)       # warm round
+        full = wire.encode_bytes(qb1_, "float16")
+        delta, recon = wire.encode_pq_delta(qb1_, ref, delta_bits=8)
+        assert len(delta) * 8 == wire.pq_delta_wire_bits(
+            pq_lm, t1.shape[0], d_lm, 8)
+        wb = wire.decode_pq_delta(delta, ref)
+        assert (wb.codes == np.asarray(qb1_.codes)).all()
+        np.testing.assert_array_equal(wb.codebooks, recon)  # closed loop
+        cb_full = int(np.prod(pq_lm.codebook_shape(d_lm))) * 2  # fp16 bytes
+        code_bytes = len(full) - wire.HEADER_BYTES - cb_full
+        cb_delta = len(delta) - wire.HEADER_BYTES - code_bytes
+        reduction = cb_full / cb_delta
+        assert reduction >= 1.5, \
+            f"{row_name}: codebook reduction {reduction:.2f}x below 1.5x"
+        return {
+            "name": row_name,
+            "us_per_call": 0.0,
+            "codebook_bytes_full_fp16": cb_full,
+            "codebook_bytes_delta": cb_delta,
+            "codebook_reduction": round(reduction, 2),
+            "payload_bytes_full": len(full),
+            "payload_bytes_delta": len(delta),
+            "delta_recon_max_err": round(
+                float(np.abs(recon - np.asarray(qb1_.codebooks,
+                                                np.float32)).max()), 6),
+        }
+
+    # uplink: round-1 activations drifted slightly from round 0's
     acts1 = jax.random.normal(jax.random.PRNGKey(2), (256, d_lm))
     acts2 = acts1 + 0.05 * jax.random.normal(jax.random.PRNGKey(3),
                                              (256, d_lm))
-    qb1, qstate = quantize_stateful(acts1, pq_lm)
-    full0 = wire.encode_bytes(qb1, "float16")
-    ref = wire.decode_bytes(full0).codebooks.astype(np.float32)  # acked
-    qb2, _ = quantize_stateful(acts2, pq_lm, qstate)             # warm round
-    full1 = wire.encode_bytes(qb2, "float16")
-    delta1, recon = wire.encode_pq_delta(qb2, ref, delta_bits=8)
-    assert len(delta1) * 8 == wire.pq_delta_wire_bits(pq_lm, 256, d_lm, 8)
-    wb = wire.decode_pq_delta(delta1, ref)
-    assert (wb.codes == np.asarray(qb2.codes)).all()
-    np.testing.assert_array_equal(wb.codebooks, recon)   # closed loop exact
-    cb_full = int(np.prod(pq_lm.codebook_shape(d_lm))) * 2   # fp16 bytes
-    code_bytes = len(full1) - wire.HEADER_BYTES - cb_full
-    cb_delta = len(delta1) - wire.HEADER_BYTES - code_bytes
-    cb_reduction = cb_full / cb_delta
-    assert cb_reduction >= 1.5, \
-        f"pq-delta codebook reduction {cb_reduction:.2f}x below the 1.5x bar"
-    rows.append({
-        "name": "pq_delta_measured_lmcut_d512_L16_b8",
-        "us_per_call": 0.0,
-        "codebook_bytes_full_fp16": cb_full,
-        "codebook_bytes_delta": cb_delta,
-        "codebook_reduction": round(cb_reduction, 2),
-        "payload_bytes_full": len(full1),
-        "payload_bytes_delta": len(delta1),
-        "delta_recon_max_err": round(
-            float(np.abs(recon - np.asarray(qb2.codebooks,
-                                            np.float32)).max()), 6),
-    })
+    rows.append(measure_pq_delta(acts1, acts2,
+                                 "pq_delta_measured_lmcut_d512_L16_b8"))
+    # downlink: the gradient message of a pq downlink, steady state — the
+    # stateful-downlink (compress_downlink_stateful) analogue of the row
+    # above, at gradient scale
+    g1 = 0.01 * jax.random.normal(jax.random.PRNGKey(4), (256, d_lm))
+    g2 = g1 + 0.05 * 0.01 * jax.random.normal(jax.random.PRNGKey(5),
+                                              (256, d_lm))
+    rows.append(measure_pq_delta(
+        g1, g2, "pq_delta_downlink_measured_lmcut_d512_L16_b8"))
 
     # ---- big-arch accounting (smoke-size params, dtype-derived phi) --------
     for arch in ["llama3_8b", "mixtral_8x22b"]:

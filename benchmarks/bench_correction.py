@@ -61,8 +61,10 @@ def run(fast: bool = True):
     trainer = FederatedTrainer(model, _sgd(10 ** -1.5), data, cohort=10,
                                client_batch=20)
     sched = lambda step: lam * jnp.minimum(1.0, step / (rounds * 0.6))
-    trainer._step = make_train_step(model, _sgd(10 ** -1.5),
-                                    lam_schedule=sched, donate=False)
+    # swap the λ-schedule step into the stacked executor's sync slot (the
+    # executor owns the jitted steps since the cohort-engine refactor)
+    trainer.executor._step = make_train_step(model, _sgd(10 ** -1.5),
+                                             lam_schedule=sched, donate=False)
     state, hist = trainer.run(rounds, jax.random.PRNGKey(1))
     eb = data.eval_batch(jax.random.PRNGKey(999), 512)
     rows.append({

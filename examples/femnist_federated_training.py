@@ -21,6 +21,21 @@ Downlink-compressed variant (the cut-layer gradient message through a
     PYTHONPATH=src python examples/femnist_federated_training.py \
         --rounds 100 --fleet lognormal \
         --downlink "chain:topk(k=0.1)+scalarq(bits=8)"
+
+Mesh-parallel cohorts (the `federated/executor.py` engine): shard each
+round's client forward/backward over the ``clients`` device axis instead
+of stacking on one device. On CPU, force a few host devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python examples/femnist_federated_training.py \
+        --rounds 100 --fleet lognormal --executor mesh
+
+Trace-driven autoscaling (the `federated/autoscale.py` controller): run in
+segments, letting the observed straggler tail / drop rate / loss slope
+move (cohort, policy, downlink codec) between segments:
+
+    PYTHONPATH=src python examples/femnist_federated_training.py \
+        --rounds 100 --fleet mobile --autoscale
 """
 
 import argparse
@@ -74,30 +89,82 @@ def main():
     ap.add_argument("--delta-bits", type=int, default=0,
                     help="ship codebooks as pq-delta wire payloads at this "
                          "many bits per delta (0 = fresh fp16 codebooks)")
+    ap.add_argument("--executor", choices=["stacked", "mesh"],
+                    default="stacked",
+                    help="cohort execution engine: stacked single-device "
+                         "path or shard_map over the `clients` device axis "
+                         "(mesh needs >1 device: set XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N on CPU)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="drive the run with the trace-driven autoscaler "
+                         "(re-plans cohort/policy/downlink every 8 rounds)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
     num_clients = 64
+    if args.executor == "mesh" and len(jax.devices()) < 2:
+        raise SystemExit(
+            "--executor mesh needs a multi-device mesh; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4 before "
+            "launching")
     data = make_federated_image_data(num_clients=num_clients, seed=0)
     pq = None if args.baseline else PQConfig(
         num_subvectors=args.q, num_clusters=args.clusters, kmeans_iters=5)
     model = FemnistCNN(pq=pq, lam=args.lam, client_batch=args.client_batch)
-    trainer = FederatedTrainer(model, sgd(10 ** -1.5), data,
-                               cohort=args.cohort,
-                               client_batch=args.client_batch,
-                               quantize=not args.baseline,
-                               fleet=FLEETS[args.fleet](num_clients),
-                               policy=POLICIES[args.policy](),
-                               downlink_compressor=args.downlink,
-                               warm_start=args.warm_start,
-                               codebook_delta_bits=args.delta_bits or None)
+
+    def build_trainer(cohort, policy, downlink, seed=0):
+        return FederatedTrainer(model, sgd(10 ** -1.5), data, cohort=cohort,
+                                client_batch=args.client_batch,
+                                quantize=not args.baseline,
+                                fleet=FLEETS[args.fleet](num_clients),
+                                policy=policy, downlink_compressor=downlink,
+                                warm_start=args.warm_start,
+                                codebook_delta_bits=args.delta_bits or None,
+                                seed=seed, executor=args.executor)
+
     eval_batch = data.eval_batch(jax.random.PRNGKey(99), 512)
     heterogeneous = args.fleet != "ideal" or args.policy != "full_sync" \
         or args.downlink is not None or args.warm_start \
-        or bool(args.delta_bits)
+        or bool(args.delta_bits) or args.executor != "stacked"
 
-    if heterogeneous:
+    if args.autoscale:
+        from repro.federated import (AutoscalePlan, TraceAutoscaler,
+                                     autoscale_run, make_policy)
+        # seed the plan with every CLI knob the controller may later move
+        policy_specs = {"full_sync": "full_sync", "drop2": "drop_slowest:2",
+                        "deadline": "deadline:6.0", "async": "async:4"}
+        plan0 = AutoscalePlan(cohort=args.cohort,
+                              policy=policy_specs[args.policy],
+                              downlink=args.downlink)
+
+        def make_trainer(plan, seg):
+            return build_trainer(plan.cohort, make_policy(plan.policy),
+                                 plan.downlink, seed=seg)
+
+        t0 = time.time()
+        out = autoscale_run(
+            make_trainer, plan0, args.rounds, jax.random.PRNGKey(0),
+            controller=TraceAutoscaler(window=8, max_cohort=num_clients),
+            interval=8)
+        state = out["state"]
+        acc = float(model.accuracy(state.params, eval_batch))
+        print(f"autoscaled run: {args.rounds} rounds, "
+              f"{len(out['plans'])} plan(s), acc={acc:.3f} "
+              f"({time.time() - t0:.0f}s real)")
+        for i, plan in enumerate(out["plans"]):
+            print(f"  plan {i}: cohort={plan.cohort} policy={plan.policy} "
+                  f"downlink={plan.downlink or 'dense'}  [{plan.reason}]")
+        print(f"  simulated wall-clock : {out['simulated_seconds']:10.1f} s")
+        print(f"  measured uplink      : {out['uplink_bytes'] / 1e6:10.2f} MB")
+        print(f"  measured downlink    : "
+              f"{out['downlink_bytes'] / 1e6:10.2f} MB")
+        losses = [h["loss"] for h in out["history"] if "loss" in h]
+        if losses:
+            print(f"  loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    elif heterogeneous:
         # scheduled run: measured wire bytes + simulated wall-clock per round
+        trainer = build_trainer(args.cohort, POLICIES[args.policy](),
+                                args.downlink)
         t0 = time.time()
         state, hist = trainer.run(args.rounds, jax.random.PRNGKey(0))
         trace = trainer.last_trace
@@ -119,6 +186,8 @@ def main():
     else:
         # ideal synchronous loop with periodic eval (the paper's simulation);
         # analytic uplink accounting at the params' native phi (fp32: 32-bit)
+        trainer = build_trainer(args.cohort, POLICIES[args.policy](),
+                                args.downlink)
         state = trainer.init_state(jax.random.PRNGKey(0))
         client_bits = tree_bits(state.params["client"])
         act_bits = 32 * 9216 * args.client_batch

@@ -660,6 +660,49 @@ def _dlk_bwd(compressor, key, g):
 compress_downlink_keyed.defvjp(_dlk_fwd, _dlk_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def compress_downlink_stateful(z: jax.Array, state: Any,
+                               compressor: CutCompressor) -> jax.Array:
+    """``compress_downlink`` with cross-round codec state threaded IN.
+
+    ``state`` (e.g. a `core/quantizer.QuantizerState` from the previous
+    round, or ``None`` for a cold round) reaches the backward codec via
+    ``compressor.compress_stateful``: a ``pq`` downlink then warm-starts
+    Lloyd on the gradient cotangent from last round's gradient codebooks —
+    ``cfg.effective_warm_iters`` iterations instead of a cold
+    ``kmeans_iters`` recluster — exactly mirroring the uplink's
+    ``compress_with_correction_carry`` warm start. It is also what the
+    ``pq-delta`` wire kind diffs against, so the downlink codebook message
+    shrinks to b-bit deltas versus the acked reference
+    (``FederatedTrainer.codebook_delta_bits`` measures it;
+    ``bench_comm.py`` asserts the reduction).
+
+    The state is an auxiliary INPUT only — a VJP's backward pass cannot
+    emit new primal state, so the refreshed reference lineage is owned by
+    the measurement/trainer layer (the same split the uplink uses: warm
+    math in-jit, acked wire references host-side). ``state`` receives a
+    zero cotangent; ``None`` state runs the cold path, bitwise-identical
+    to ``compress_downlink``.
+    """
+    return z
+
+
+def _dls_fwd(z, state, compressor):
+    return z, state
+
+
+def _dls_bwd(compressor, state, g):
+    if isinstance(compressor, NoneCompressor):
+        gz = g
+    else:
+        comp, _ = compressor.compress_stateful(g, state)
+        gz = comp.recon.astype(g.dtype)
+    return (gz, _zero_state_cotangent(state))
+
+
+compress_downlink_stateful.defvjp(_dls_fwd, _dls_bwd)
+
+
 # ---------------------------------------------------------------------------
 # the state-carrying uplink hook (warm-start + error feedback)
 # ---------------------------------------------------------------------------

@@ -201,6 +201,133 @@ def make_weighted_step(model, optimizer: Optimizer, *,
     return jax.jit(weighted_step, donate_argnums=(0,) if donate else ())
 
 
+def make_mesh_step(model, optimizer: Optimizer, mesh, *,
+                   quantize: bool = True, donate: bool = True,
+                   step_key: Optional[jax.Array] = None,
+                   correction_scope: str = "cohort") -> Callable:
+    """Cohort-parallel server update: shard_map over the ``clients`` axis.
+
+    The mesh analogue of the stacked steps: client-major inputs (every
+    batch leaf ``(C, B, ...)``, weights/mask ``(C,)``, optional per-client
+    ``cut_state``) are sharded over ``mesh``'s ``clients`` axis; each shard
+    computes its local clients' gradients (vmap, the per-client math of
+    ``make_weighted_step`` — including the shard-local cut-state carry) and
+    the weighted gradient sum crosses shards exactly once, as an explicit
+    psum over ``clients``.
+
+    ``mask`` (0/1 per client slot) exists because a cohort rarely divides
+    the shard count: callers pad the client axis to a multiple of the mesh
+    size and zero-mask the padding, which contributes nothing to the
+    gradient or the masked metric means (padded slots' gradients are
+    multiplied by the mask AFTER the cut hooks run, so the λ-correction of
+    a duplicated padding row cannot leak either).
+
+    ``correction_scope`` pins which stacked semantic the per-client
+    gradients reproduce — the two differ ONLY in how FedLite's eq.-5
+    λ-correction meets the loss scaling, because the correction is added to
+    the raw activation cotangent inside the VJP hook rather than scaling
+    with it:
+
+      * ``"cohort"`` — the fused synchronous step (``make_train_step`` on
+        the concatenated cohort batch): each client's loss is pre-scaled by
+        ``w_c / Σm`` INSIDE differentiation, so the data cotangent reaching
+        the cut hook carries the global 1/(C·B) scale while the correction
+        fires at full λ — gradients match the stacked step bit-for-bit up
+        to float reassociation. Used by the synchronous policies.
+      * ``"client"`` — ``make_weighted_step`` (FedBuff): raw per-client
+        gradients (correction at λ against the client-local 1/B cotangent)
+        are discounted AFTER differentiation by ``w_c / Σm``. Used under
+        `AsyncBuffer`, where the staleness weights must discount the whole
+        contribution, correction included.
+
+    Per-client metrics come back masked-mean-reduced; the cut state (when
+    passed) returns under ``metrics["cut_state"]`` in client-major layout,
+    sharding preserved, padding slots still attached (callers absorb only
+    the unmasked entries). One optimizer update per call, on the replicated
+    combined gradient — parameters never shard over ``clients``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.ctx import CLIENTS_AXIS
+
+    if CLIENTS_AXIS not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no "
+                         f"{CLIENTS_AXIS!r} axis")
+    if correction_scope not in ("cohort", "client"):
+        raise ValueError(f"correction_scope={correction_scope!r} must be "
+                         "'cohort' or 'client'")
+    pre_scale = correction_scope == "cohort"
+
+    def loss_fn(params, batch, key, cut_state):
+        kw = {}
+        if key is not None:
+            kw["key"] = key
+        if cut_state is not None:
+            kw["cut_state"] = cut_state
+        return model.loss(params, batch, quantize=quantize, **kw)
+
+    def mesh_step(state: TrainState, batches, weights, mask,
+                  cut_state=None) -> Tuple[TrainState, Dict]:
+        num_slots = weights.shape[0]
+        base = None if step_key is None \
+            else jax.random.fold_in(step_key, state.step)
+        keys = None if base is None else jax.random.split(base, num_slots)
+        cnt = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+
+        def shard_local(params, b, w, m, keys_l, cs):
+            def per_client(b_i, s_i, key_i, cs_i):
+                def scaled(p):
+                    loss, metrics = loss_fn(p, b_i, key_i, cs_i)
+                    return loss * (s_i if pre_scale else 1.0), (loss, metrics)
+
+                (_, (loss, metrics)), g = jax.value_and_grad(
+                    scaled, has_aux=True)(params)
+                return g, loss, metrics
+
+            scale = (w / cnt).astype(jnp.float32)
+            grads, losses, metrics = jax.vmap(
+                per_client,
+                in_axes=(0, 0, None if keys_l is None else 0,
+                         None if cs is None else 0))(b, scale, keys_l, cs)
+            # padding slots are zeroed AFTER differentiation either way (the
+            # λ-correction inside the hook does not scale with the loss);
+            # "client" scope additionally applies the weight here
+            post = (m if pre_scale else m * scale).astype(jnp.float32)
+            gsum = jax.tree.map(
+                lambda g: jax.lax.psum(
+                    jnp.tensordot(post, g.astype(jnp.float32), axes=1),
+                    CLIENTS_AXIS), grads)
+            return gsum, losses, metrics
+
+        # prefix specs: every client-major pytree (batches, keys, cut state,
+        # per-client losses/metrics) shards its LEADING axis over `clients`;
+        # params and the psum'd gradient stay replicated
+        gsum, losses, metrics = shard_map(
+            shard_local, mesh=mesh,
+            in_specs=(P(), P(CLIENTS_AXIS), P(CLIENTS_AXIS), P(CLIENTS_AXIS),
+                      P(CLIENTS_AXIS), P(CLIENTS_AXIS)),
+            out_specs=(P(), P(CLIENTS_AXIS), P(CLIENTS_AXIS)),
+            check_rep=False)(state.params, batches, weights, mask, keys,
+                             cut_state)
+        ghat = jax.tree.map(
+            lambda g, p: g.astype(p.dtype), gsum, state.params)
+        updates, opt_state = optimizer.update(ghat, state.opt_state,
+                                              state.params)
+        params = jax.tree.map(operator.add, state.params, updates)
+        new_cut = metrics.pop("cut_state", None)
+        mf = mask.astype(jnp.float32)
+        metrics = jax.tree.map(lambda x: jnp.sum(x * mf) / cnt, metrics)
+        metrics = dict(
+            metrics, loss=jnp.sum(losses * mf) / cnt,
+            mean_staleness_weight=jnp.sum(weights * mf) / cnt)
+        if new_cut is not None:
+            metrics["cut_state"] = new_cut
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return jax.jit(mesh_step, donate_argnums=(0,) if donate else ())
+
+
 def make_eval_step(model: TransformerLM) -> Callable:
     def eval_step(params, batch):
         acts, _, _ = model.client_forward(params["client"], batch, mode="train")

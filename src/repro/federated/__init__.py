@@ -11,7 +11,7 @@ paper's grouped PQ; the downlink default is dense — the measured traffic
 that motivated the stack, since the cut-layer *gradient* dominates
 bytes-on-the-wire once the uplink is PQ-compressed.
 
-Five layers, composed by `FederatedTrainer`:
+Seven layers, composed by `FederatedTrainer`:
 
   runtime.py    — the algorithm drivers (FedAvg / SplitFed / FedLite round
                   logic, cohort sampling — uniform or p_i-weighted — and
@@ -37,10 +37,39 @@ Five layers, composed by `FederatedTrainer`:
                   staleness weights are applied per contribution
                   (``core/fedlite.make_weighted_step``).
   trace.py      — per-round `RoundRecord`s (simulated wall-clock, measured
-                  uplink AND downlink bytes, stragglers dropped, staleness)
-                  collected into a `Trace` with per-direction
-                  time/bytes-to-target reductions and run-level codec
-                  metadata in ``Trace.meta``.
+                  uplink AND downlink bytes, stragglers dropped, staleness,
+                  per-participant shard placement) collected into a `Trace`
+                  with per-direction time/bytes-to-target reductions,
+                  windowed controller signals (straggler ``tail_ratio``,
+                  ``drop_rate``, ``bytes_per_round``, ``loss_slope``) and
+                  run-level codec metadata in ``Trace.meta``.
+  executor.py   — the cohort execution engine (see "Scaling cohorts across
+                  devices" below): ``stacked`` | ``mesh`` backends mapping
+                  each server update's per-client math onto devices.
+  autoscale.py  — `TraceAutoscaler`: a deterministic controller that turns
+                  the trace's windowed signals into (cohort, policy,
+                  downlink codec) moves, plus ``autoscale_run`` driving a
+                  training run in plan-sized segments.
+
+Scaling cohorts across devices
+------------------------------
+The scheduler decides WHO participates; the `CohortExecutor` decides WHERE
+their math runs. ``FederatedTrainer(executor="stacked")`` (default) is the
+historical single-device path — synchronous cohorts fuse into one stacked
+batch, async flushes run the per-contribution weighted step — and stays
+bitwise-identical to the pre-engine trainer. ``executor="mesh"`` (or
+``"mesh(shards=N)"``) shards the cohort over the ``clients`` axis of a 1-D
+device mesh (``launch/mesh.make_clients_mesh``; on CPU CI a real 2-4-shard
+mesh via ``XLA_FLAGS=--xla_force_host_platform_device_count=4``):
+client-major batches, PRNG keys, error-feedback memories and `CutState`s
+are placed with ``NamedSharding(mesh, P("clients"))``, each shard computes
+its local clients' gradients, and the weighted combine crosses shards once
+as an explicit psum (``core/fedlite.make_mesh_step``). All four policies
+execute unchanged on either backend; traces record every participant's
+shard. Round wall-clock then scales with the shard count
+(``benchmarks/bench_network.py --executor mesh`` measures it), which is
+what lets cohort size become an autoscaler knob rather than a hardware
+ceiling.
 
 Cross-round state (all default-off): `FederatedTrainer` can additionally
 carry cut-layer state across scheduler rounds — PQ codebook warm-start
@@ -59,6 +88,20 @@ turn the same trainer into the paper-§5 trade-off harness driven by
 ``benchmarks/bench_network.py`` (``--downlink`` sweeps the gradient codec).
 """
 
+from repro.federated.autoscale import (
+    AutoscalePlan,
+    TraceAutoscaler,
+    autoscale_run,
+    make_policy,
+)
+from repro.federated.executor import (
+    CohortExecutor,
+    MeshExecutor,
+    StackedExecutor,
+    available_executors,
+    make_executor,
+    register_executor,
+)
 from repro.federated.network import (
     IDEAL,
     ClientProfile,
@@ -84,9 +127,11 @@ from repro.federated.trace import RoundRecord, Trace
 from repro.federated import wire
 
 __all__ = [
-    "AsyncBuffer", "ClientProfile", "Deadline", "DropSlowestK",
-    "FederatedTrainer", "FullSync", "IDEAL", "RoundRecord", "Scheduler",
-    "Trace", "fedavg_round", "lognormal_fleet", "mobile_fleet",
-    "run_fedavg", "sample_clients", "uniform_fleet", "weighted_average",
-    "wire",
+    "AsyncBuffer", "AutoscalePlan", "ClientProfile", "CohortExecutor",
+    "Deadline", "DropSlowestK", "FederatedTrainer", "FullSync", "IDEAL",
+    "MeshExecutor", "RoundRecord", "Scheduler", "StackedExecutor", "Trace",
+    "TraceAutoscaler", "autoscale_run", "available_executors",
+    "fedavg_round", "lognormal_fleet", "make_executor", "make_policy",
+    "mobile_fleet", "register_executor", "run_fedavg", "sample_clients",
+    "uniform_fleet", "weighted_average", "wire",
 ]

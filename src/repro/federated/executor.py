@@ -1,0 +1,306 @@
+"""Cohort execution engine: who runs the round's client math, and where.
+
+The virtual-clock `Scheduler` decides WHO participates in a server update;
+the train steps in ``core/fedlite.py`` define WHAT one update computes.
+This module owns the layer between them — HOW a cohort's per-client
+forward/backward work is mapped onto devices. `FederatedTrainer` routes
+``round`` / ``run``'s execute hook / ``measure_round_bytes`` through a
+`CohortExecutor`, selected by spec string (``executor="stacked"`` /
+``"mesh"`` / ``"mesh(shards=4)"``) or instance:
+
+  * ``stacked`` — the historical single-device path, extracted verbatim:
+    synchronous policies concatenate the cohort's client batches into one
+    fused batch for ``make_train_step``; `AsyncBuffer` flushes go through
+    ``make_weighted_step``'s per-contribution staleness weighting. The
+    default — bitwise-identical to the pre-executor trainer (asserted in
+    tests/test_executor.py).
+  * ``mesh``    — cohort-parallel execution over the ``clients`` axis of a
+    1-D device mesh (``launch/mesh.make_clients_mesh``, host-count-aware:
+    a CPU CI runner forces 2-4 host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``). Client-major
+    arrays — batches, per-client PRNG keys, error-feedback memories,
+    `CutState`s — are placed with ``NamedSharding(mesh, P("clients"))``;
+    each shard computes its local clients' gradients and the weighted
+    combine crosses shards once, as an explicit psum
+    (``core/fedlite.make_mesh_step``). Cohorts that do not divide the
+    shard count are padded with zero-masked duplicate slots.
+
+Every scheduler policy (FullSync / DropSlowestK / Deadline / AsyncBuffer)
+executes unchanged on either backend: policies see cohorts and arrival
+times, never devices. The executor also assigns each surviving participant
+its shard (``place``) — the scheduler threads the placement into the
+round's `Arrival`s so traces record where every client ran.
+
+Semantics: the mesh backend reproduces the stacked backend's round metrics
+and gradients (allclose; float reassociation only) whenever the model
+quantizes per client (``model.client_batch == trainer.client_batch``) or
+runs unquantized. A cohort-GLOBAL codebook (``model.client_batch == 0``
+with PQ on) is not shard-local — the mesh executor then clusters per
+client instead, which is the federated-realistic granularity; a warning is
+logged for the divergence. The λ-correction scale difference between the
+fused synchronous step and per-client gradients is reconciled by
+``make_mesh_step``'s ``correction_scope`` (see its docstring).
+
+New backends register through ``register_executor`` — e.g. a multi-host
+pod backend mapping cohorts onto ``("pod", "clients")`` — without touching
+the trainer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import re
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedlite import (TrainState, make_mesh_step, make_train_step,
+                                make_weighted_step)
+from repro.sharding.ctx import (CLIENTS_AXIS, clients_sharding,
+                                replicated_sharding)
+
+logger = logging.getLogger(__name__)
+
+
+class CohortExecutor:
+    """Base class: maps one server update's cohort onto devices.
+
+    Lifecycle: `FederatedTrainer.__post_init__` resolves the spec via
+    ``make_executor`` and calls ``bind(trainer)`` exactly once — after the
+    trainer has installed the cut-layer codecs into the model — so the
+    executor builds its jitted steps against the final model. All entry
+    points take/return the trainer's `TrainState`; metrics may stay on
+    device (the trainer host-syncs once per run).
+    """
+    name: str = "base"
+
+    def bind(self, trainer) -> None:
+        raise NotImplementedError
+
+    def _claim(self, trainer) -> None:
+        """Attach to ``trainer``, refusing silent re-targeting: one executor
+        instance holds one trainer's jitted steps, and sharing it across
+        trainers would cross-wire the first trainer to the second's
+        model/optimizer."""
+        bound = getattr(self, "trainer", None)
+        if bound is not None and bound is not trainer:
+            raise ValueError(
+                f"{type(self).__name__} is already bound to another trainer;"
+                " construct one executor per FederatedTrainer")
+        self.trainer = trainer
+
+    # ---- cohort layout -----------------------------------------------------
+    def per_client_layout(self, is_async: bool) -> bool:
+        """Whether cut-layer state must be client-major for this path
+        (vs the stacked synchronous layout: concatenated EF rows +
+        cohort-level codebook state)."""
+        raise NotImplementedError
+
+    def place(self, participants: Sequence[Any]) -> List[Any]:
+        """Annotate each `Arrival` with the shard that will execute it."""
+        return [dataclasses.replace(a, shard=0) for a in participants]
+
+    # ---- execution ---------------------------------------------------------
+    def execute(self, state: TrainState, parts: Sequence[Dict],
+                weights: Optional[Sequence[float]] = None,
+                cut_state: Any = None) -> Tuple[TrainState, Dict]:
+        """Run one server update over ``parts`` (one batch per client, in
+        participant order). ``weights=None`` selects synchronous semantics;
+        a weight vector selects the per-contribution (FedBuff) semantics
+        with ``cut_state`` in client-major layout."""
+        raise NotImplementedError
+
+    # ---- measurement routing ----------------------------------------------
+    def client_forward(self, client_params, batch):
+        """One client's cut activations for the wire measurement."""
+        return self.trainer.model.client_forward(client_params, batch)
+
+
+def _stack_parts(parts: Sequence[Dict]) -> Dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *parts)
+
+
+@dataclasses.dataclass
+class StackedExecutor(CohortExecutor):
+    """The historical single-device path (bitwise-preserving default)."""
+    name: str = dataclasses.field(default="stacked", init=False)
+
+    def bind(self, trainer) -> None:
+        self._claim(trainer)
+        step_key = jax.random.PRNGKey(trainer.seed) \
+            if trainer.stochastic_downlink else None
+        # round() is public API whose callers may reuse the input state:
+        # the fused step must not donate; the weighted step is only called
+        # inside run()'s execute, which rebinds the state — donate it
+        self._step = make_train_step(trainer.model, trainer.optimizer,
+                                     quantize=trainer.quantize, donate=False,
+                                     step_key=step_key)
+        self._weighted_step = make_weighted_step(
+            trainer.model, trainer.optimizer, quantize=trainer.quantize,
+            donate=True, step_key=step_key)
+
+    def per_client_layout(self, is_async: bool) -> bool:
+        return is_async
+
+    def execute(self, state, parts, weights=None, cut_state=None):
+        if weights is None:
+            # one definition of the bitwise-critical batch fusing
+            batch = self.trainer.stack_batches(parts)
+            if cut_state is None:
+                return self._step(state, batch)
+            return self._step(state, batch, cut_state)
+        batches = _stack_parts(parts)
+        w = jnp.asarray(weights, jnp.float32)
+        if cut_state is None:
+            return self._weighted_step(state, batches, w)
+        return self._weighted_step(state, batches, w, cut_state)
+
+
+@dataclasses.dataclass
+class MeshExecutor(CohortExecutor):
+    """Cohort-parallel execution over the ``clients`` mesh axis.
+
+    ``shards=0`` builds a host-count-aware mesh over every visible device;
+    pass ``shards=n`` or an explicit ``mesh`` (any mesh with a ``clients``
+    axis) to pin the width. Jitted steps are built lazily per semantics
+    (synchronous vs weighted) on first use; one compile per distinct padded
+    cohort size, like the stacked path's one-per-survivor-count.
+    """
+    shards: int = 0
+    mesh: Any = None
+    name: str = dataclasses.field(default="mesh", init=False)
+
+    def bind(self, trainer) -> None:
+        from repro.launch.mesh import make_clients_mesh
+        self._claim(trainer)
+        if self.mesh is None:
+            self.mesh = make_clients_mesh(self.shards)
+        if CLIENTS_AXIS not in self.mesh.axis_names:
+            raise ValueError(f"mesh {self.mesh.axis_names} has no "
+                             f"{CLIENTS_AXIS!r} axis")
+        self.num_shards = int(self.mesh.shape[CLIENTS_AXIS])
+        self._steps: Dict[str, Callable] = {}
+        self._step_key = jax.random.PRNGKey(trainer.seed) \
+            if trainer.stochastic_downlink else None
+        if trainer.quantize and getattr(trainer.model, "pq", None) is not None \
+                and getattr(trainer.model, "client_batch", 0) == 0:
+            logger.warning(
+                "mesh executor with a cohort-global PQ codebook "
+                "(model.client_batch=0): clustering runs per client on the "
+                "mesh — set model.client_batch=trainer.client_batch for "
+                "stacked-parity quantization granularity")
+
+    def per_client_layout(self, is_async: bool) -> bool:
+        return True
+
+    # ---- placement ---------------------------------------------------------
+    def _slot_count(self, n: int) -> int:
+        """Padded client-slot count: the smallest multiple of the shard
+        width that fits the cohort."""
+        return max(-(-n // self.num_shards) * self.num_shards,
+                   self.num_shards)
+
+    def place(self, participants):
+        local = self._slot_count(len(participants)) // self.num_shards
+        return [dataclasses.replace(a, shard=i // local)
+                for i, a in enumerate(participants)]
+
+    # ---- execution ---------------------------------------------------------
+    def _get_step(self, scope: str) -> Callable:
+        if scope not in self._steps:
+            self._steps[scope] = make_mesh_step(
+                self.trainer.model, self.trainer.optimizer, self.mesh,
+                quantize=self.trainer.quantize,
+                # mirror the stacked split: the synchronous step backs the
+                # public round() (callers may reuse the input state), the
+                # weighted step only ever runs inside run()'s execute
+                donate=scope == "client",
+                step_key=self._step_key, correction_scope=scope)
+        return self._steps[scope]
+
+    def _pad(self, tree, pad: int):
+        """Grow every leaf's client axis by ``pad`` duplicate (masked)
+        slots — duplicating the last real client keeps the padded compute
+        numerically tame (no all-zero batches through PQ seeding)."""
+        if pad == 0:
+            return tree
+        return jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x, jnp.repeat(x[-1:], pad, axis=0)], axis=0), tree)
+
+    def execute(self, state, parts, weights=None, cut_state=None):
+        sync = weights is None
+        n = len(parts)
+        slots = self._slot_count(n)
+        pad = slots - n
+        w = jnp.asarray(list(weights) if not sync else [1.0] * n,
+                        jnp.float32)
+        w = jnp.concatenate([w, jnp.ones((pad,), jnp.float32)]) if pad else w
+        mask = jnp.concatenate([jnp.ones((n,), jnp.float32),
+                                jnp.zeros((pad,), jnp.float32)]) \
+            if pad else jnp.ones((n,), jnp.float32)
+        sh_clients = clients_sharding(self.mesh)
+        batches = jax.device_put(self._pad(_stack_parts(parts), pad),
+                                 sh_clients)
+        w = jax.device_put(w, sh_clients)
+        mask = jax.device_put(mask, sh_clients)
+        if cut_state is not None:
+            cut_state = jax.device_put(self._pad(cut_state, pad), sh_clients)
+        state = jax.device_put(state, replicated_sharding(self.mesh))
+        step = self._get_step("cohort" if sync else "client")
+        state, metrics = step(state, batches, w, mask, cut_state)
+        if sync:
+            # keep synchronous metrics key-compatible with the stacked path
+            metrics.pop("mean_staleness_weight", None)
+        return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# registry + spec parsing
+# ---------------------------------------------------------------------------
+
+_EXECUTORS: Dict[str, Callable[..., CohortExecutor]] = {}
+
+
+def register_executor(name: str,
+                      factory: Callable[..., CohortExecutor]) -> None:
+    """Register (or replace) a named executor factory."""
+    _EXECUTORS[name] = factory
+
+
+register_executor("stacked", lambda **kw: StackedExecutor(**kw))
+register_executor("mesh", lambda **kw: MeshExecutor(**kw))
+
+
+def available_executors() -> Tuple[str, ...]:
+    return tuple(sorted(_EXECUTORS))
+
+
+_SPEC_RE = re.compile(r"^(?P<name>[a-zA-Z_]\w*)(?:\((?P<args>.*)\))?$")
+
+
+def make_executor(spec) -> CohortExecutor:
+    """Build an executor from a spec string (``"stacked"``, ``"mesh"``,
+    ``"mesh(shards=4)"``) or pass an instance through unchanged. ``None``
+    resolves to the stacked default."""
+    if spec is None:
+        return StackedExecutor()
+    if isinstance(spec, CohortExecutor):
+        return spec
+    m = _SPEC_RE.match(spec.strip())
+    if not m or m.group("name") not in _EXECUTORS:
+        raise ValueError(f"unknown executor spec {spec!r}; registered: "
+                         f"{available_executors()}")
+    kwargs: Dict[str, Any] = {}
+    for part in (m.group("args") or "").split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(f"executor arg {part!r} must be key=value")
+        k, v = part.split("=", 1)
+        kwargs[k.strip()] = int(v.strip()) if v.strip().isdigit() \
+            else v.strip()
+    return _EXECUTORS[m.group("name")](**kwargs)

@@ -37,9 +37,10 @@ import numpy as np
 
 from repro.core.compressors import (CutCompressor, CutState, NoneCompressor,
                                     PQCompressor, make_compressor)
-from repro.core.fedlite import TrainState, make_train_step, make_weighted_step
+from repro.core.fedlite import TrainState
 from repro.core.quantizer import QuantizerState, quantize_stateful
 from repro.data.synthetic import FederatedDataset
+from repro.federated.executor import make_executor
 from repro.federated.network import ClientProfile, uniform_fleet, validate_fleet
 from repro.federated.scheduler import (Arrival, AsyncBuffer, FullSync,
                                        Policy, Scheduler)
@@ -151,6 +152,15 @@ class FederatedTrainer:
     batch shrinks to the survivors (one extra jit cache entry per distinct
     survivor count). ``run`` leaves the per-round `Trace` — simulated
     wall-clock + measured wire bytes — in ``self.last_trace``.
+
+    WHERE each round's per-client math executes is the ``executor``'s job
+    (``federated/executor.py``): the ``"stacked"`` default is the
+    single-device path described above; ``"mesh"`` shards the cohort over
+    the ``clients`` axis of a device mesh (per-client batches/PRNG
+    keys/EF memories/`CutState`s placed with NamedSharding, shard-local
+    gradients combined by one explicit psum). Policies, traces and the
+    wire measurement are executor-agnostic; traces additionally record
+    each participant's shard placement.
     """
     model: Any
     optimizer: Optimizer
@@ -187,10 +197,19 @@ class FederatedTrainer:
     # stochastic_downlink: thread a per-step PRNG key into the downlink
     # VJP so scalarq gradient codecs round stochastically (unbiased).
     stochastic_downlink: bool = False
-    # codebook_delta_bits: measure the uplink with the `pq-delta` wire kind
-    # (quantized codebook deltas vs the acked reference) instead of fresh
-    # fp16 codebooks; the measured steady-state bytes feed the scheduler.
+    # codebook_delta_bits: measure the pq directions with the `pq-delta`
+    # wire kind (quantized codebook deltas vs the acked reference) instead
+    # of fresh fp16 codebooks; the measured steady-state bytes feed the
+    # scheduler. Applies to the uplink AND — when the downlink codec is pq
+    # — the downlink gradient message (PR 4's delta machinery covers both
+    # directions).
     codebook_delta_bits: Optional[int] = None
+    # executor: the cohort execution engine (federated/executor.py) that
+    # maps each server update's per-client math onto devices — "stacked"
+    # (single-device historical path, bitwise default), "mesh" /
+    # "mesh(shards=N)" (shard_map over the `clients` device axis), or a
+    # CohortExecutor instance.
+    executor: Any = "stacked"
 
     def __post_init__(self):
         pq = getattr(self.model, "pq", None)
@@ -231,30 +250,28 @@ class FederatedTrainer:
             if not 1 <= self.codebook_delta_bits <= 16:
                 raise ValueError(f"codebook_delta_bits="
                                  f"{self.codebook_delta_bits} not in [1, 16]")
-            if not isinstance(up, PQCompressor):
-                raise ValueError("codebook_delta_bits needs a pq uplink")
+            if not isinstance(up, PQCompressor) \
+                    and not isinstance(self.downlink, PQCompressor):
+                raise ValueError(
+                    "codebook_delta_bits needs a pq uplink or downlink")
+            if not self.quantize:
+                raise ValueError("codebook_delta_bits needs quantize=True")
         if self.warm_start and not isinstance(up, PQCompressor):
             raise ValueError("warm_start needs a pq uplink")
         if (self.warm_start or self.error_feedback) and not self.quantize:
             raise ValueError("warm_start/error_feedback need quantize=True")
-        step_key = jax.random.PRNGKey(self.seed) \
-            if self.stochastic_downlink else None
-        self._step = make_train_step(self.model, self.optimizer,
-                                     quantize=self.quantize, donate=False,
-                                     step_key=step_key)
-        # the weighted step is only called inside run()'s execute, which
-        # rebinds the state — donate it (no full-params copy per async
-        # flush on donation-capable backends); self._step stays
-        # non-donating because round() is public API whose callers may
-        # reuse the input state
-        self._weighted_step = make_weighted_step(self.model, self.optimizer,
-                                                 quantize=self.quantize,
-                                                 donate=True,
-                                                 step_key=step_key)
+        # the execution engine owns the jitted steps and the device mapping
+        # (federated/executor.py); it is bound AFTER the codecs above were
+        # installed so its steps see the final model
+        self.executor = make_executor(self.executor)
+        self.executor.bind(self)
         self._wants_cut_state = self.warm_start or self.error_feedback
-        self._global_q: Optional[QuantizerState] = None   # stacked path
+        self._global_q: Optional[QuantizerState] = None   # cohort-global
         self._global_q_nparts = 0                         # cohort size of it
-        self._client_q: Dict[int, Any] = {}               # AsyncBuffer path
+        self._client_q: Dict[int, Any] = {}               # keyed by client id
+        self._seed_q: Optional[Any] = None                # latest absorbed
+        #                               per-client codebook: warm-start seed
+        #                               for first-time clients
         self._ef_memory: Dict[int, Any] = {}              # per-client rows
         self._act_struct = None                           # per-client acts
         self.last_codebook_meta: Dict[str, Any] = {}
@@ -285,8 +302,12 @@ class FederatedTrainer:
                                    for cid in ids])
 
     def round(self, state: TrainState, key: jax.Array):
-        batch = self.cohort_batch(key)
-        return self._step(state, batch)
+        """One synchronous server update on a fresh cohort, through the
+        configured executor (the stacked default concatenates the cohort
+        into one fused batch — the bitwise-historical path)."""
+        ids = sample_clients(self._rng, self.data.num_clients, self.cohort)
+        parts = [self.client_batch_for(cid, key) for cid in ids]
+        return self.executor.execute(state, parts)
 
     # ---- cross-round cut-layer state ---------------------------------------
     def _client_act_struct(self, params, part):
@@ -305,52 +326,78 @@ class FederatedTrainer:
         return mem if mem is not None \
             else jnp.zeros(self._act_struct.shape, self._act_struct.dtype)
 
+    def _gather_client_q(self, cids):
+        """Per-client codebook states stacked in participant order.
+
+        Warm-start lineage is keyed by CLIENT ID on every path, so straggler
+        policies that reshuffle cohort composition (DropSlowestK / Deadline
+        survivors, AsyncBuffer flushes) keep each client's lineage intact.
+        A client with no state yet is SEEDED from the most recently absorbed
+        codebook (`_seed_q`) — activation distributions drift slowly, so a
+        neighbor's codebook is a good warm initializer and the round stays
+        warm instead of cold-flushing the whole cohort. Returns ``None``
+        (cold round) only before any per-client state exists."""
+        if not self._client_q and self._seed_q is None:
+            return None
+        states = [self._client_q.get(c, self._seed_q) for c in cids]
+        if any(s is None for s in states):   # no seed to warm first-timers
+            return None
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *states)
+
     def _cut_state_for(self, participants, params, parts, stacked: bool):
         """Assemble the round's `CutState` (or None when both features are
-        off). Stacked path: cohort-global codebooks + per-client EF rows
-        concatenated in participant order. Per-client (AsyncBuffer) path:
-        every leaf gains a leading client axis; warm-start falls back to a
-        cold round when any buffered client has no codebook yet (the vmap
-        needs a uniform state structure)."""
+        off). Stacked path: per-client codebooks stacked in participant
+        order when the model quantizes per client (falling back to the
+        cohort-global codebook for models with one codebook per cohort) +
+        per-client EF rows concatenated in participant order. Per-client
+        path (AsyncBuffer flushes, every mesh-executor update): every leaf
+        gains a leading client axis."""
         if not self._wants_cut_state:
             return None
         self._client_act_struct(params, parts[0])
         cids = [int(a.client) for a in participants]
         if stacked:
-            q = self._global_q if self.warm_start else None
-            # models that vmap the cut per client/row (TransformerLM per
-            # sequence, paper models with client_batch > 0) return state
-            # with a leading stacked axis — detectable as codebooks rank >
-            # (R, L, dsub). Such state only fits a cohort of the same
-            # size: fall back to a cold round when the count changes.
-            if q is not None and q.codebooks.ndim > 3 \
-                    and len(cids) != self._global_q_nparts:
-                q = None
+            q = None
+            if self.warm_start:
+                q = self._gather_client_q(cids)
+                if q is None:
+                    # cohort-global lineage (one codebook per cohort,
+                    # model.client_batch == 0) — or a manually injected
+                    # stacked state, which only fits the cohort size that
+                    # produced it: fall back to cold on a count change
+                    q = self._global_q
+                    if q is not None and q.codebooks.ndim > 3 \
+                            and len(cids) != self._global_q_nparts:
+                        q = None
             ef = jnp.concatenate([self._client_ef(c) for c in cids], axis=0) \
                 if self.error_feedback else None
             return CutState(quantizer=q, ef_memory=ef)
-        q = None
-        if self.warm_start and all(c in self._client_q for c in cids):
-            q = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
-                             *[self._client_q[c] for c in cids])
+        q = self._gather_client_q(cids) if self.warm_start else None
         ef = jnp.stack([self._client_ef(c) for c in cids], axis=0) \
             if self.error_feedback else None
         return CutState(quantizer=q, ef_memory=ef)
 
     def _absorb_cut_state(self, participants, new_cut, stacked: bool):
-        """Scatter a step's returned `CutState` back into per-client slots
-        (and the cohort-global codebook slot on the stacked path)."""
+        """Scatter a step's returned `CutState` back into the per-client
+        slots keyed by client id (per-client-axis state may carry padded
+        executor slots past ``len(participants)``; they are ignored). State
+        with one codebook per cohort — or a stacked axis that does not
+        match the participant count — lands in the cohort-global slot."""
         if new_cut is None:
             return
         cids = [int(a.client) for a in participants]
         if self.warm_start and new_cut.quantizer is not None:
-            if stacked:
-                self._global_q = new_cut.quantizer
-                self._global_q_nparts = len(cids)
-            else:
+            q = new_cut.quantizer
+            per_client = q.codebooks.ndim > 3 \
+                and q.codebooks.shape[0] >= len(cids) \
+                and (not stacked or q.codebooks.shape[0] == len(cids))
+            if per_client:
                 for i, c in enumerate(cids):
-                    self._client_q[c] = jax.tree.map(
-                        lambda x: x[i], new_cut.quantizer)
+                    self._client_q[c] = jax.tree.map(lambda x: x[i], q)
+                self._seed_q = self._client_q[cids[-1]]
+            else:
+                self._global_q = q
+                self._global_q_nparts = len(cids)
         if self.error_feedback and new_cut.ef_memory is not None:
             if stacked:
                 rows = self._act_struct.shape[0]
@@ -374,16 +421,17 @@ class FederatedTrainer:
         for every round. ``none`` on either side measures the dense tensor
         at its native dtype.
 
-        With ``codebook_delta_bits`` set, the uplink is measured as the
-        steady-state ``pq-delta`` payload: a second client batch is
+        With ``codebook_delta_bits`` set, each pq direction is measured as
+        the steady-state ``pq-delta`` payload: a second round's tensor is
         quantized warm-started from the first, its codebook is delta-encoded
         against the acked (fp16-decoded) round-0 reference, and the measured
         codebook-bytes reduction lands in ``self.last_codebook_meta`` (and
-        the run's ``trace.meta``).
+        the run's ``trace.meta``) — uplink keys unprefixed (the historical
+        layout), downlink keys under ``downlink_``.
         """
         batch = self.data.sample_batch(0, key, self.client_batch,
                                        **(self.batch_kwargs or {}))
-        acts = self.model.client_forward(state.params["client"], batch)
+        acts = self.executor.client_forward(state.params["client"], batch)
         if isinstance(acts, tuple):   # TransformerLM returns (acts, aux...)
             acts = acts[0]
         acts2 = acts.reshape(-1, acts.shape[-1])
@@ -400,31 +448,49 @@ class FederatedTrainer:
                 comp, value_dtype=self.codebook_wire_dtype))
 
         uplink_bytes = measured(self.uplink)
-        if self.codebook_delta_bits is not None and self.quantize \
-                and isinstance(self.uplink, PQCompressor):
-            uplink_bytes = self._measure_delta_uplink(state, key, acts2,
-                                                      uplink_bytes)
-        return uplink_bytes, measured(self.downlink)
+        downlink_bytes = measured(self.downlink)
+        self.last_codebook_meta = {}
+        if self.codebook_delta_bits is not None and self.quantize:
+            acts_b = self._second_round_acts(state, key)
+            if isinstance(self.uplink, PQCompressor):
+                uplink_bytes = self._measure_delta_direction(
+                    self.uplink.cfg, acts2, acts_b, uplink_bytes, prefix="",
+                    bytes_key="uplink_bytes")
+            if isinstance(self.downlink, PQCompressor):
+                # same machinery, other direction: the gradient message's
+                # codebooks delta-encoded against the previous round's
+                # acked reference (the activation tensor stands in for the
+                # gradient, as for the non-delta downlink measurement)
+                downlink_bytes = self._measure_delta_direction(
+                    self.downlink.cfg, acts2, acts_b, downlink_bytes,
+                    prefix="downlink_", bytes_key="downlink_bytes")
+        return uplink_bytes, downlink_bytes
 
-    def _measure_delta_uplink(self, state: TrainState, key: jax.Array,
-                              acts2, full_bytes: int) -> int:
-        """Steady-state `pq-delta` uplink bytes (see measure_round_bytes)."""
-        from repro.federated import wire
-        cfg = self.uplink.cfg
-        qb1, qstate = quantize_stateful(acts2, cfg)
-        # the acked reference is what the server decoded from round 0 —
-        # the codebook at wire fidelity, not the client's private fp32 copy
-        ref = wire.decode_bytes(
-            wire.encode_bytes(qb1, self.codebook_wire_dtype)) \
-            .codebooks.astype(np.float32)
+    def _second_round_acts(self, state: TrainState, key: jax.Array):
+        """A second round's cut tensor (for steady-state delta payloads)."""
         batch2 = self.data.sample_batch(0, jax.random.fold_in(key, 1),
                                         self.client_batch,
                                         **(self.batch_kwargs or {}))
-        acts_b = self.model.client_forward(state.params["client"], batch2)
+        acts_b = self.executor.client_forward(state.params["client"], batch2)
         if isinstance(acts_b, tuple):
             acts_b = acts_b[0]
-        qb2, _ = quantize_stateful(acts_b.reshape(-1, acts_b.shape[-1]),
-                                   cfg, qstate)
+        return acts_b.reshape(-1, acts_b.shape[-1])
+
+    def _measure_delta_direction(self, cfg, acts2, acts_b, full_bytes: int,
+                                 *, prefix: str, bytes_key: str) -> int:
+        """Steady-state `pq-delta` payload bytes for one direction.
+
+        Round 0 quantizes cold and ships full codebooks; the acked
+        reference is what the receiver decoded — the codebook at wire
+        fidelity, not the sender's private fp32 copy. Round 1 quantizes
+        warm-started from round 0's `QuantizerState` and ships b-bit
+        codebook deltas against the reference."""
+        from repro.federated import wire
+        qb1, qstate = quantize_stateful(acts2, cfg)
+        ref = wire.decode_bytes(
+            wire.encode_bytes(qb1, self.codebook_wire_dtype)) \
+            .codebooks.astype(np.float32)
+        qb2, _ = quantize_stateful(acts_b, cfg, qstate)
         payload, _ = wire.encode_pq_delta(qb2, ref, self.codebook_delta_bits)
         d = int(acts2.shape[-1])
         cb_full = int(np.prod(cfg.codebook_shape(d))) \
@@ -432,14 +498,14 @@ class FederatedTrainer:
         code_bytes = len(wire.encode_bytes(qb2, self.codebook_wire_dtype)) \
             - wire.HEADER_BYTES - cb_full
         cb_delta = len(payload) - wire.HEADER_BYTES - code_bytes
-        self.last_codebook_meta = {
-            "codebook_delta_bits": self.codebook_delta_bits,
-            "uplink_bytes_full_codebook": full_bytes,
-            "uplink_bytes_delta_codebook": len(payload),
-            "codebook_bytes_full": cb_full,
-            "codebook_bytes_delta": cb_delta,
-            "codebook_bytes_reduction": cb_full / max(cb_delta, 1),
-        }
+        self.last_codebook_meta.update({
+            f"{prefix}codebook_delta_bits": self.codebook_delta_bits,
+            f"{bytes_key}_full_codebook": full_bytes,
+            f"{bytes_key}_delta_codebook": len(payload),
+            f"{prefix}codebook_bytes_full": cb_full,
+            f"{prefix}codebook_bytes_delta": cb_delta,
+            f"{prefix}codebook_bytes_reduction": cb_full / max(cb_delta, 1),
+        })
         return len(payload)
 
     def measure_uplink_bytes(self, state: TrainState, key: jax.Array) -> int:
@@ -452,21 +518,31 @@ class FederatedTrainer:
         """The uncompressed cut tensor (either direction's dense baseline)."""
         batch = self.data.sample_batch(0, key, self.client_batch,
                                        **(self.batch_kwargs or {}))
-        acts = self.model.client_forward(state.params["client"], batch)
+        acts = self.executor.client_forward(state.params["client"], batch)
         if isinstance(acts, tuple):
             acts = acts[0]
         return int(acts.size * jnp.dtype(acts.dtype).itemsize)
 
     # ---- scheduled run -----------------------------------------------------
-    def run(self, steps: int, key: jax.Array, log_every: int = 0):
+    def run(self, steps: int, key: jax.Array, log_every: int = 0,
+            state: Optional[TrainState] = None):
         """Run ``steps`` server updates through the scheduler.
 
         Returns (final state, history) where history holds one dict per
         server update: the step metrics (host-synced once, at the end of the
         run — not per round) plus the round's simulation fields. The full
         `Trace` is kept in ``self.last_trace``.
+
+        ``state`` (optional) continues training from an existing
+        `TrainState` instead of a fresh init — what the trace-driven
+        autoscaler uses to re-run segments of one training run under
+        successive (cohort, policy, compressor) plans
+        (``federated/autoscale.py``). The caller's state is copied on
+        entry: the executors' weighted steps donate their input buffers,
+        and donation must never reach arrays the caller still owns.
         """
-        state = self.init_state(key)
+        state = self.init_state(key) if state is None \
+            else jax.tree.map(jnp.copy, state)
         device_metrics: List[Dict[str, jax.Array]] = []
 
         def execute(update_idx: int, participants: Sequence[Arrival],
@@ -478,38 +554,23 @@ class FederatedTrainer:
                 rk = round_keys.setdefault(
                     a.version, jax.random.fold_in(key, a.version + 1))
                 parts.append(self.client_batch_for(a.client, rk))
-            if isinstance(self.policy, AsyncBuffer):
-                # per-contribution staleness weighting (FedBuff): each
-                # client's gradient split is discounted by ITS OWN staleness
-                # before aggregation — not by the cohort mean. Every async
-                # flush takes this path (even all-fresh buffers) so the
-                # per-client quantization granularity is consistent across
-                # a run instead of flipping with the staleness draw.
-                batches = jax.tree.map(
-                    lambda *xs: jnp.stack(xs, axis=0), *parts)
-                cut_in = self._cut_state_for(participants, state.params,
-                                             parts, stacked=False)
-                if cut_in is None:
-                    state, metrics = self._weighted_step(
-                        state, batches, jnp.asarray(weights, jnp.float32))
-                else:
-                    state, metrics = self._weighted_step(
-                        state, batches, jnp.asarray(weights, jnp.float32),
-                        cut_in)
-                self._absorb_cut_state(participants,
-                                       metrics.pop("cut_state", None),
-                                       stacked=False)
-            else:
-                batch = self.stack_batches(parts)
-                cut_in = self._cut_state_for(participants, state.params,
-                                             parts, stacked=True)
-                if cut_in is None:
-                    state, metrics = self._step(state, batch)
-                else:
-                    state, metrics = self._step(state, batch, cut_in)
-                self._absorb_cut_state(participants,
-                                       metrics.pop("cut_state", None),
-                                       stacked=True)
+            # AsyncBuffer flushes run the per-contribution staleness
+            # weighting (FedBuff): each client's gradient split is
+            # discounted by ITS OWN staleness before aggregation — not by
+            # the cohort mean. Every async flush takes this path (even
+            # all-fresh buffers) so the per-client quantization granularity
+            # is consistent across a run instead of flipping with the
+            # staleness draw. Synchronous policies pass weights=None and
+            # the executor picks its fused/cohort semantics.
+            is_async = isinstance(self.policy, AsyncBuffer)
+            per_client = self.executor.per_client_layout(is_async)
+            cut_in = self._cut_state_for(participants, state.params, parts,
+                                         stacked=not per_client)
+            state, metrics = self.executor.execute(
+                state, parts, weights if is_async else None, cut_in)
+            self._absorb_cut_state(participants,
+                                   metrics.pop("cut_state", None),
+                                   stacked=not per_client)
             device_metrics.append(metrics)
             if log_every and update_idx % log_every == 0:
                 # the only mid-run host sync, at the caller-chosen cadence
@@ -526,7 +587,8 @@ class FederatedTrainer:
         trace = scheduler.run(
             steps, sample_cohort=lambda rd: sample_clients(
                 self._rng, self.data.num_clients, self.cohort),
-            uplink_bytes=uplink, downlink_bytes=downlink, execute=execute)
+            uplink_bytes=uplink, downlink_bytes=downlink, execute=execute,
+            placement=self.executor.place)
         dl = self.downlink
         trace.meta.update({
             "uplink_compressor": getattr(self.uplink, "spec",
@@ -538,6 +600,8 @@ class FederatedTrainer:
             "warm_start": self.warm_start,
             "error_feedback": self.error_feedback,
             "stochastic_downlink": self.stochastic_downlink,
+            "executor": self.executor.name,
+            "executor_shards": getattr(self.executor, "num_shards", 1),
         })
         trace.meta.update(self.last_codebook_meta)
 

@@ -53,10 +53,18 @@ from repro.federated.trace import RoundRecord, Trace
 
 @dataclasses.dataclass(frozen=True)
 class Arrival:
-    """One completed client upload as seen by the server."""
+    """One completed client upload as seen by the server.
+
+    ``shard`` is the execution placement — which slice of the cohort
+    executor's ``clients`` device axis ran this participant's math
+    (``federated/executor.py``; 0 for the single-device stacked path).
+    Assigned by the executor's ``place`` hook just before ``execute`` and
+    recorded per round in ``RoundRecord.shards``.
+    """
     client: int
     version: int        # server model version the client computed against
     t_arrival: float    # sim seconds when the upload finished
+    shard: int = 0      # executor shard the participant was placed on
 
 
 # ---------------------------------------------------------------------------
@@ -157,12 +165,22 @@ class Scheduler:
             sample_cohort: Callable[[int], Sequence[int]],
             uplink_bytes: int,
             downlink_bytes: int,
-            execute: ExecuteFn) -> Trace:
+            execute: ExecuteFn,
+            placement: Optional[Callable[[Sequence[Arrival]],
+                                         Sequence[Arrival]]] = None) -> Trace:
+        """Drive ``rounds`` server updates.
+
+        ``placement`` (optional) maps each update's surviving participants
+        to shard-annotated `Arrival`s just before ``execute`` — the cohort
+        executor's ``place`` hook — so the cohort the executor runs and
+        the cohort the trace records carry the same device placement.
+        """
+        place = placement or (lambda parts: list(parts))
         if isinstance(self.policy, AsyncBuffer):
             return self._run_async(rounds, sample_cohort, uplink_bytes,
-                                   downlink_bytes, execute)
+                                   downlink_bytes, execute, place)
         return self._run_sync(rounds, sample_cohort, uplink_bytes,
-                              downlink_bytes, execute)
+                              downlink_bytes, execute, place)
 
     # ---- shared -----------------------------------------------------------
     def _round_trip(self, p: ClientProfile, uplink_bytes: int,
@@ -173,7 +191,7 @@ class Scheduler:
 
     # ---- synchronous policies ---------------------------------------------
     def _run_sync(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
-                  execute) -> Trace:
+                  execute, place) -> Trace:
         rng = np.random.default_rng(self.seed)
         trace = Trace()
         t = 0.0
@@ -194,6 +212,7 @@ class Scheduler:
                 arrivals.append(Arrival(cid, rd, t_arr))
             survivors, cut, t_end = self.policy.split(arrivals, t)
             t_end += self.server_step_seconds
+            survivors = place(survivors)
             metrics = execute(rd, survivors, [1.0] * len(survivors)) \
                 if survivors else {}
             trace.append(RoundRecord(
@@ -204,13 +223,14 @@ class Scheduler:
                 uplink_bytes=len(arrivals) * uplink_bytes,
                 downlink_bytes=len(ids) * downlink_bytes,
                 staleness=(0,) * len(survivors),
+                shards=tuple(a.shard for a in survivors),
                 metrics=metrics))
             t = t_end
         return trace
 
     # ---- async buffer ------------------------------------------------------
     def _run_async(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
-                   execute) -> Trace:
+                   execute, place) -> Trace:
         """FedBuff loop: the initial cohort sets the concurrency; every
         completed (or dropped) slot is refilled with the next client from a
         fresh-cohort stream, so the whole population keeps rotating through
@@ -273,6 +293,7 @@ class Scheduler:
                 t_end = t_arr + self.server_step_seconds
                 staleness = [version - a.version for a in buffer]
                 weights = [policy.staleness_weight(s) for s in staleness]
+                buffer = place(buffer)
                 metrics = execute(updates, buffer, weights)
                 version += 1
                 dispatch(next_client(), t_arr, version)  # slot sees new model
@@ -284,6 +305,7 @@ class Scheduler:
                     uplink_bytes=len(buffer) * uplink_bytes,
                     downlink_bytes=dispatches * downlink_bytes,
                     staleness=tuple(staleness),
+                    shards=tuple(a.shard for a in buffer),
                     metrics=metrics))
                 buffer, dropped_accum, dispatches = [], [], 0
                 t_round_start = t_end

@@ -29,6 +29,7 @@ class RoundRecord:
     uplink_bytes: int                # measured bytes that crossed client->server
     downlink_bytes: int              # server->client bytes (broadcast + cut grads)
     staleness: Tuple[int, ...] = ()  # per-participant model-version lag (async)
+    shards: Tuple[int, ...] = ()     # per-participant executor shard placement
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
@@ -81,6 +82,57 @@ class Trace:
     def mean_staleness(self) -> float:
         s = [x for r in self.records for x in r.staleness]
         return sum(s) / len(s) if s else 0.0
+
+    # ---- windowed observations (consumed by federated/autoscale.py) -------
+    def window(self, n: Optional[int] = None) -> Sequence[RoundRecord]:
+        """The last ``n`` records (all of them for ``None``)."""
+        return self.records if n is None else self.records[-n:]
+
+    def duration_percentile(self, q: float,
+                            window: Optional[int] = None) -> float:
+        """The q-th percentile (0..100, linear interpolation) of per-round
+        durations over the window — the straggler-tail signal."""
+        recs = self.window(window)
+        if not recs:
+            return 0.0
+        xs = sorted(r.duration for r in recs)
+        pos = (len(xs) - 1) * min(max(q, 0.0), 100.0) / 100.0
+        lo = int(pos)
+        hi = min(lo + 1, len(xs) - 1)
+        return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+    def tail_ratio(self, window: Optional[int] = None) -> float:
+        """p95/p50 of round durations — >~2 means a straggler-dominated
+        round time (the autoscaler's primary trigger)."""
+        p50 = self.duration_percentile(50.0, window)
+        return self.duration_percentile(95.0, window) / p50 if p50 > 0 else 1.0
+
+    def drop_rate(self, window: Optional[int] = None) -> float:
+        """Fraction of sampled uploads that were lost (dropout or straggler
+        cut) over the window."""
+        recs = self.window(window)
+        lost = sum(len(r.dropped) for r in recs)
+        total = lost + sum(len(r.participants) for r in recs)
+        return lost / total if total else 0.0
+
+    def bytes_per_round(self, window: Optional[int] = None,
+                        direction: str = "total") -> float:
+        recs = self.window(window)
+        if not recs:
+            return 0.0
+        up = sum(r.uplink_bytes for r in recs)
+        down = sum(r.downlink_bytes for r in recs)
+        total = {"uplink": up, "downlink": down, "total": up + down}[direction]
+        return total / len(recs)
+
+    def loss_slope(self, window: Optional[int] = None,
+                   key: str = "loss") -> float:
+        """Mean per-round change of ``metrics[key]`` over the window
+        (negative = still improving; ~0 = plateaued)."""
+        xs = [r.metrics[key] for r in self.window(window) if key in r.metrics]
+        if len(xs) < 2:
+            return 0.0
+        return (xs[-1] - xs[0]) / (len(xs) - 1)
 
     def time_to_target(self, target: float, key: str = "loss") -> Optional[float]:
         """Sim seconds until ``metrics[key]`` first reaches <= target."""

@@ -12,7 +12,7 @@ import math
 import jax
 import numpy as np
 
-from repro.sharding.ctx import AxisType, make_mesh
+from repro.sharding.ctx import CLIENTS_AXIS, AxisType, make_mesh
 
 SINGLE_POD = (16, 16)                  # 256 chips / pod
 MULTI_POD = (2, 16, 16)                # 2 pods = 512 chips
@@ -47,6 +47,28 @@ def make_debug_mesh(data: int = 2, model: int = 2, pods: int = 0):
     n = math.prod(shape)
     return make_mesh(shape, axes, devices=jax.devices()[:n],
                      axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_clients_mesh(shards: int = 0):
+    """1-D ``("clients",)`` mesh for cohort-parallel execution.
+
+    ``shards=0`` is host-count-aware: it uses every visible device, so the
+    same call serves a real TPU slice and a CPU CI runner that forced 2-4
+    host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (which must be set before jax initializes its backend). A single-device
+    host yields a valid 1-shard mesh — the mesh executor then degenerates to
+    the per-client path on one device, which is what the shard-scaling
+    benchmark uses as its baseline.
+    """
+    devices = jax.devices()
+    n = shards or len(devices)
+    if n > len(devices):
+        raise RuntimeError(
+            f"need {n} devices for a {n}-shard clients mesh, have "
+            f"{len(devices)} — set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before importing jax")
+    return make_mesh((n,), (CLIENTS_AXIS,), devices=devices[:n],
+                     axis_types=(AxisType.Auto,))
 
 
 # TPU v5e hardware constants for the roofline model (per chip)

@@ -1,8 +1,11 @@
 from repro.sharding.ctx import (
+    CLIENTS_AXIS,
     AxisType,
     axis_size,
+    clients_sharding,
     current_mesh,
     make_mesh,
+    replicated_sharding,
     set_mesh,
     shard,
     shard_residual,
@@ -11,10 +14,13 @@ from repro.sharding.ctx import (
 from repro.sharding.rules import param_specs, spec_for_param
 
 __all__ = [
+    "CLIENTS_AXIS",
     "AxisType",
     "axis_size",
+    "clients_sharding",
     "current_mesh",
     "make_mesh",
+    "replicated_sharding",
     "set_mesh",
     "shard",
     "shard_residual",

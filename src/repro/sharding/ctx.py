@@ -25,6 +25,26 @@ _MESH: Optional[Mesh] = None
 
 AxisEntry = Union[None, str, Sequence[str]]
 
+# The cohort-parallel mesh axis: one shard = one slice of a round's client
+# cohort. Built by ``launch/mesh.make_clients_mesh`` and consumed by the
+# ``"mesh"`` cohort executor (``federated/executor.py``), which places
+# client-major arrays (batches, PRNG keys, EF memories, CutStates) with
+# ``NamedSharding(mesh, P(CLIENTS_AXIS))`` and combines shard-local
+# per-client gradients with an explicit psum over this axis.
+CLIENTS_AXIS = "clients"
+
+
+def clients_sharding(mesh: Mesh) -> NamedSharding:
+    """`NamedSharding` placing a client-major array's leading axis over the
+    ``clients`` mesh axis (remaining dims replicated)."""
+    return NamedSharding(mesh, P(CLIENTS_AXIS))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement on ``mesh`` (the train state's layout
+    under the cohort-parallel executor)."""
+    return NamedSharding(mesh, P())
+
 
 # ---------------------------------------------------------------------------
 # jax.sharding.AxisType compat shim

@@ -89,8 +89,8 @@ def bench_lloyd_update(rows, fast: bool = True):
                      "note": "scan: one-hot matmul + centroid re-read"})
         if n <= 16384:  # interpret mode is python-speed; keep it bounded
             us_p = time_call(lambda a, cc: ops.lloyd_update(
-                a, cc, w, interpret=True), x, c, iters=1, warmup=1)
-            ds_p, ct_p = ops.lloyd_update(x, c, w, interpret=True)
+                a, cc, w), x, c, iters=1, warmup=1)
+            ds_p, ct_p = ops.lloyd_update(x, c, w)
             ds_j, ct_j = jnp_update(x, c)
             err = float(np.abs(np.asarray(ds_p - ds_j)).max())
             rows.append({"name": f"lloyd_update_pallas_interpret_n{n}_d{d}_L{l}",
@@ -126,11 +126,10 @@ def bench_scalarq_kernels(rows):
     us_j = time_call(jax.jit(quant_jnp), x)
     rows.append({"name": f"scalarq_quantize_jnp_n{n}_d{d}_b{bits}",
                  "us_per_call": us_j})
-    us_p = time_call(lambda a: ops.scalar_quantize(a, lo, scale, bits,
-                                                   interpret=True),
+    us_p = time_call(lambda a: ops.scalar_quantize(a, lo, scale, bits),
                      x, iters=1, warmup=1)
     codes_j, _ = jax.jit(quant_jnp)(x)
-    codes_p, _ = ops.scalar_quantize(x, lo, scale, bits, interpret=True)
+    codes_p, _ = ops.scalar_quantize(x, lo, scale, bits)
     rows.append({"name": f"scalarq_quantize_pallas_interpret_n{n}_d{d}_b{bits}",
                  "us_per_call": us_p,
                  "codes_equal_jnp": bool((codes_j == codes_p).all()),
@@ -148,10 +147,10 @@ def bench_scalarq_kernels(rows):
     us_pack_j = time_call(jax.jit(pack_jnp), flat)
     rows.append({"name": f"scalarq_pack_jnp_n{n * d}_b{bits}",
                  "us_per_call": us_pack_j})
-    us_pack_p = time_call(lambda cc: ops.pack_codes(cc, bits, interpret=True),
+    us_pack_p = time_call(lambda cc: ops.pack_codes(cc, bits),
                           flat, iters=1, warmup=1)
     words_j = jax.jit(pack_jnp)(flat)
-    words_p = ops.pack_codes(flat, bits, interpret=True)
+    words_p = ops.pack_codes(flat, bits)
     rows.append({"name": f"scalarq_pack_pallas_interpret_n{n * d}_b{bits}",
                  "us_per_call": us_pack_p,
                  "words_equal_jnp": bool((words_j == words_p).all()),
@@ -187,7 +186,7 @@ def run(fast: bool = True):
                      "us_per_call": us_ref})
         if n <= 16384:  # interpret mode is python-speed; keep it bounded
             us_k = time_call(
-                lambda a, b: ops.kmeans_assign(a, b, interpret=True)[0],
+                lambda a, b: ops.kmeans_assign(a, b)[0],
                 x, c, iters=1, warmup=1)
             rows.append({"name": f"assign_pallas_interpret_n{n}_d{d}_L{l}",
                          "us_per_call": us_k,
@@ -219,8 +218,8 @@ def run(fast: bool = True):
         q.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
         k.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd),
         v.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd),
-        num_q_heads=H, num_kv_heads=Kv, scale=scale, block_q=64, block_k=64,
-        interpret=True).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+        num_q_heads=H, num_kv_heads=Kv, scale=scale, block_q=64,
+        block_k=64).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
     err = float(np.abs(np.asarray(out - ref_out)).max())
     rows.append({"name": f"flash_attention_S{S}_H{H}kv{Kv}",
                  "us_per_call": 0.0, "max_err_vs_rowblock": round(err, 7),

@@ -4,6 +4,12 @@ report. Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run             # fast (default)
   PYTHONPATH=src python -m benchmarks.run --full      # paper-scale grids
   PYTHONPATH=src python -m benchmarks.run --only fig3_quantizer_tradeoff
+  PYTHONPATH=src python -m benchmarks.run --preflight # fedlint gate only
+
+``--preflight`` runs the same static-analysis invocation as CI
+(``python -m repro.lint src benchmarks examples``) and refuses to
+benchmark on any finding — a typo'd mesh axis or a hardcoded
+``interpret=True`` should fail before a long benchmark run, not during.
 
 The ``kernels`` suite additionally writes ``BENCH_kernels.json`` at the
 repo root (per-backend Lloyd-update / scalarq / PQ-encode rows + analytic
@@ -37,12 +43,34 @@ SUITES = {
 }
 
 
+LINT_TARGETS = ("src", "benchmarks", "examples")
+
+
+def preflight() -> int:
+    """Run the fedlint gate (same invocation as the CI static-analysis
+    job); returns the number of findings after printing them."""
+    from repro.lint import run_lint
+    findings = run_lint(list(LINT_TARGETS))
+    for f in findings:
+        print(f.format(), file=sys.stderr)
+    if findings:
+        print(f"preflight: {len(findings)} fedlint finding(s) in "
+              f"{' '.join(LINT_TARGETS)} — fix or suppress before "
+              "benchmarking", file=sys.stderr)
+    return len(findings)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (slow)")
     ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument("--preflight", action="store_true",
+                    help="run the fedlint static-analysis gate and exit")
     args = ap.parse_args()
+
+    if args.preflight:
+        sys.exit(1 if preflight() else 0)
 
     print("name,us_per_call,derived")
     failures = 0

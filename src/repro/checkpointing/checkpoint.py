@@ -55,8 +55,9 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
                     extra: Optional[dict] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = {}
-    for k, v in _flatten(tree).items():
-        arr, dtname = _encode(np.asarray(jax.device_get(v)))
+    host = jax.device_get(_flatten(tree))   # one transfer for the whole tree
+    for k, v in host.items():
+        arr, dtname = _encode(np.asarray(v))
         flat[k] = arr
         if dtname:
             flat[f"__dtype__{k}"] = np.asarray(dtname)

@@ -100,7 +100,8 @@ def _pad_chunks(x: jax.Array, chunk: int):
 def _assign_jnp(x: jax.Array, centroids: jax.Array) -> jax.Array:
     """codes[i] = argmin_l ‖x_i − c_l‖².  x: (n, D), centroids: (L, D)."""
     # ‖x‖² is constant across l — only the cross term and ‖c‖² matter.
-    scores = 2.0 * (x @ centroids.T) - jnp.sum(centroids * centroids, axis=-1)
+    scores = (2.0 * (x @ centroids.T)
+              - jnp.sum(centroids * centroids, axis=-1)[None, :])
     return jnp.argmax(scores, axis=-1).astype(jnp.int32)
 
 
@@ -238,7 +239,7 @@ def _init_centroids(x: jax.Array, num_clusters: int,
     m = xs.shape[0]
 
     cents0 = jnp.zeros((L, d), x.dtype).at[0].set(xs[0])
-    mind0 = jnp.sum(jnp.square(xs - xs[0]), axis=-1)
+    mind0 = jnp.sum(jnp.square(xs - xs[0][None, :]), axis=-1)
 
     if key is None:
         def body(l, state):
@@ -246,7 +247,8 @@ def _init_centroids(x: jax.Array, num_clusters: int,
             idx = jnp.argmax(mind)
             c = xs[idx]
             cents = cents.at[l].set(c)
-            mind = jnp.minimum(mind, jnp.sum(jnp.square(xs - c), axis=-1))
+            mind = jnp.minimum(mind,
+                               jnp.sum(jnp.square(xs - c[None, :]), axis=-1))
             return cents, mind
         cents, _ = jax.lax.fori_loop(1, L, body, (cents0, mind0))
     else:
@@ -258,7 +260,8 @@ def _init_centroids(x: jax.Array, num_clusters: int,
             idx = jax.random.categorical(keys[l], logits)
             c = xs[idx]
             cents = cents.at[l].set(c)
-            mind = jnp.minimum(mind, jnp.sum(jnp.square(xs - c), axis=-1))
+            mind = jnp.minimum(mind,
+                               jnp.sum(jnp.square(xs - c[None, :]), axis=-1))
             return cents, mind
         cents, _ = jax.lax.fori_loop(1, L, body, (cents0, mind0))
     return cents

@@ -86,6 +86,27 @@ synchronous simulation bitwise (tests/test_scheduler.py,
 tests/test_compressors.py); heterogeneous fleets and per-direction codecs
 turn the same trainer into the paper-§5 trade-off harness driven by
 ``benchmarks/bench_network.py`` (``--downlink`` sweeps the gradient codec).
+
+Static analysis
+---------------
+This subsystem concentrates the repo's classic silent-failure modes: a
+host sync inside a per-arrival scheduler callback serializes every round,
+a jit closure rebuilt per round retraces the step each call, a typo'd
+mesh axis explodes only at trace time on a real mesh, and a wire kind
+without an explicit decoder arm mis-decodes the *next* kind added. The
+`repro.lint` package (``python -m repro.lint src benchmarks examples``)
+checks all of these statically — five AST/jaxpr passes (host-sync,
+custom-vjp, mesh-axes, pallas, wire-format; catalogue in the
+``repro.lint`` docstring, ``--list-rules`` for the full list). CI's
+``static-analysis`` job fails on any finding, and
+``python -m benchmarks.run --preflight`` runs the identical gate before a
+benchmark spend. Intentional syncs (e.g. the once-per-``log_every``
+trainer log line) carry an inline ``# fedlint: disable=<rule>`` so the
+decision is visible in review. ``wire.py``'s encoder bodies are pinned by
+AST hash in ``repro/lint/wire_manifest.json``: editing an encode body
+without bumping its version literal (and re-running ``python -m
+repro.lint --update-wire-manifest``) is a lint error, so old decoders can
+never silently accept payloads they cannot parse.
 """
 
 from repro.federated.autoscale import (

@@ -78,39 +78,50 @@ def weighted_average(trees: Sequence[Any], weights: Sequence[float]):
 # FedAvg baseline
 # ---------------------------------------------------------------------------
 
-def fedavg_round(model, params, data: FederatedDataset, client_ids,
-                 key: jax.Array, *, local_steps: int, batch: int,
-                 lr: float, batch_kwargs: Optional[dict] = None):
-    """One FedAvg round: H local SGD steps per client, weighted delta average.
+def make_fedavg_step(model, lr: float):
+    """The jitted single local SGD step (client batch sampled outside jit).
 
-    Returns (new_params, mean local loss). Local updates are plain SGD as in
-    McMahan et al. (2017).
-    """
-    batch_kwargs = batch_kwargs or {}
-
-    # jitted single local step (client batch sampled outside jit)
+    Built ONCE per (model, lr) and reused across every round — a jit
+    closure rebuilt inside the round function would retrace per round."""
     @jax.jit
     def sgd_step(p, b):
         loss, grads = jax.value_and_grad(
             lambda q: model.loss(q, b, quantize=False)[0])(p)
         new_p = jax.tree.map(lambda x, g: x - lr * g, p, grads)
         return new_p, loss
+    return sgd_step
 
-    deltas, weights, losses = [], [], []
-    for i, cid in enumerate(client_ids):
+
+def fedavg_round(model, params, data: FederatedDataset, client_ids,
+                 key: jax.Array, *, local_steps: int, batch: int,
+                 lr: float, batch_kwargs: Optional[dict] = None,
+                 sgd_step=None):
+    """One FedAvg round: H local SGD steps per client, weighted delta average.
+
+    Returns (new_params, mean local loss). Local updates are plain SGD as in
+    McMahan et al. (2017). ``sgd_step`` (from `make_fedavg_step`) lets the
+    round driver reuse one jit cache across rounds; per-step losses stay on
+    device and sync once at the end of the round.
+    """
+    batch_kwargs = batch_kwargs or {}
+    if sgd_step is None:
+        sgd_step = make_fedavg_step(model, lr)
+
+    deltas, losses = [], []
+    for cid in client_ids:
         p = params
         ck = jax.random.fold_in(key, int(cid))
         for s in range(local_steps):
             b = data.sample_batch(int(cid), jax.random.fold_in(ck, s), batch,
                                   **batch_kwargs)
             p, loss = sgd_step(p, b)
-            losses.append(float(loss))
+            losses.append(loss)
         deltas.append(jax.tree.map(operator.sub, p, params))
-        weights.append(float(data.client_weights[int(cid)]))
+    weights = [float(data.client_weights[int(cid)]) for cid in client_ids]
 
     mean_delta = weighted_average(deltas, weights)
     new_params = jax.tree.map(operator.add, params, mean_delta)
-    return new_params, float(np.mean(losses))
+    return new_params, float(np.mean(jax.device_get(losses)))
 
 
 def run_fedavg(model, params, data: FederatedDataset, *, rounds: int,
@@ -122,13 +133,14 @@ def run_fedavg(model, params, data: FederatedDataset, *, rounds: int,
     Returns (params, per-round mean-loss list)."""
     rng = np.random.default_rng(seed)
     weights = data.client_weights if weighted_sampling else None
+    sgd_step = make_fedavg_step(model, lr)   # one jit cache for the run
     losses = []
     for r in range(rounds):
         ids = sample_clients(rng, data.num_clients, cohort, weights=weights)
         params, loss = fedavg_round(
             model, params, data, ids, jax.random.fold_in(key, r + 1),
             local_steps=local_steps, batch=batch, lr=lr,
-            batch_kwargs=batch_kwargs)
+            batch_kwargs=batch_kwargs, sgd_step=sgd_step)
         losses.append(loss)
     return params, losses
 
@@ -575,7 +587,7 @@ class FederatedTrainer:
             if log_every and update_idx % log_every == 0:
                 # the only mid-run host sync, at the caller-chosen cadence
                 logger.info("step %d: loss=%.4f", update_idx,
-                            float(metrics.get("loss", 0.0)))
+                            float(metrics.get("loss", 0.0)))  # fedlint: disable=host-sync-in-callback
             return metrics
 
         scheduler = Scheduler(fleet=self.fleet, policy=self.policy,

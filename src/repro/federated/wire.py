@@ -436,14 +436,19 @@ def decode_payload(payload: bytes) -> Decoded:
         vals = np.frombuffer(rest, dtype, count=nnz)
         return Decoded("sparse", n, d, bits,
                        {"indices": idx, "values": vals})
-    # KIND_SCALAR
-    expected = 8 + _code_stream_bytes(n * d, bits)
-    if len(body) != expected:
-        raise ValueError(f"scalar body is {len(body)} B, expected {expected}")
-    rng = np.frombuffer(body[:8], np.float32, count=2)
-    codes = _unpack_codes(body[8:], n * d, bits)
-    return Decoded("scalar", n, d, bits,
-                   {"codes": codes, "lo": rng[0], "scale": rng[1]})
+    if kind == KIND_SCALAR:
+        expected = 8 + _code_stream_bytes(n * d, bits)
+        if len(body) != expected:
+            raise ValueError(
+                f"scalar body is {len(body)} B, expected {expected}")
+        rng = np.frombuffer(body[:8], np.float32, count=2)
+        codes = _unpack_codes(body[8:], n * d, bits)
+        return Decoded("scalar", n, d, bits,
+                       {"codes": codes, "lo": rng[0], "scale": rng[1]})
+    # _check_header already rejects unknown kinds; this guards the dispatch
+    # above staying exhaustive when the next kind is added
+    raise ValueError(f"no decoder arm for payload kind "
+                     f"{_KIND_NAMES.get(kind, kind)!r}")
 
 
 def reconstruct(dp: Decoded) -> np.ndarray:

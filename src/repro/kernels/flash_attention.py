@@ -82,7 +82,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     num_q_heads: int, num_kv_heads: int, scale: float,
                     window=None, block_q: int = 256, block_k: int = 256,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = False) -> jax.Array:
     """Causal flash attention with GQA-aware kv indexing.
 
     q: (B·H, S, hd); k/v: (B·Kv, S, hd). Requires S % block == 0 (the

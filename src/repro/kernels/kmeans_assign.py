@@ -46,7 +46,7 @@ def _assign_kernel(x_ref, c_ref, cnorm_ref, lmask_ref, codes_ref, dist_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def kmeans_assign_kernel(x: jax.Array, centroids: jax.Array, lmask: jax.Array,
-                         *, block_n: int = 512, interpret: bool = True):
+                         *, block_n: int = 512, interpret: bool = False):
     """x: (N, D) with N % block_n == 0; centroids: (L, D); lmask: (L,).
 
     Returns (codes (N,) int32, sqdist (N,) f32).

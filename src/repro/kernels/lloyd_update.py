@@ -75,7 +75,7 @@ def _update_kernel(x_ref, w_ref, c_ref, cnorm_ref, lmask_ref,
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def lloyd_update_kernel(x: jax.Array, weights: jax.Array,
                         centroids: jax.Array, lmask: jax.Array, *,
-                        block_n: int = 512, interpret: bool = True):
+                        block_n: int = 512, interpret: bool = False):
     """x: (N, D) with N % block_n == 0; weights: (N,); centroids: (L, D);
     lmask: (L,) 1.0 = valid centroid.
 

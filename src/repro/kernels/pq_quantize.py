@@ -44,7 +44,7 @@ def _fused_kernel(x_ref, c_ref, cnorm_ref, lmask_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def pq_quantize_kernel(x: jax.Array, centroids: jax.Array, lmask: jax.Array,
-                       *, block_n: int = 512, interpret: bool = True):
+                       *, block_n: int = 512, interpret: bool = False):
     """x: (N, D), N % block_n == 0; centroids (L, D); lmask (L,).
 
     Returns (z_tilde (N, D) x.dtype, residual (N, D) f32, codes (N,) int32).

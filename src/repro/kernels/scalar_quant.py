@@ -39,7 +39,7 @@ def _quantize_kernel(levels, x_ref, lo_ref, scale_ref, codes_ref, recon_ref):
 @functools.partial(jax.jit, static_argnames=("bits", "block_n", "interpret"))
 def scalar_quantize_kernel(x: jax.Array, lo: jax.Array, scale: jax.Array,
                            *, bits: int, block_n: int = 512,
-                           interpret: bool = True):
+                           interpret: bool = False):
     """x: (N, D), N % block_n == 0; lo/scale: () f32 tensor-wide range.
 
     Returns (codes (N, D) int32 in [0, 2^bits), recon (N, D) f32).
@@ -79,7 +79,7 @@ def _pack_kernel(bits, codes_ref, words_ref):
 
 @functools.partial(jax.jit, static_argnames=("bits", "block_n", "interpret"))
 def pack_codes_kernel(codes: jax.Array, *, bits: int, block_n: int = 512,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool = False) -> jax.Array:
     """codes: (N_words, 32/bits) int32 -> (N_words,) uint32 packed words."""
     n, per_word = codes.shape
     assert per_word * bits == 32, "pack kernel needs 32 % bits == 0"
@@ -104,7 +104,7 @@ def _unpack_kernel(bits, words_ref, codes_ref):
 
 @functools.partial(jax.jit, static_argnames=("bits", "block_n", "interpret"))
 def unpack_codes_kernel(words: jax.Array, *, bits: int, block_n: int = 512,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool = False) -> jax.Array:
     """words: (N_words,) uint32 -> (N_words, 32/bits) int32 codes."""
     n = words.shape[0]
     per_word = 32 // bits

@@ -1,0 +1,92 @@
+"""fedlint — domain-aware static analysis for this repo's jax/Pallas code.
+
+Run it as ``python -m repro.lint [paths...] [--json] [--select pass,...]``;
+CI's ``static-analysis`` job and ``benchmarks/run.py --preflight`` run it
+over ``src benchmarks examples`` and fail on ANY finding, so the committed
+tree always carries an empty baseline. Passes live in a registry mirroring
+the compressor/executor registries (``repro.lint.core.register_pass``);
+``--select`` picks a subset by name. AST passes are complemented by
+jaxpr-level helpers (``repro.lint.jaxprs``) for properties that need a
+trace (collective axis sets, callback primitives, float0 cotangents).
+
+Rule catalogue
+==============
+
+host-sync (``host_sync.py``)
+  * ``host-sync-in-jit`` — ``float()``/``.item()``/``np.asarray``/
+    ``jax.device_get``/``print`` reachable from jit-traced code.
+  * ``host-sync-in-loop`` — per-iteration sync on a jitted step's output
+    inside a host loop (``float(loss)`` per local step, ``device_get`` in
+    a round loop).
+  * ``host-sync-in-callback`` — syncs inside per-arrival callbacks (the
+    scheduler's ``execute=`` path); serializes every round.
+  * ``jit-closure-rebuild`` — a ``@jax.jit`` function defined *and called*
+    inside another function: fresh jit cache (full retrace) per call.
+  * ``jit-static-args`` — ``static_argnames`` naming absent parameters;
+    ``static_argnums``/``donate_argnums`` out of range.
+
+custom-vjp (``vjp.py``)
+  * ``vjp-missing-defvjp`` — primal without ``defvjp(fwd, bwd)``.
+  * ``vjp-fwd-arity`` / ``vjp-fwd-pair`` — fwd signature must match the
+    primal; fwd must return ``(output, residuals)``.
+  * ``vjp-bwd-arity`` — bwd takes ``len(nondiff_argnums) + 2`` params.
+  * ``vjp-bwd-return-arity`` — one cotangent per differentiable primal arg.
+  * ``vjp-nondiff-range`` — ``nondiff_argnums`` index out of range.
+
+mesh-axes (``mesh_axes.py``)
+  * ``mesh-axis-undeclared`` — axis names used in ``PartitionSpec``/
+    collectives/``shard()`` are cross-checked against every mesh axis
+    declared anywhere in the linted tree (two-phase collect/check); a
+    typo'd ``"client"`` is a lint error, not a trace-time crash.
+
+pallas (``pallas_checks.py``)
+  * ``pallas-index-map-arity`` / ``pallas-index-map-rank`` — BlockSpec
+    index maps must match the grid rank and the block-shape rank.
+  * ``pallas-block-divide`` — literal block shapes must divide literal
+    operand shapes (pad explicitly otherwise).
+  * ``pallas-vmem-budget`` — statically-resolvable per-step footprint vs
+    the 16 MiB per-core VMEM budget.
+  * ``pallas-accum-dtype`` — matmuls in kernel bodies must pin
+    ``preferred_element_type=jnp.float32``.
+  * ``pallas-interpret-hardcoded`` — no ``interpret=True`` call kwargs or
+    parameter defaults outside ``tests/``.
+
+wire-format (``wire_checks.py``)
+  * ``wire-kind-no-encoder`` / ``wire-kind-no-decoder`` — every
+    ``KIND_*`` tag needs a ``.pack`` site and an explicit decode
+    comparison (unlabeled fallthroughs mis-decode the next kind added).
+  * ``wire-unknown-kind-guard`` — an explicit ``kind not in ...`` raise.
+  * ``wire-version-stale`` — the AST hash of each ``encode_*`` body is
+    pinned with its version literal in ``wire_manifest.json``; body edits
+    require a version bump + ``--update-wire-manifest``.
+
+Suppressions
+============
+
+  * same line:  ``x = float(loss)  # fedlint: disable=host-sync-in-loop``
+  * every rule: ``# fedlint: disable=all``
+  * whole file: ``# fedlint: disable-file=<rule>[,<rule>...]``
+
+A suppression is a reviewed decision that lands in the diff; an
+unsuppressed finding fails CI.
+"""
+
+from repro.lint.core import (Finding, LintPass, available_passes,
+                             findings_to_json, register_pass, rule_catalogue,
+                             run_lint)
+
+# importing the pass modules registers them
+from repro.lint import host_sync as _host_sync
+from repro.lint import mesh_axes as _mesh_axes
+from repro.lint import pallas_checks as _pallas_checks
+from repro.lint import vjp as _vjp
+from repro.lint import wire_checks as _wire_checks
+
+register_pass("host-sync", _host_sync.HostSyncPass)
+register_pass("custom-vjp", _vjp.CustomVjpPass)
+register_pass("mesh-axes", _mesh_axes.MeshAxesPass)
+register_pass("pallas", _pallas_checks.PallasPass)
+register_pass("wire-format", _wire_checks.WirePass)
+
+__all__ = ["Finding", "LintPass", "available_passes", "findings_to_json",
+           "register_pass", "rule_catalogue", "run_lint"]

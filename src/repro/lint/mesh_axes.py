@@ -1,0 +1,172 @@
+"""mesh-axis consistency pass (two-phase, cross-file).
+
+Collect phase — gather every *declared* mesh axis name across the whole
+linted tree:
+
+  * tuple-of-string arguments (positional or ``axis_names=``) of any call
+    whose name contains ``mesh`` (``jax.make_mesh``, ``Mesh``,
+    ``make_clients_mesh``, ...);
+  * tuple-of-string assignments to variables named ``axes``/``axis_names``
+    (including the paired-tuple form ``shape, axes = (...), (...)``);
+  * ALL-CAPS string constants ending in ``_AXIS`` (e.g.
+    ``CLIENTS_AXIS = "clients"``), which also resolve ``Name`` references
+    at use sites.
+
+Check phase — every axis-name *use* must be a declared axis:
+
+  * string entries of ``PartitionSpec(...)`` / ``P(...)`` (nested tuples
+    included — hence ``NamedSharding(mesh, P(...))`` too);
+  * the axis argument of collectives (``psum``, ``pmean``, ``all_gather``,
+    ...) and any ``axis_name=`` keyword (including ``shard_map``);
+  * entries of the repo's ``shard(x, *entries)`` constraint helper.
+
+A typo'd ``"client"`` is a lint error here instead of a trace-time crash on
+a real mesh. If the linted tree declares no axes at all, the pass stays
+silent (nothing to cross-check against).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from repro.lint.core import (Finding, LintContext, LintPass, Module,
+                             call_name, keyword_arg)
+
+_SPEC_CALLS = {"P", "PartitionSpec"}
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                "psum_scatter", "all_to_all", "ppermute", "axis_index",
+                "pbroadcast"}
+
+
+def _str_elems(node: ast.AST) -> List[Tuple[str, int]]:
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.append((n.value, n.lineno))
+    return out
+
+
+def _tuple_of_strings(node: ast.expr) -> Optional[List[str]]:
+    if isinstance(node, (ast.Tuple, ast.List)) and node.elts and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, str)
+            for e in node.elts):
+        return [e.value for e in node.elts]
+    return None
+
+
+class MeshAxesPass(LintPass):
+    name = "mesh-axes"
+    rules = {
+        "mesh-axis-undeclared":
+            "axis name used in PartitionSpec/collective/shard() that no "
+            "mesh declaration defines",
+    }
+
+    def __init__(self):
+        self._declared: Set[str] = set()
+        self._constants: dict = {}     # NAME -> axis string
+        self._pending: Set[str] = set()  # Name refs seen in declarations
+        self._finalized = False
+
+    # ---- collect -----------------------------------------------------------
+
+    def collect(self, module: Module, ctx: LintContext) -> None:
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign):
+                self._collect_assign(node)
+            elif isinstance(node, ast.Call):
+                name = call_name(node)
+                if name and "mesh" in name.split(".")[-1].lower():
+                    self._collect_mesh_call(node)
+
+    def _collect_assign(self, node: ast.Assign) -> None:
+        pairs: List[Tuple[ast.expr, ast.expr]] = []
+        for target in node.targets:
+            if isinstance(target, ast.Tuple) \
+                    and isinstance(node.value, ast.Tuple) \
+                    and len(target.elts) == len(node.value.elts):
+                pairs.extend(zip(target.elts, node.value.elts))
+            else:
+                pairs.append((target, node.value))
+        for target, value in pairs:
+            if not isinstance(target, ast.Name):
+                continue
+            if target.id.isupper() and target.id.endswith("_AXIS") \
+                    and isinstance(value, ast.Constant) \
+                    and isinstance(value.value, str):
+                self._declared.add(value.value)
+                self._constants[target.id] = value.value
+            elif target.id.lower() in ("axes", "axis_names", "mesh_axes"):
+                strs = _tuple_of_strings(value)
+                if strs:
+                    self._declared.update(strs)
+
+    def _collect_mesh_call(self, call: ast.Call) -> None:
+        candidates = list(call.args)
+        kw = keyword_arg(call, "axis_names")
+        if kw is not None:
+            candidates.append(kw)
+        for arg in candidates:
+            if isinstance(arg, (ast.Tuple, ast.List)):
+                for e in arg.elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, str):
+                        self._declared.add(e.value)
+                    elif isinstance(e, ast.Name):
+                        self._pending.add(e.id)
+            elif isinstance(arg, ast.Name):
+                self._pending.add(arg.id)
+
+    def _finalize(self) -> None:
+        if self._finalized:
+            return
+        for name in self._pending:
+            if name in self._constants:
+                self._declared.add(self._constants[name])
+        self._finalized = True
+
+    # ---- check -------------------------------------------------------------
+
+    def _resolve(self, node: ast.expr) -> List[Tuple[str, int]]:
+        """Axis-name strings (with lines) an axis argument refers to."""
+        if isinstance(node, ast.Name) and node.id in self._constants:
+            return [(self._constants[node.id], node.lineno)]
+        return _str_elems(node)
+
+    def check(self, module: Module, ctx: LintContext) -> Iterable[Finding]:
+        self._finalize()
+        if not self._declared:
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            last = name.split(".")[-1] if name else ""
+            uses: List[Tuple[str, int, str]] = []
+            if last in _SPEC_CALLS:
+                uses += [(s, ln, "PartitionSpec entry")
+                         for s, ln in _str_elems(node)]
+            elif last in _COLLECTIVES:
+                axis = keyword_arg(node, "axis_name")
+                if axis is None and len(node.args) > 1:
+                    axis = node.args[1]
+                if axis is not None:
+                    uses += [(s, ln, f"{last} axis")
+                             for s, ln in self._resolve(axis)]
+            elif last in ("shard", "shard_residual"):
+                for arg in node.args[1:]:
+                    uses += [(s, ln, "shard() entry")
+                             for s, ln in self._resolve(arg)]
+            axis_kw = keyword_arg(node, "axis_name")
+            if axis_kw is not None and last not in _COLLECTIVES:
+                uses += [(s, ln, "axis_name=")
+                         for s, ln in self._resolve(axis_kw)]
+            for axis, line, where in uses:
+                if axis not in self._declared:
+                    yield self.finding(
+                        module, line, "mesh-axis-undeclared",
+                        f"{where} {axis!r} matches no declared mesh axis "
+                        f"(declared: {sorted(self._declared)}) — typo'd "
+                        "axis names only explode at trace time on a real "
+                        "mesh")

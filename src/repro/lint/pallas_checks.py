@@ -1,0 +1,253 @@
+"""Pallas kernel checks.
+
+For every ``pl.pallas_call`` site (and every kernel body, identified by
+``*_ref`` parameters):
+
+  * index-map arity — each BlockSpec's index map must take one argument
+    per grid dimension (a 3-D grid with a 2-arg lambda only fails at
+    lowering time, on a TPU);
+  * index-map rank — the returned block-index tuple must have one entry
+    per block-shape dimension;
+  * block divisibility — when the out_shape and the out BlockSpec are both
+    integer literals, block dims must divide the operand dims (partial
+    blocks need explicit padding, as ``kernels/ops.py`` does);
+  * VMEM footprint — when every block/scratch shape is statically
+    resolvable, the summed per-step footprint (4 B/elem) is checked
+    against the per-core VMEM budget (16 MiB, v4/v5e class);
+  * fp32 accumulator discipline — ``dot_general``/``dot``/``matmul``/``@``
+    inside a kernel body must pin ``preferred_element_type=jnp.float32``
+    or the MXU accumulates at the input dtype;
+  * no hardcoded ``interpret=True`` outside tests — neither as a call
+    keyword nor as a parameter default; the backend-aware resolution in
+    ``kernels/ops.py`` is the one place that decision belongs.
+"""
+
+from __future__ import annotations
+
+import ast
+import math
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.lint.core import (Finding, LintContext, LintPass, Module,
+                             call_name, is_test_path, keyword_arg)
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024   # per-core VMEM, v4/v5e class
+_MATMULS = {"dot_general", "dot", "matmul"}
+
+
+def _literal_int_tuple(node: ast.expr) -> Optional[List[Optional[int]]]:
+    """Tuple elements as ints where literal, None where not; None if the
+    node is not a tuple/list at all."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    out: List[Optional[int]] = []
+    for e in node.elts:
+        out.append(e.value if isinstance(e, ast.Constant)
+                   and isinstance(e.value, int) else None)
+    return out
+
+
+def _fn_arity(fn) -> Optional[int]:
+    if fn is None:
+        return None
+    args = fn.args
+    if args.vararg or args.kwarg:
+        return None
+    return len(args.posonlyargs) + len(args.args) + len(args.kwonlyargs)
+
+
+def _fn_return_tuple_len(fn) -> Optional[int]:
+    if isinstance(fn, ast.Lambda):
+        return len(fn.body.elts) if isinstance(fn.body, ast.Tuple) else None
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        lens = {len(n.value.elts) for n in ast.walk(fn)
+                if isinstance(n, ast.Return)
+                and isinstance(n.value, ast.Tuple)}
+        return lens.pop() if len(lens) == 1 else None
+    return None
+
+
+class PallasPass(LintPass):
+    name = "pallas"
+    rules = {
+        "pallas-index-map-arity":
+            "BlockSpec index map arity does not match the grid rank",
+        "pallas-index-map-rank":
+            "BlockSpec index map returns a block index whose rank does not "
+            "match the block shape",
+        "pallas-block-divide":
+            "block shape does not divide the operand shape (needs explicit "
+            "padding)",
+        "pallas-vmem-budget":
+            "statically-resolvable per-step block footprint exceeds the "
+            "per-core VMEM budget",
+        "pallas-accum-dtype":
+            "matmul in a kernel body without "
+            "preferred_element_type=jnp.float32 (MXU accumulates at input "
+            "dtype)",
+        "pallas-interpret-hardcoded":
+            "interpret=True hardcoded outside tests (belongs in the "
+            "backend-aware default of kernels/ops.py)",
+    }
+
+    def check(self, module: Module, ctx: LintContext) -> Iterable[Finding]:
+        tree = module.tree
+        in_tests = is_test_path(module.path)
+
+        local_fns: Dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                local_fns.setdefault(node.name, node)
+            elif isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Lambda):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        local_fns.setdefault(t.id, node.value)
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_def(module, node, in_tests)
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            last = name.split(".")[-1] if name else ""
+            if not in_tests:
+                kw = keyword_arg(node, "interpret")
+                if isinstance(kw, ast.Constant) and kw.value is True:
+                    yield self.finding(
+                        module, kw, "pallas-interpret-hardcoded",
+                        "interpret=True hardcoded at a call site — on a "
+                        "TPU this silently runs the kernel in python; let "
+                        "the ops-layer default resolve it per backend")
+            if last == "pallas_call":
+                yield from self._check_pallas_call(module, node, local_fns)
+
+    # ---- kernel bodies -----------------------------------------------------
+
+    def _check_def(self, module: Module, fn,
+                   in_tests: bool) -> Iterable[Finding]:
+        args = fn.args
+        pos = args.posonlyargs + args.args
+        defaults = args.defaults
+        if not in_tests:
+            pairs = list(zip(pos[len(pos) - len(defaults):], defaults)) \
+                + list(zip(args.kwonlyargs, args.kw_defaults))
+            for param, default in pairs:
+                if param.arg == "interpret" \
+                        and isinstance(default, ast.Constant) \
+                        and default.value is True:
+                    yield self.finding(
+                        module, param, "pallas-interpret-hardcoded",
+                        f"{fn.name!r} defaults interpret=True — a caller "
+                        "that omits the kwarg runs python-interpreted on "
+                        "TPU; default to False (or None + backend-aware "
+                        "resolution)")
+        if not any(p.arg.endswith("_ref") for p in pos):
+            return
+        # this is a kernel body: fp32 accumulator discipline
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                          ast.MatMult):
+                yield self.finding(
+                    module, node, "pallas-accum-dtype",
+                    f"'@' matmul in kernel {fn.name!r} cannot pin the "
+                    "accumulator dtype — use lax.dot_general(..., "
+                    "preferred_element_type=jnp.float32)")
+            if isinstance(node, ast.Call):
+                cname = call_name(node)
+                if cname and cname.split(".")[-1] in _MATMULS \
+                        and keyword_arg(node,
+                                        "preferred_element_type") is None:
+                    yield self.finding(
+                        module, node, "pallas-accum-dtype",
+                        f"{cname} in kernel {fn.name!r} without "
+                        "preferred_element_type=jnp.float32: the MXU "
+                        "accumulates at the input dtype (bf16 inputs lose "
+                        "the fp32 accumulation the reference math assumes)")
+
+    # ---- pallas_call sites -------------------------------------------------
+
+    def _check_pallas_call(self, module: Module, call: ast.Call,
+                           local_fns: Dict[str, ast.AST]
+                           ) -> Iterable[Finding]:
+        grid = keyword_arg(call, "grid")
+        grid_rank: Optional[int] = None
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            grid_rank = len(grid.elts)
+        elif grid is not None:
+            grid_rank = 1
+
+        specs: List[Tuple[ast.Call, bool]] = []   # (BlockSpec call, is_out)
+        in_specs = keyword_arg(call, "in_specs")
+        if isinstance(in_specs, (ast.Tuple, ast.List)):
+            specs += [(e, False) for e in in_specs.elts
+                      if isinstance(e, ast.Call)]
+        out_specs = keyword_arg(call, "out_specs")
+        if isinstance(out_specs, (ast.Tuple, ast.List)):
+            specs += [(e, True) for e in out_specs.elts
+                      if isinstance(e, ast.Call)]
+        elif isinstance(out_specs, ast.Call):
+            specs.append((out_specs, True))
+
+        out_shape = None
+        os = keyword_arg(call, "out_shape")
+        if isinstance(os, ast.Call) and (call_name(os) or "") \
+                .endswith("ShapeDtypeStruct") and os.args:
+            out_shape = _literal_int_tuple(os.args[0])
+
+        footprint = 0
+        resolvable = bool(specs)
+        for spec, is_out in specs:
+            cname = call_name(spec) or ""
+            if not cname.split(".")[-1] == "BlockSpec":
+                resolvable = False
+                continue
+            block = _literal_int_tuple(spec.args[0]) if spec.args else None
+            index_map = spec.args[1] if len(spec.args) > 1 \
+                else keyword_arg(spec, "index_map")
+            if isinstance(index_map, ast.Name):
+                index_map = local_fns.get(index_map.id)
+            if index_map is not None and grid_rank is not None:
+                arity = _fn_arity(index_map)
+                if arity is not None and arity != grid_rank:
+                    yield self.finding(
+                        module, spec, "pallas-index-map-arity",
+                        f"index map takes {arity} argument(s) but the grid "
+                        f"has {grid_rank} dimension(s) — the map cannot "
+                        "cover the grid")
+            if index_map is not None and block is not None:
+                rank = _fn_return_tuple_len(index_map)
+                if rank is not None and rank != len(block):
+                    yield self.finding(
+                        module, spec, "pallas-index-map-rank",
+                        f"index map returns a rank-{rank} block index for "
+                        f"a rank-{len(block)} block shape")
+            if block is None or any(b is None for b in block):
+                resolvable = False
+            else:
+                footprint += 4 * math.prod(block)
+            if is_out and block is not None and out_shape is not None \
+                    and len(block) == len(out_shape):
+                for dim, (b, s) in enumerate(zip(block, out_shape)):
+                    if b and s and s % b:
+                        yield self.finding(
+                            module, spec, "pallas-block-divide",
+                            f"out block dim {dim} is {b} but the operand "
+                            f"dim is {s} ({s} % {b} != 0) — pad the "
+                            "operand or pick a dividing block")
+
+        scratch = keyword_arg(call, "scratch_shapes")
+        if isinstance(scratch, (ast.Tuple, ast.List)):
+            for e in scratch.elts:
+                shape = _literal_int_tuple(e.args[0]) \
+                    if isinstance(e, ast.Call) and e.args else None
+                if shape is None or any(s is None for s in shape):
+                    resolvable = False
+                else:
+                    footprint += 4 * math.prod(shape)
+        if resolvable and footprint > VMEM_BUDGET_BYTES:
+            yield self.finding(
+                module, call, "pallas-vmem-budget",
+                f"per-step block footprint ≈ {footprint / 2 ** 20:.1f} MiB "
+                f"exceeds the {VMEM_BUDGET_BYTES // 2 ** 20} MiB per-core "
+                "VMEM budget — shrink the block shapes")

@@ -1,0 +1,191 @@
+"""custom-VJP contract checker.
+
+For every ``jax.custom_vjp`` primal in a module:
+
+  * a ``primal.defvjp(fwd, bwd)`` registration must exist;
+  * ``fwd`` must accept the primal's full signature and return a
+    ``(output, residuals)`` 2-tuple;
+  * ``bwd`` must accept ``len(nondiff_argnums) + 2`` parameters (the
+    threaded nondiff args, the residuals, the cotangent) and return a tuple
+    with one cotangent per *differentiable* primal argument;
+  * ``nondiff_argnums`` indices must be valid positions of the primal.
+
+Arity is checked only when it is statically decidable (no ``*args``, tuple
+returns visible in the source). The float0/None cotangent discipline for
+integer/state primals is a runtime property — ``repro.lint.jaxprs``
+provides ``integer_cotangent_violations`` for that (used in tests).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.lint.core import (Finding, LintContext, LintPass, Module,
+                             call_name, dotted_name, keyword_arg)
+
+_CUSTOM_VJP = {"jax.custom_vjp", "custom_vjp"}
+
+
+def _custom_vjp_decorator(dec: ast.expr) -> Optional[Tuple[bool, list]]:
+    """(is_custom_vjp, nondiff_argnums literal list or None)."""
+    if dotted_name(dec) in _CUSTOM_VJP:
+        return True, []
+    if isinstance(dec, ast.Call):
+        name = call_name(dec)
+        if name in _CUSTOM_VJP:
+            return True, _nondiff_from(dec)
+        if name in ("functools.partial", "partial") and dec.args \
+                and dotted_name(dec.args[0]) in _CUSTOM_VJP:
+            return True, _nondiff_from(dec)
+    return None
+
+
+def _nondiff_from(call: ast.Call) -> Optional[list]:
+    kw = keyword_arg(call, "nondiff_argnums")
+    if kw is None:
+        return []
+    if isinstance(kw, (ast.Tuple, ast.List)) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, int)
+            for e in kw.elts):
+        return [e.value for e in kw.elts]
+    if isinstance(kw, ast.Constant) and isinstance(kw.value, int):
+        return [kw.value]
+    return None   # not statically known
+
+
+def _n_params(fn) -> Optional[int]:
+    if fn.args.vararg or fn.args.kwarg:
+        return None
+    return len(fn.args.posonlyargs) + len(fn.args.args) \
+        + len(fn.args.kwonlyargs)
+
+
+def _tuple_returns(fn) -> List[Tuple[ast.Return, int]]:
+    """(return node, tuple length) for every visible tuple return in ``fn``
+    (not descending into nested defs)."""
+    out = []
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Tuple):
+            out.append((node, len(node.value.elts)))
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+class CustomVjpPass(LintPass):
+    name = "custom-vjp"
+    rules = {
+        "vjp-missing-defvjp":
+            "jax.custom_vjp primal without a defvjp(fwd, bwd) registration",
+        "vjp-fwd-arity":
+            "custom_vjp fwd signature does not match the primal's",
+        "vjp-fwd-pair":
+            "custom_vjp fwd must return an (output, residuals) 2-tuple",
+        "vjp-bwd-arity":
+            "custom_vjp bwd parameter count != len(nondiff_argnums) + 2 "
+            "(nondiff args are threaded before residuals and cotangent)",
+        "vjp-bwd-return-arity":
+            "custom_vjp bwd must return one cotangent per differentiable "
+            "primal argument",
+        "vjp-nondiff-range":
+            "nondiff_argnums index out of the primal's parameter range",
+    }
+
+    def check(self, module: Module, ctx: LintContext) -> Iterable[Finding]:
+        tree = module.tree
+        defs: Dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name not in defs:
+                defs[node.name] = node
+
+        primals: Dict[str, Tuple[ast.FunctionDef, Optional[list]]] = {}
+        for fn in defs.values():
+            for dec in fn.decorator_list:
+                info = _custom_vjp_decorator(dec)
+                if info:
+                    primals[fn.name] = (fn, info[1])
+        # primal = jax.custom_vjp(f, nondiff_argnums=...) form
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and call_name(node.value) in _CUSTOM_VJP \
+                    and node.value.args \
+                    and isinstance(node.value.args[0], ast.Name):
+                inner = defs.get(node.value.args[0].id)
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and inner is not None:
+                        primals[t.id] = (inner, _nondiff_from(node.value))
+
+        registrations: Dict[str, Tuple[ast.Call, Optional[str],
+                                       Optional[str]]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "defvjp" \
+                    and isinstance(node.func.value, ast.Name):
+                fwd = node.args[0].id if node.args \
+                    and isinstance(node.args[0], ast.Name) else None
+                bwd = node.args[1].id if len(node.args) > 1 \
+                    and isinstance(node.args[1], ast.Name) else None
+                registrations[node.func.value.id] = (node, fwd, bwd)
+
+        for pname, (primal, nondiff) in primals.items():
+            reg = registrations.get(pname)
+            if reg is None:
+                yield self.finding(
+                    module, primal, "vjp-missing-defvjp",
+                    f"custom_vjp primal {pname!r} has no "
+                    f"{pname}.defvjp(fwd, bwd) in this module — "
+                    "differentiating it raises at trace time")
+                continue
+            n_primal = _n_params(primal)
+            if nondiff is not None and n_primal is not None:
+                for idx in nondiff:
+                    if not (0 <= idx < n_primal):
+                        yield self.finding(
+                            module, primal, "vjp-nondiff-range",
+                            f"nondiff_argnums index {idx} is out of range "
+                            f"for {pname!r} ({n_primal} parameters)")
+            reg_call, fwd_name, bwd_name = reg
+            fwd = defs.get(fwd_name) if fwd_name else None
+            bwd = defs.get(bwd_name) if bwd_name else None
+            if fwd is not None and n_primal is not None:
+                n_fwd = _n_params(fwd)
+                if n_fwd is not None and n_fwd != n_primal:
+                    yield self.finding(
+                        module, fwd, "vjp-fwd-arity",
+                        f"{fwd_name!r} takes {n_fwd} parameters but the "
+                        f"primal {pname!r} takes {n_primal} — custom_vjp "
+                        "calls fwd with the primal's full argument list")
+                for ret, n in _tuple_returns(fwd):
+                    if n != 2:
+                        yield self.finding(
+                            module, ret, "vjp-fwd-pair",
+                            f"{fwd_name!r} returns a {n}-tuple; custom_vjp "
+                            "fwd must return (output, residuals)")
+            if bwd is not None and nondiff is not None:
+                expected = len(nondiff) + 2
+                n_bwd = _n_params(bwd)
+                if n_bwd is not None and n_bwd != expected:
+                    yield self.finding(
+                        module, bwd, "vjp-bwd-arity",
+                        f"{bwd_name!r} takes {n_bwd} parameters; with "
+                        f"nondiff_argnums={tuple(nondiff)} it must take "
+                        f"{expected} (nondiff args, residuals, cotangent)")
+                if n_primal is not None:
+                    want = n_primal - len(nondiff)
+                    for ret, n in _tuple_returns(bwd):
+                        if n != want:
+                            yield self.finding(
+                                module, ret, "vjp-bwd-return-arity",
+                                f"{bwd_name!r} returns {n} cotangents but "
+                                f"the primal {pname!r} has {want} "
+                                f"differentiable arguments "
+                                f"({n_primal} params minus "
+                                f"{len(nondiff)} nondiff)")

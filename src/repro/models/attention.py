@@ -22,7 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init
+from repro.models.layers import dense_init, row
 from repro.models.rope import apply_rope, rope_angles
 from repro.sharding import shard, shard_residual
 
@@ -57,7 +57,9 @@ def _project(p, x, cfg, angles):
     k = x @ p["wk"]
     v = x @ p["wv"]
     if "wq_b" in p:
-        q, k, v = q + p["wq_b"], k + p["wk_b"], v + p["wv_b"]
+        q = q + row(p["wq_b"], q.ndim)
+        k = k + row(p["wk_b"], k.ndim)
+        v = v + row(p["wv_b"], v.ndim)
     q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
     k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
     v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
@@ -249,5 +251,5 @@ def apply_attention(p, x, cfg, positions, *, mode: str = "train",
 
     y = out.reshape(B, S, cfg.q_dim) @ p["wo"]
     if "wo_b" in p:
-        y = y + p["wo_b"]
+        y = y + row(p["wo_b"], y.ndim)
     return shard_residual(y), new_cache

@@ -36,16 +36,24 @@ def norm_init(d: int, norm_type: str, dtype):
     return p
 
 
+def row(v, ndim):
+    """Explicitly lift a (d,) parameter to rank ``ndim`` for broadcasting
+    (the repo runs with jax_numpy_rank_promotion='raise' under test)."""
+    return v.reshape((1,) * (ndim - 1) + v.shape)
+
+
 def apply_norm(p, x, norm_type: str, eps: float):
     xf = x.astype(jnp.float32)
     if norm_type == "rmsnorm":
         var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        y = xf * jax.lax.rsqrt(var + eps) \
+            * row(p["scale"].astype(jnp.float32), xf.ndim)
     elif norm_type == "layernorm":
         mu = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.var(xf, axis=-1, keepdims=True)
         y = (xf - mu) * jax.lax.rsqrt(var + eps)
-        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        y = y * row(p["scale"].astype(jnp.float32), xf.ndim) \
+            + row(p["bias"].astype(jnp.float32), xf.ndim)
     else:
         raise ValueError(norm_type)
     return y.astype(x.dtype)
@@ -79,10 +87,10 @@ def apply_mlp(p, x, mlp_type: str):
     else:
         h = x @ p["w_up"]
         if "w_up_b" in p:
-            h = h + p["w_up_b"]
+            h = h + row(p["w_up_b"], h.ndim)
         h = jax.nn.gelu(h, approximate=True)
     h = shard(h, ("pod", "data"), None, "model")
     y = h @ p["w_down"]
     if "w_down_b" in p:
-        y = y + p["w_down_b"]
+        y = y + row(p["w_down_b"], y.ndim)
     return shard_residual(y) if y.ndim == 3 else y

@@ -28,6 +28,7 @@ from repro.core.compressors import (CutCompressor, CutState, PQCompressor,
                                     compress_with_correction_carry)
 from repro.core.correction import quantize_with_correction_stats
 from repro.core.quantizer import PQConfig
+from repro.models.layers import row
 
 Params = Dict[str, Any]
 
@@ -151,19 +152,19 @@ class FemnistCNN:
         x = batch["image"]  # (B, 28, 28, 1)
         x = jax.lax.conv_general_dilated(
             x, cp["conv1_w"], (1, 1), "VALID",
-            dimension_numbers=("NHWC", "HWIO", "NHWC")) + cp["conv1_b"]
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + row(cp["conv1_b"], 4)
         x = jax.nn.relu(x)
         x = jax.lax.conv_general_dilated(
             x, cp["conv2_w"], (1, 1), "VALID",
-            dimension_numbers=("NHWC", "HWIO", "NHWC")) + cp["conv2_b"]
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + row(cp["conv2_b"], 4)
         x = jax.nn.relu(x)
         x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                   (1, 2, 2, 1), "VALID")
         return x.reshape(x.shape[0], -1)  # (B, 9216)
 
     def server_logits(self, sp: Params, acts) -> jax.Array:
-        h = jax.nn.relu(acts @ sp["dense1_w"] + sp["dense1_b"])
-        return h @ sp["dense2_w"] + sp["dense2_b"]
+        h = jax.nn.relu(acts @ sp["dense1_w"] + row(sp["dense1_b"], 2))
+        return h @ sp["dense2_w"] + row(sp["dense2_b"], 2)
 
     def loss(self, params: Params, batch, *, quantize: bool = True,
              lam_override=None, key=None, cut_state=None):
@@ -209,10 +210,10 @@ class SOTagMLP:
         }
 
     def client_forward(self, cp, batch):
-        return jax.nn.relu(batch["bow"] @ cp["dense1_w"] + cp["dense1_b"])
+        return jax.nn.relu(batch["bow"] @ cp["dense1_w"] + row(cp["dense1_b"], 2))
 
     def server_logits(self, sp, acts):
-        return acts @ sp["dense2_w"] + sp["dense2_b"]
+        return acts @ sp["dense2_w"] + row(sp["dense2_b"], acts.ndim)
 
     def loss(self, params, batch, *, quantize: bool = True,
              lam_override=None, key=None, cut_state=None):
@@ -275,7 +276,7 @@ class SONwpLSTM:
 
         def step(carry, xt):
             h, c = carry
-            z = xt @ cp["lstm_wx"] + h @ cp["lstm_wh"] + cp["lstm_b"]
+            z = xt @ cp["lstm_wx"] + h @ cp["lstm_wh"] + row(cp["lstm_b"], 2)
             i, f, g_, o = jnp.split(z, 4, axis=-1)
             c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g_)
             h = jax.nn.sigmoid(o) * jnp.tanh(c)
@@ -284,10 +285,10 @@ class SONwpLSTM:
         (h, c), hs = jax.lax.scan(step, (jnp.zeros((B, Hn)), jnp.zeros((B, Hn))),
                                   jnp.swapaxes(x, 0, 1))
         hs = jnp.swapaxes(hs, 0, 1)  # (B, S, H)
-        return hs @ cp["dense1_w"] + cp["dense1_b"]  # (B, S, 96)
+        return hs @ cp["dense1_w"] + row(cp["dense1_b"], 3)  # (B, S, 96)
 
     def server_logits(self, sp, acts):
-        return acts @ sp["dense2_w"] + sp["dense2_b"]
+        return acts @ sp["dense2_w"] + row(sp["dense2_b"], acts.ndim)
 
     def loss(self, params, batch, *, quantize: bool = True,
              lam_override=None, key=None, cut_state=None):

@@ -17,7 +17,10 @@ def _angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
     """positions: (..., S) -> angles (..., S, head_dim//2)."""
     half = head_dim // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
-    return positions[..., None].astype(jnp.float32) * freqs
+    # explicit rank lift: (..., S, 1) * (1, ..., 1, half) — rank promotion is
+    # an error under test
+    return positions[..., None].astype(jnp.float32) \
+        * freqs.reshape((1,) * positions.ndim + (half,))
 
 
 def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,

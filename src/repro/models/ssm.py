@@ -59,8 +59,8 @@ def _causal_conv(x, w, b):
     W = w.shape[0]
     pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
     S = x.shape[1]
-    y = sum(pad[:, i:i + S] * w[i] for i in range(W))
-    return y + b
+    y = sum(pad[:, i:i + S] * w[i][None, None, :] for i in range(W))
+    return y + b[None, None, :]
 
 
 def _project_in(p, x):
@@ -106,7 +106,7 @@ def ssd_scan(xh, dt, A, Bm, Cm, chunk: int,
 
     @jax.checkpoint
     def chunk_stats(x_c, dt_c, B_c, C_c):
-        dA_c = dt_c * A                                 # (B,Cs,H), <= 0
+        dA_c = dt_c * A[None, None, :]                  # (B,Cs,H), <= 0
         xdt_c = x_c * dt_c[..., None]                   # (B,Cs,H,P)
         # intra-chunk (quadratic within chunk)
         L = _segsum_decay(dA_c)                         # (B,H,Cs,Cs)
@@ -160,7 +160,7 @@ def apply_ssm(p, x, cfg, *, mode: str = "train", cache=None):
         """Depthwise causal conv on one aligned stream; returns (y, state)."""
         if mode == "decode":
             window = jnp.concatenate([cache[cache_key], stream], axis=1)
-            y = (jnp.einsum("bwc,wc->bc", window, w) + b)[:, None]
+            y = (jnp.einsum("bwc,wc->bc", window, w) + b[None, :])[:, None]
             return y, window[:, 1:]
         conv_in = stream
         if cache is not None:  # continue from conv tail
@@ -190,13 +190,14 @@ def apply_ssm(p, x, cfg, *, mode: str = "train", cache=None):
     # shared across heads and stay replicated.
     xs = shard(xs, ("pod", "data"), None, "model", None)
 
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                     + p["dt_bias"][None, None, :])             # (B,S,H)
     A = -jnp.exp(p["A_log"])                                          # (H,)
 
     new_cache = cache
     if mode == "decode":
         h_prev = cache["h"]
-        dA = jnp.exp(dt[:, 0] * A)                                    # (B,H) f32
+        dA = jnp.exp(dt[:, 0] * A[None, :])                           # (B,H) f32
         upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0], dt[:, 0],
                          xs[:, 0])                                    # (B,H,P,N)
         # keep the recurrent state in its cache dtype (scan carry typing)

@@ -1,0 +1,36 @@
+"""Seeded host-sync/retrace violations (SEED markers give the expected
+rule and line). Never imported — parsed by tests/test_lint.py only."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def leaky_step(p, b):
+    m = float(jnp.mean(p))  # SEED: host-sync-in-jit
+    return p - m * b
+
+
+def train(params, batches):
+    @jax.jit
+    def inner(p, b):  # SEED: jit-closure-rebuild
+        return p - jnp.mean(b)
+
+    for b in batches:
+        params = inner(params, b)
+        loss = float(params)  # SEED: host-sync-in-loop
+    return params, loss
+
+
+def submit_all(scheduler, results):
+    def on_done(update):
+        results.append(update.block_until_ready())  # SEED: host-sync-in-callback
+
+    scheduler.run(execute=on_done)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "typo_param"))  # SEED: jit-static-args
+def run(x, mode):
+    del mode
+    return x

@@ -1,0 +1,32 @@
+"""Clean counterpart to host_sync_bad.py: zero findings expected."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(p, b):
+    return p - 0.1 * jnp.mean(b)
+
+
+def make_step():
+    @jax.jit
+    def inner(p, b):
+        return p - jnp.mean(b)
+    return inner
+
+
+def train(params, batches):
+    inner = make_step()
+    losses = []
+    for b in batches:
+        params = inner(params, b)
+        losses.append(params)
+    return params, jax.device_get(losses)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def run(x, mode):
+    del mode
+    return x

@@ -1,0 +1,9 @@
+"""One seeded violation, suppressed in-line: zero findings expected."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def leaky_step(p, b):
+    m = float(jnp.mean(p))  # fedlint: disable=host-sync-in-jit
+    return p - m * b

@@ -1,0 +1,22 @@
+"""Seeded mesh-axis violations (SEED markers give the expected rule
+and line). Never imported — parsed by tests/test_lint.py only."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+CLIENTS_AXIS = "clients"
+
+
+def build_mesh():
+    return jax.make_mesh((4, 2), ("data", "model"))
+
+
+def all_reduce(x):
+    return jax.lax.psum(x, "clientz")  # SEED: mesh-axis-undeclared
+
+
+def client_reduce(x):
+    return jax.lax.psum(x, CLIENTS_AXIS)
+
+
+BAD_SPEC = P("data", "modell")  # SEED: mesh-axis-undeclared
+GOOD_SPEC = P("data", None, "model")

@@ -1,0 +1,20 @@
+"""Clean counterpart to mesh_bad.py: zero findings expected."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+CLIENTS_AXIS = "clients"
+
+
+def build_mesh():
+    return jax.make_mesh((4, 2), ("data", "model"))
+
+
+def all_reduce(x):
+    return jax.lax.psum(x, "data")
+
+
+def client_reduce(x):
+    return jax.lax.psum(x, CLIENTS_AXIS)
+
+
+SPEC = P("data", None, "model")

@@ -1,0 +1,49 @@
+"""Seeded Pallas kernel violations (SEED markers give the expected rule
+and line). Never imported — parsed by tests/test_lint.py only."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...])  # SEED: pallas-accum-dtype
+
+
+def outer_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] @ y_ref[...]  # SEED: pallas-accum-dtype
+
+
+def copy_kernel(a_ref, o_ref):
+    o_ref[...] = a_ref[...] * 2.0
+
+
+def bad_blocks(a, b):
+    return pl.pallas_call(
+        matmul_kernel,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((128, 128), lambda i: (i, 0)),  # SEED: pallas-index-map-arity
+            pl.BlockSpec((128,), lambda i, j: (i, j)),  # SEED: pallas-index-map-rank
+        ],
+        out_specs=pl.BlockSpec((100, 128), lambda i, j: (i, j)),  # SEED: pallas-block-divide
+        out_shape=jax.ShapeDtypeStruct((512, 512), jnp.float32),
+    )(a, b)
+
+
+def hot_blocks(a):
+    return pl.pallas_call(  # SEED: pallas-vmem-budget
+        copy_kernel,
+        grid=(8,),
+        in_specs=[pl.BlockSpec((2048, 2048), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2048, 2048), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((16384, 2048), jnp.float32),
+    )(a)
+
+
+def run_interpreted(x, interpret=True):  # SEED: pallas-interpret-hardcoded
+    del interpret
+    return x
+
+
+def call_interpreted(x):
+    return run_interpreted(x, interpret=True)  # SEED: pallas-interpret-hardcoded

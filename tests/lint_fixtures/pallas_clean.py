@@ -1,0 +1,29 @@
+"""Clean counterpart to pallas_bad.py: zero findings expected."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def tiled_matmul(a, b):
+    return pl.pallas_call(
+        matmul_kernel,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((128, 128), lambda i, j: (i, 0)),
+            pl.BlockSpec((128, 128), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((512, 512), jnp.float32),
+    )(a, b)
+
+
+def run(x, interpret=None):
+    del interpret
+    return x

@@ -1,0 +1,45 @@
+"""Seeded custom-VJP contract violations (SEED markers give the expected
+rule and line). Never imported — parsed by tests/test_lint.py only."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def orphan(x, y):  # SEED: vjp-missing-defvjp
+    return x * y
+
+
+@jax.custom_vjp
+def scaled(x, y):
+    return x * y
+
+
+def scaled_fwd(x):  # SEED: vjp-fwd-arity
+    return scaled(x, x), x, x  # SEED: vjp-fwd-pair
+
+
+def scaled_bwd(res, ct, extra):  # SEED: vjp-bwd-arity
+    del extra
+    return (res * ct,)  # SEED: vjp-bwd-return-arity
+
+
+scaled.defvjp(scaled_fwd, scaled_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def clipped(x, lo):  # SEED: vjp-nondiff-range
+    return jnp.clip(x, lo, None)
+
+
+def clipped_fwd(x, lo):
+    return clipped(x, lo), (x, lo)
+
+
+def clipped_bwd(lo, res, ct):
+    del lo, res
+    return (ct,)
+
+
+clipped.defvjp(clipped_fwd, clipped_bwd)

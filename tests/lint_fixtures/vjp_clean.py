@@ -1,0 +1,21 @@
+"""Clean counterpart to vjp_bad.py: zero findings expected."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def leaky_relu(alpha, x):
+    return jnp.where(x > 0, x, alpha * x)
+
+
+def leaky_relu_fwd(alpha, x):
+    return leaky_relu(alpha, x), (x > 0)
+
+
+def leaky_relu_bwd(alpha, mask, ct):
+    return (jnp.where(mask, ct, alpha * ct),)
+
+
+leaky_relu.defvjp(leaky_relu_fwd, leaky_relu_bwd)

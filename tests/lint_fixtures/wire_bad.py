@@ -1,0 +1,30 @@
+# SEED: wire-unknown-kind-guard
+"""Seeded wire-format violations. The unknown-kind-guard finding anchors
+at line 1 (module scope), hence the marker above the docstring. Never
+imported — parsed by tests/test_lint.py only."""
+import struct
+
+_HEADER = struct.Struct("<BBH")
+_VERSION = 1
+
+KIND_DENSE = 0
+KIND_SPARSE = 1  # SEED: wire-kind-no-decoder
+KIND_GHOST = 2  # SEED: wire-kind-no-encoder
+
+
+def encode_dense(payload):  # SEED: wire-version-stale
+    return _HEADER.pack(KIND_DENSE, _VERSION, len(payload)) + payload
+
+
+def encode_sparse(payload):  # SEED: wire-version-stale
+    return _HEADER.pack(KIND_SPARSE, _VERSION, len(payload)) + payload
+
+
+def decode(buf):
+    kind, version, n = _HEADER.unpack_from(buf)
+    del version, n
+    if kind == KIND_DENSE:
+        return buf[_HEADER.size:]
+    if kind == KIND_GHOST:
+        return b""
+    return None

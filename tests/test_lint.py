@@ -1,0 +1,304 @@
+"""fedlint framework + pass tests.
+
+Fixture files live in ``tests/lint_fixtures/`` (non-``test_`` names so
+pytest never collects them; they are parsed, never imported). Each bad
+fixture marks the expected findings with ``# SEED: <rule>`` comments on
+the exact line the finding must anchor to; clean counterparts must lint
+to zero findings. Fixtures are loaded under a ``fixtures/`` pseudo-path
+so test-path-sensitive rules (``pallas-interpret-hardcoded``) behave as
+they do for ``src/``.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.lint import (available_passes, findings_to_json, jaxprs,
+                        rule_catalogue, run_lint, wire_checks)
+from repro.lint.core import (Finding, LintPass, Module, is_test_path,
+                             make_passes, run_passes)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "lint_fixtures"
+
+BAD_FIXTURES = ["host_sync_bad.py", "vjp_bad.py", "mesh_bad.py",
+                "pallas_bad.py", "wire_bad.py"]
+CLEAN_FIXTURES = ["host_sync_clean.py", "vjp_clean.py", "mesh_clean.py",
+                  "pallas_clean.py", "wire_clean.py"]
+
+_SEED_RE = re.compile(r"#\s*SEED:\s*(?P<rules>[a-z0-9,\- ]+)$")
+
+
+def _load(name: str) -> Module:
+    # a fixtures/ pseudo-path so is_test_path() is False, as for src/
+    return Module(f"fixtures/{name}", (FIXTURES / name).read_text())
+
+
+def _seeds(source: str):
+    out = []
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = _SEED_RE.search(line)
+        if m:
+            out.extend((r.strip(), lineno)
+                       for r in m.group("rules").split(","))
+    return sorted(out)
+
+
+@pytest.fixture
+def tmp_manifest(tmp_path, monkeypatch):
+    """Point the wire manifest at a scratch file (empty until pinned)."""
+    path = tmp_path / "wire_manifest.json"
+    monkeypatch.setattr(wire_checks, "MANIFEST_PATH", path)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# seeded violations / clean baselines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", BAD_FIXTURES)
+def test_seeded_violations_found_at_marked_lines(name, tmp_manifest):
+    mod = _load(name)
+    expected = _seeds(mod.source)
+    assert expected, f"{name} has no SEED markers"
+    got = sorted({(f.rule, f.line)
+                  for f in run_passes([mod], make_passes())})
+    assert got == expected
+
+
+@pytest.mark.parametrize("name", CLEAN_FIXTURES)
+def test_clean_fixtures_have_zero_findings(name, tmp_manifest):
+    if name == "wire_clean.py":
+        wire_checks.update_manifest([str(FIXTURES / name)])
+    findings = run_passes([_load(name)], make_passes())
+    assert findings == []
+
+
+def test_every_pass_is_exercised_by_a_fixture(tmp_manifest):
+    hit = set()
+    for name in BAD_FIXTURES:
+        for f in run_passes([_load(name)], make_passes()):
+            hit.add(f.pass_name)
+    assert hit == set(available_passes())
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_line_suppression_silences_the_rule(tmp_manifest):
+    findings = run_passes([_load("host_sync_suppressed.py")], make_passes())
+    assert findings == []
+
+
+def test_without_suppression_the_same_code_is_flagged(tmp_manifest):
+    src = (FIXTURES / "host_sync_suppressed.py").read_text()
+    stripped = src.replace("  # fedlint: disable=host-sync-in-jit", "")
+    assert stripped != src
+    findings = run_passes([Module("fixtures/host_sync_suppressed.py",
+                                  stripped)], make_passes())
+    assert [f.rule for f in findings] == ["host-sync-in-jit"]
+
+
+def test_file_suppression_and_disable_all(tmp_manifest):
+    src = (FIXTURES / "host_sync_suppressed.py").read_text()
+    for comment in ("# fedlint: disable-file=host-sync-in-jit",
+                    "# fedlint: disable-file=all"):
+        body = src.replace("# fedlint: disable=host-sync-in-jit", "") \
+            + f"\n{comment}\n"
+        findings = run_passes([Module("fixtures/x.py", body)], make_passes())
+        assert findings == [], comment
+
+
+# ---------------------------------------------------------------------------
+# framework: registry, findings, JSON schema
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_the_five_passes():
+    assert available_passes() == ("custom-vjp", "host-sync", "mesh-axes",
+                                  "pallas", "wire-format")
+
+
+def test_unknown_pass_selection_fails_loudly():
+    with pytest.raises(ValueError, match="registered"):
+        make_passes(["no-such-pass"])
+
+
+def test_rule_catalogue_covers_every_pass():
+    cat = rule_catalogue()
+    assert set(cat) == set(available_passes())
+    assert all(rules for rules in cat.values())
+
+
+def test_unregistered_rule_emission_is_an_error():
+    class P(LintPass):
+        name = "p"
+        rules = {"known": "desc"}
+    mod = Module("x.py", "pass\n")
+    with pytest.raises(ValueError, match="unregistered"):
+        P().finding(mod, 1, "unknown", "msg")
+
+
+def test_finding_severity_is_validated():
+    with pytest.raises(ValueError):
+        Finding(path="x.py", line=1, rule="r", message="m", severity="fatal")
+
+
+def test_is_test_path():
+    assert is_test_path("tests/test_foo.py")
+    assert is_test_path("pkg/test_bar.py")
+    assert not is_test_path("src/repro/kernels/ops.py")
+
+
+def test_json_schema_is_stable(tmp_manifest):
+    findings = run_passes([_load("vjp_bad.py")], make_passes())
+    doc = json.loads(findings_to_json(findings))
+    assert doc["schema_version"] == 1
+    assert set(doc) == {"schema_version", "findings", "counts", "total"}
+    assert doc["total"] == len(findings) == len(doc["findings"])
+    for entry in doc["findings"]:
+        assert set(entry) == {"path", "line", "rule", "severity", "pass",
+                              "message"}
+    assert sum(doc["counts"].values()) == doc["total"]
+
+
+def test_select_runs_only_that_pass(tmp_manifest):
+    findings = run_passes([_load("vjp_bad.py")], make_passes(["host-sync"]))
+    assert findings == []
+    findings = run_passes([_load("vjp_bad.py")], make_passes(["custom-vjp"]))
+    assert findings and all(f.pass_name == "custom-vjp" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# wire manifest: version-stale detection
+# ---------------------------------------------------------------------------
+
+def test_wire_body_edit_without_version_bump_is_stale(tmp_manifest):
+    src = (FIXTURES / "wire_clean.py").read_text()
+    wire_checks.update_manifest([str(FIXTURES / "wire_clean.py")])
+    edited = src.replace("len(payload)) + payload",
+                         "len(payload) + 1) + payload")
+    assert edited != src
+    findings = run_passes([Module("fixtures/wire_clean.py", edited)],
+                          make_passes(["wire-format"]))
+    stale = [f for f in findings if f.rule == "wire-version-stale"]
+    assert len(stale) == 2
+    assert all("bump the version" in f.message for f in stale)
+
+
+def test_wire_docstring_edit_does_not_change_the_hash(tmp_manifest):
+    src = (FIXTURES / "wire_clean.py").read_text()
+    wire_checks.update_manifest([str(FIXTURES / "wire_clean.py")])
+    edited = src.replace(
+        "def encode_dense(payload):\n",
+        'def encode_dense(payload):\n    """v1 wire header."""\n')
+    assert edited != src
+    findings = run_passes([Module("fixtures/wire_clean.py", edited)],
+                          make_passes(["wire-format"]))
+    assert findings == []
+
+
+def test_repo_wire_manifest_is_current():
+    """The checked-in manifest must match the checked-in encoders — a
+    drifted manifest means someone edited wire.py without refreshing."""
+    findings = run_lint([str(REPO_ROOT / "src" / "repro" / "federated"
+                             / "wire.py")], ["wire-format"])
+    assert findings == [], [f.format() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level helpers
+# ---------------------------------------------------------------------------
+
+def test_collective_axis_names_recurses_into_subjaxprs():
+    def f(x):
+        return jax.jit(lambda y: jax.lax.psum(y, "data"))(x)
+    axes = jaxprs.collective_axis_names(f, jnp.ones(4),
+                                        axis_env=[("data", 2)])
+    assert axes == {"data"}
+
+
+def test_undeclared_collective_axes_clean():
+    def f(x):
+        return x * 2.0
+    assert jaxprs.undeclared_collective_axes(f, ["data"], jnp.ones(3)) \
+        == set()
+
+
+def test_host_callback_primitives_detected():
+    def g(x):
+        jax.debug.print("x = {x}", x=x)
+        return x
+    assert "debug_callback" in jaxprs.host_callback_primitives(g, jnp.ones(3))
+    def h(x):
+        return x + 1.0
+    assert jaxprs.host_callback_primitives(h, jnp.ones(3)) == []
+
+
+def test_integer_cotangents_follow_float0_contract():
+    def good(x, i):
+        return x * 2.0
+    assert jaxprs.integer_cotangent_violations(
+        good, jnp.ones(3), jnp.arange(3)) == []
+
+
+def test_integer_cotangent_check_propagates_bwd_structure_errors():
+    @jax.custom_vjp
+    def broken(x, i):
+        return x
+
+    def broken_fwd(x, i):
+        return broken(x, i), None
+
+    def broken_bwd(res, ct):
+        return (ct,)   # missing the integer primal's cotangent slot
+
+    broken.defvjp(broken_fwd, broken_bwd)
+    with pytest.raises(TypeError):
+        jaxprs.integer_cotangent_violations(broken, jnp.ones(3),
+                                            jnp.arange(3))
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args):
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"))
+    return subprocess.run([sys.executable, "-m", "repro.lint", *args],
+                          capture_output=True, text=True, env=env,
+                          cwd=REPO_ROOT)
+
+
+def test_cli_exit_codes_and_output():
+    bad = str(FIXTURES / "vjp_bad.py")
+    r = _run_cli(bad, "--select", "custom-vjp")
+    assert r.returncode == 1
+    assert "[vjp-missing-defvjp]" in r.stdout
+
+    r = _run_cli(str(FIXTURES / "vjp_clean.py"), "--select", "custom-vjp")
+    assert r.returncode == 0
+
+    r = _run_cli(bad, "--select", "custom-vjp", "--json")
+    assert r.returncode == 1
+    doc = json.loads(r.stdout)
+    assert doc["schema_version"] == 1 and doc["total"] > 0
+
+
+def test_cli_usage_errors():
+    assert _run_cli("no/such/path.py").returncode == 2
+    assert _run_cli("--select", "bogus", ".").returncode == 2
+
+
+def test_cli_list_rules():
+    r = _run_cli("--list-rules")
+    assert r.returncode == 0
+    for pass_name in available_passes():
+        assert pass_name in r.stdout

@@ -22,7 +22,7 @@ def _naive_ssd(xh, dt, A, Bm, Cm):
     h = jnp.zeros((B_, H_, P_, N_))
     ys = []
     for t in range(S_):
-        dA = jnp.exp(dt[:, t] * A)
+        dA = jnp.exp(dt[:, t] * A[None, :])
         h = dA[:, :, None, None] * h + jnp.einsum(
             "bn,bh,bhp->bhpn", Bm[:, t], dt[:, t], xh[:, t])
         ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t], h))

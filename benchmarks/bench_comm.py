@@ -44,7 +44,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.configs.base import get_arch
 from repro.core.compressors import make_compressor
 from repro.core.fedlite import comm_report
@@ -218,6 +218,11 @@ def run(fast: bool = True):
             "head_params_fraction": round(
                 cfg.padded_vocab * cfg.d_model / cfg.param_count(), 3),
         })
+    # serialize before emit() strips the row keys
+    write_bench_json(
+        "comm", rows,
+        note="Table 1 / §5 accounting: analytic bit counts plus measured "
+             "wire payloads (pq, downlink chain, pq-delta codebooks)")
     return rows
 
 

@@ -10,19 +10,13 @@ HBM-traffic models) — so the perf trajectory is tracked across PRs
 
 from __future__ import annotations
 
-import json
-import pathlib
-
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_bench_json
 from repro.core import kmeans as km
 from repro.core.quantizer import PQConfig, quantize
 from repro.kernels import ops, ref
-
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
-    / "BENCH_kernels.json"
 
 
 def bench_encode_backends(rows):
@@ -157,20 +151,6 @@ def bench_scalarq_kernels(rows):
                  "note": "interpret-mode(correctness-only)"})
 
 
-def write_bench_json(rows) -> None:
-    """Persist the kernel rows at the repo root (perf trajectory across
-    PRs; see module docstring)."""
-    payload = {
-        "suite": "kernels",
-        "jax_backend": jax.default_backend(),
-        "note": "off-TPU pallas rows are interpret-mode (correctness, not "
-                "speed); traffic_model rows are analytic bytes",
-        "rows": rows,
-    }
-    BENCH_JSON.write_text(json.dumps(payload, indent=2, sort_keys=False)
-                          + "\n")
-
-
 def run(fast: bool = True):
     rows = []
     shapes = [(4096, 8, 16), (16384, 8, 16)] if fast else \
@@ -224,7 +204,11 @@ def run(fast: bool = True):
     rows.append({"name": f"flash_attention_S{S}_H{H}kv{Kv}",
                  "us_per_call": 0.0, "max_err_vs_rowblock": round(err, 7),
                  "note": "interpret-mode parity; O(S*d) HBM traffic on TPU"})
-    write_bench_json(rows)   # serialize before emit() strips the row keys
+    # serialize before emit() strips the row keys
+    write_bench_json(
+        "kernels", rows,
+        note="off-TPU pallas rows are interpret-mode (correctness, not "
+             "speed); traffic_model rows are analytic bytes")
     return rows
 
 

@@ -42,7 +42,17 @@ Scenario axes (fast mode keeps a 2x3 slice; --full runs the grid):
 
 Emitted per row: simulated seconds, simulated time and uplink bytes to
 reach the target loss (0.9x the round-0 loss), measured uplink AND
-downlink MB/round, stragglers dropped, mean staleness.
+downlink MB/round, stragglers dropped, mean staleness. Every run also
+snapshots the rows as ``BENCH_network.json`` at the repo root
+(``benchmarks/common.write_bench_json``).
+
+``--emit-trace [PATH]`` additionally records the whole run through the
+``repro.obs`` telemetry recorder — scheduler rounds on the virtual-clock
+lane, executor/wire/host spans on the wall-clock lane, per-round byte
+ledgers — writing an append-only JSONL event log (default
+``BENCH_network_trace.jsonl``) plus a Perfetto-loadable trace_event twin
+(``--perfetto PATH`` to relocate it). Summarize the JSONL with
+``python -m repro.obs <path>``.
 """
 
 from __future__ import annotations
@@ -55,7 +65,8 @@ import time
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
+from repro import obs
 from repro.core.quantizer import PQConfig
 from repro.data.synthetic import make_federated_image_data
 from repro.federated import (AsyncBuffer, AutoscalePlan, Deadline,
@@ -186,6 +197,11 @@ def run(fast: bool = True, downlink: bool = False,
     if autoscale:
         rows.extend(run_autoscale_cell(data, fleets, rounds, fast,
                                        executor=executor))
+    # serialize before emit() strips the row keys
+    write_bench_json(
+        "network", rows,
+        note="virtual-clock scheduler cells: measured wire bytes + "
+             "simulated wall-clock per (fleet, policy, compression)")
     return rows
 
 
@@ -413,10 +429,12 @@ def run_autoscale_cell(data, fleets, rounds, fast, executor="stacked"):
 
 
 def main(fast: bool = True, downlink: bool = False,
-         executor: str = "stacked", autoscale: bool = False):
+         executor: str = "stacked", autoscale: bool = False,
+         emit_trace: str = None, perfetto: str = None):
     if executor == "mesh" and len(jax.devices()) < 2 \
             and not os.environ.get("_BENCH_MESH_CHILD"):
-        # re-exec with forced host devices so the mesh cells see a real mesh
+        # re-exec with forced host devices so the mesh cells see a real
+        # mesh (the trace/obs flags ride along through sys.argv)
         env = dict(os.environ)
         env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4 " \
             + env.get("XLA_FLAGS", "")
@@ -426,8 +444,25 @@ def main(fast: bool = True, downlink: bool = False,
              *sys.argv[1:]], env=env,
             cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         ).returncode)
+    if emit_trace:
+        obs.configure(run="bench_network", meta={
+            "suite": "network_tradeoff", "fast": fast, "downlink": downlink,
+            "executor": executor, "autoscale": autoscale,
+            "jax_backend": jax.default_backend()})
     emit(run(fast, downlink=downlink, executor=executor,
              autoscale=autoscale), "network_tradeoff")
+    recorder = obs.shutdown()
+    if emit_trace and recorder is not None:
+        n = recorder.write_jsonl(emit_trace)
+        pf = perfetto or (emit_trace[:-len(".jsonl")] + ".perfetto.json"
+                          if emit_trace.endswith(".jsonl")
+                          else emit_trace + ".perfetto.json")
+        recorder.write_perfetto(pf)
+        # stdout is the CSV channel (and the scaling-leg marker); report
+        # the trace artifacts on stderr
+        print(f"wrote {n} events to {emit_trace}; perfetto trace at {pf}\n"
+              f"inspect with: python -m repro.obs {emit_trace}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":
@@ -442,6 +477,17 @@ if __name__ == "__main__":
                          "mesh adds the shard-scaling cell")
     ap.add_argument("--autoscale", action="store_true",
                     help="run the trace-driven autoscaler cell")
+    ap.add_argument("--emit-trace", nargs="?",
+                    const="BENCH_network_trace.jsonl", default=None,
+                    metavar="PATH",
+                    help="record an obs telemetry trace of the run and "
+                         "write it as JSONL (default "
+                         "BENCH_network_trace.jsonl); a Perfetto-loadable "
+                         "twin is written next to it")
+    ap.add_argument("--perfetto", default=None, metavar="PATH",
+                    help="where to write the Perfetto trace_event JSON "
+                         "(default: the --emit-trace path with .jsonl "
+                         "swapped for .perfetto.json)")
     ap.add_argument("--_scaling-leg", type=int, default=0,
                     dest="scaling_leg", help=argparse.SUPPRESS)
     args = ap.parse_args()
@@ -449,4 +495,5 @@ if __name__ == "__main__":
         _scaling_leg(args.scaling_leg)
     else:
         main(fast=not args.full, downlink=args.downlink,
-             executor=args.executor, autoscale=args.autoscale)
+             executor=args.executor, autoscale=args.autoscale,
+             emit_trace=args.emit_trace, perfetto=args.perfetto)

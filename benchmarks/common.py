@@ -1,11 +1,34 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and the
+``BENCH_<suite>.json`` snapshot format suites persist at the repo root so
+perf/bytes trajectories are comparable across PRs."""
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable, Dict, List
 
 import jax
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def write_bench_json(suite: str, rows: List[Dict], note: str = "") -> pathlib.Path:
+    """Persist ``rows`` as ``BENCH_<suite>.json`` at the repo root.
+
+    Call this BEFORE ``emit`` — emit pops ``name``/``us_per_call`` out of
+    the very same row dicts while printing the CSV.
+    """
+    path = REPO_ROOT / f"BENCH_{suite}.json"
+    payload = {
+        "suite": suite,
+        "jax_backend": jax.default_backend(),
+        "note": note,
+        "rows": rows,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=False) + "\n")
+    return path
 
 
 def time_call(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:

@@ -11,14 +11,18 @@ report. Prints ``name,us_per_call,derived`` CSV rows.
 benchmark on any finding — a typo'd mesh axis or a hardcoded
 ``interpret=True`` should fail before a long benchmark run, not during.
 
-The ``kernels`` suite additionally writes ``BENCH_kernels.json`` at the
-repo root (per-backend Lloyd-update / scalarq / PQ-encode rows + analytic
-HBM-traffic models) so the kernel perf trajectory is tracked across PRs.
+The ``kernels``, ``table1_comm`` and ``network_tradeoff`` suites
+additionally snapshot their rows as ``BENCH_kernels.json`` /
+``BENCH_comm.json`` / ``BENCH_network.json`` at the repo root
+(``benchmarks/common.write_bench_json``) so perf and bytes trajectories
+are tracked across PRs; after the suites finish this harness prints one
+``bench_json/...`` summary row per snapshot it finds.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -27,7 +31,7 @@ from benchmarks import (bench_accuracy_tradeoff, bench_comm,
                         bench_convergence, bench_correction, bench_grouping,
                         bench_kernels, bench_network,
                         bench_quantizer_tradeoff, bench_so_tasks, roofline)
-from benchmarks.common import emit
+from benchmarks.common import REPO_ROOT, emit
 
 SUITES = {
     "fig3_quantizer_tradeoff": bench_quantizer_tradeoff,
@@ -60,6 +64,21 @@ def preflight() -> int:
     return len(findings)
 
 
+def aggregate_bench_json() -> None:
+    """One CSV summary row per ``BENCH_*.json`` snapshot at the repo root
+    (whatever suites — this run's or a previous one's — have written)."""
+    for path in sorted(REPO_ROOT.glob("BENCH_*.json")):
+        try:
+            payload = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"bench_json/{path.name},0.0,ERROR={type(e).__name__}")
+            continue
+        rows = payload.get("rows", [])
+        print(f"bench_json/{path.name},0.0,"
+              f"suite={payload.get('suite')};rows={len(rows)};"
+              f"backend={payload.get('jax_backend')}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -86,6 +105,7 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
             print(f"{name}/_suite_wall,{(time.time() - t0) * 1e6:.0f},"
                   f"ERROR={type(e).__name__}")
+    aggregate_bench_json()
     if failures:
         sys.exit(1)
 

@@ -36,6 +36,17 @@ move (cohort, policy, downlink codec) between segments:
 
     PYTHONPATH=src python examples/femnist_federated_training.py \
         --rounds 100 --fleet mobile --autoscale
+
+Telemetry: ``--emit-trace [PATH]`` records the run through the
+`repro.obs` recorder — scheduler rounds on host AND virtual-clock lanes,
+executor/wire/kmeans spans, the per-round byte ledger — then writes an
+append-only JSONL event log (default ``femnist_trace.jsonl``) plus a
+Perfetto-loadable twin (``--perfetto PATH`` to relocate; load at
+https://ui.perfetto.dev). Summarize with ``python -m repro.obs <jsonl>``:
+
+    PYTHONPATH=src python examples/femnist_federated_training.py \
+        --rounds 100 --fleet lognormal --emit-trace
+    PYTHONPATH=src python -m repro.obs femnist_trace.jsonl --target 2.0
 """
 
 import argparse
@@ -43,6 +54,7 @@ import time
 
 import jax
 
+from repro import obs
 from repro.checkpointing import save_checkpoint
 from repro.core.quantizer import PQConfig
 from repro.core.split import tree_bits
@@ -99,7 +111,22 @@ def main():
                     help="drive the run with the trace-driven autoscaler "
                          "(re-plans cohort/policy/downlink every 8 rounds)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--emit-trace", nargs="?", const="femnist_trace.jsonl",
+                    default=None, metavar="PATH",
+                    help="record obs telemetry (spans on host + virtual "
+                         "lanes, byte ledger) and write it as JSONL; "
+                         "summarize with `python -m repro.obs PATH`")
+    ap.add_argument("--perfetto", default=None, metavar="PATH",
+                    help="Perfetto trace_event JSON output (default: the "
+                         "--emit-trace path with .jsonl swapped for "
+                         ".perfetto.json)")
     args = ap.parse_args()
+
+    if args.emit_trace:
+        obs.configure(run="femnist_example", meta={
+            "rounds": args.rounds, "fleet": args.fleet,
+            "policy": args.policy, "executor": args.executor,
+            "autoscale": args.autoscale, "baseline": args.baseline})
 
     num_clients = 64
     if args.executor == "mesh" and len(jax.devices()) < 2:
@@ -210,6 +237,17 @@ def main():
     if pq:
         print(f"activation compression (phi=32): "
               f"{pq.compression_ratio(args.client_batch, 9216, phi_bits=32):.0f}x")
+    recorder = obs.shutdown()
+    if args.emit_trace and recorder is not None:
+        n = recorder.write_jsonl(args.emit_trace)
+        pf = args.perfetto or (
+            args.emit_trace[:-len(".jsonl")] + ".perfetto.json"
+            if args.emit_trace.endswith(".jsonl")
+            else args.emit_trace + ".perfetto.json")
+        recorder.write_perfetto(pf)
+        print(f"wrote {n} telemetry events to {args.emit_trace}; "
+              f"perfetto trace at {pf}")
+        print(f"inspect with: python -m repro.obs {args.emit_trace}")
 
 
 if __name__ == "__main__":

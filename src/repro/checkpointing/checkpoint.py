@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 _SEP = "/"
 
 
@@ -53,22 +55,24 @@ def _encode(a: np.ndarray):
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
                     extra: Optional[dict] = None) -> str:
-    os.makedirs(ckpt_dir, exist_ok=True)
-    flat = {}
-    host = jax.device_get(_flatten(tree))   # one transfer for the whole tree
-    for k, v in host.items():
-        arr, dtname = _encode(np.asarray(v))
-        flat[k] = arr
-        if dtname:
-            flat[f"__dtype__{k}"] = np.asarray(dtname)
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-    tmp = path + ".tmp.npz"   # .npz suffix so numpy does not append one
-    np.savez_compressed(tmp, **flat)
-    os.replace(tmp, path)
-    if extra is not None:
-        with open(os.path.join(ckpt_dir, f"meta_{step:08d}.json"), "w") as f:
-            json.dump(extra, f)
-    return path
+    with obs.span("checkpoint.save", cat="io", step=step):
+        os.makedirs(ckpt_dir, exist_ok=True)
+        flat = {}
+        host = jax.device_get(_flatten(tree))  # one transfer for whole tree
+        for k, v in host.items():
+            arr, dtname = _encode(np.asarray(v))
+            flat[k] = arr
+            if dtname:
+                flat[f"__dtype__{k}"] = np.asarray(dtname)
+        path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+        tmp = path + ".tmp.npz"  # .npz suffix so numpy does not append one
+        np.savez_compressed(tmp, **flat)
+        os.replace(tmp, path)
+        if extra is not None:
+            meta = os.path.join(ckpt_dir, f"meta_{step:08d}.json")
+            with open(meta, "w") as f:
+                json.dump(extra, f)
+        return path
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -84,21 +88,22 @@ def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-    with np.load(path) as z:
-        dtypes = {k[len("__dtype__"):]: str(z[k]) for k in z.files
-                  if k.startswith("__dtype__")}
-        flat = {}
-        for k in z.files:
-            if k.startswith("__dtype__"):
-                continue
-            a = z[k]
-            if k in dtypes:
-                a = a.view(jnp.dtype(dtypes[k]))
-            flat[k] = jnp.asarray(a)
-    tree = _unflatten(flat)
-    if shardings is not None:
-        tree = jax.tree.map(
-            lambda x, s: jax.device_put(x, s) if s is not None else x,
-            tree, shardings)
-    return tree
+    with obs.span("checkpoint.restore", cat="io", step=step):
+        path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+        with np.load(path) as z:
+            dtypes = {k[len("__dtype__"):]: str(z[k]) for k in z.files
+                      if k.startswith("__dtype__")}
+            flat = {}
+            for k in z.files:
+                if k.startswith("__dtype__"):
+                    continue
+                a = z[k]
+                if k in dtypes:
+                    a = a.view(jnp.dtype(dtypes[k]))
+                flat[k] = jnp.asarray(a)
+        tree = _unflatten(flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else x,
+                tree, shardings)
+        return tree

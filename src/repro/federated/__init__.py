@@ -87,6 +87,38 @@ tests/test_compressors.py); heterogeneous fleets and per-direction codecs
 turn the same trainer into the paper-§5 trade-off harness driven by
 ``benchmarks/bench_network.py`` (``--downlink`` sweeps the gradient codec).
 
+Observability
+-------------
+The whole subsystem is permanently instrumented through `repro.obs` —
+three pillars, all free when no recorder is configured:
+
+  * **Spans on two time lanes.** ``obs.configure(run=...)`` installs a
+    recorder; from then on `Scheduler.run` records every round twice —
+    once on the *host wall-clock* lane (what the process spent, jit
+    dispatch only, never a device sync) and once on the *scheduler
+    virtual-clock* lane (what the simulated fleet spent) — alongside
+    executor place/execute phases, wire encode/decode, Lloyd/kmeans and
+    checkpoint I/O spans. Autoscaler plan moves and straggler policy cuts
+    are instant events on the same log. Export with
+    ``Recorder.write_jsonl`` (append-only JSONL, the durable artifact)
+    and ``Recorder.write_perfetto`` (Chrome trace_event JSON; the two
+    lanes render as two processes at https://ui.perfetto.dev).
+  * **Sync-free in-jit metrics.** Jitted steps return metrics as device
+    arrays through their aux pytrees (``obs.counter`` / ``obs.gauge`` /
+    ``obs.histogram`` are jit-safe helpers); `FederatedTrainer.run` and
+    `run_fedavg` record them into an `obs.MetricsBuffer` — a plain list
+    append per round — and convert everything with ONE ``jax.device_get``
+    at the end of the run. tests/test_obs.py counts transfers to hold
+    instrumented runs to "no more than uninstrumented".
+  * **The byte ledger + run inspector.** Each `RoundRecord` carries a
+    ``ledger`` mapping ``"<direction>/<wire-kind>"`` to measured bytes
+    (``Trace.ledger_totals()`` for whole-run totals), so "how many bytes
+    were pq vs dense" is a first-class query. ``python -m repro.obs
+    <run.jsonl>`` prints round tables, duration percentiles, the ledger
+    and bytes/time-to-target; ``benchmarks/bench_network.py
+    --emit-trace`` and the femnist example's ``--emit-trace`` produce
+    such logs end-to-end.
+
 Static analysis
 ---------------
 This subsystem concentrates the repo's classic silent-failure modes: a
@@ -102,7 +134,11 @@ custom-vjp, mesh-axes, pallas, wire-format; catalogue in the
 ``python -m benchmarks.run --preflight`` runs the identical gate before a
 benchmark spend. Intentional syncs (e.g. the once-per-``log_every``
 trainer log line) carry an inline ``# fedlint: disable=<rule>`` so the
-decision is visible in review. ``wire.py``'s encoder bodies are pinned by
+decision is visible in review. The host-sync pass additionally bans
+hand-rolled ``time.perf_counter()``/``print()`` instrumentation in the
+``repro/federated`` and ``repro/core`` hot paths
+(``raw-timing-in-hot-path``): measurements belong in `repro.obs`
+spans/events so they land in the run's exportable two-lane log. ``wire.py``'s encoder bodies are pinned by
 AST hash in ``repro/lint/wire_manifest.json``: editing an encode body
 without bumping its version literal (and re-running ``python -m
 repro.lint --update-wire-manifest``) is a lint error, so old decoders can

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.federated.scheduler import (AsyncBuffer, Deadline, DropSlowestK,
                                        FullSync)
 from repro.federated.trace import Trace
@@ -237,6 +238,12 @@ def autoscale_run(make_trainer: Callable[[AutoscalePlan, int], Any],
             nxt = controller.recommend(trainer.last_trace, plan)
             if nxt.moved_from(plan):
                 plans.append(nxt)
+                # plan moves are first-class events in the run's event log
+                obs.event("autoscale.plan", cat="autoscale", segment=seg,
+                          rounds_done=done, cohort=nxt.cohort,
+                          policy=nxt.policy,
+                          downlink=nxt.downlink or "model-default",
+                          reason=nxt.reason)
             plan = nxt
     return {
         "state": state,

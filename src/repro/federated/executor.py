@@ -56,6 +56,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.fedlite import (TrainState, make_mesh_step, make_train_step,
                                 make_weighted_step)
 from repro.sharding.ctx import (CLIENTS_AXIS, clients_sharding,
@@ -100,7 +101,9 @@ class CohortExecutor:
 
     def place(self, participants: Sequence[Any]) -> List[Any]:
         """Annotate each `Arrival` with the shard that will execute it."""
-        return [dataclasses.replace(a, shard=0) for a in participants]
+        with obs.span("executor.place", cat="executor", backend=self.name,
+                      clients=len(participants)):
+            return [dataclasses.replace(a, shard=0) for a in participants]
 
     # ---- execution ---------------------------------------------------------
     def execute(self, state: TrainState, parts: Sequence[Dict],
@@ -145,17 +148,23 @@ class StackedExecutor(CohortExecutor):
         return is_async
 
     def execute(self, state, parts, weights=None, cut_state=None):
-        if weights is None:
-            # one definition of the bitwise-critical batch fusing
-            batch = self.trainer.stack_batches(parts)
+        # the span measures host dispatch time (the step is async on
+        # device); blocking for device completion here would add the very
+        # host sync the metrics buffer exists to avoid
+        with obs.span("executor.execute", cat="executor", backend=self.name,
+                      clients=len(parts),
+                      mode="sync" if weights is None else "weighted"):
+            if weights is None:
+                # one definition of the bitwise-critical batch fusing
+                batch = self.trainer.stack_batches(parts)
+                if cut_state is None:
+                    return self._step(state, batch)
+                return self._step(state, batch, cut_state)
+            batches = _stack_parts(parts)
+            w = jnp.asarray(weights, jnp.float32)
             if cut_state is None:
-                return self._step(state, batch)
-            return self._step(state, batch, cut_state)
-        batches = _stack_parts(parts)
-        w = jnp.asarray(weights, jnp.float32)
-        if cut_state is None:
-            return self._weighted_step(state, batches, w)
-        return self._weighted_step(state, batches, w, cut_state)
+                return self._weighted_step(state, batches, w)
+            return self._weighted_step(state, batches, w, cut_state)
 
 
 @dataclasses.dataclass
@@ -203,9 +212,11 @@ class MeshExecutor(CohortExecutor):
                    self.num_shards)
 
     def place(self, participants):
-        local = self._slot_count(len(participants)) // self.num_shards
-        return [dataclasses.replace(a, shard=i // local)
-                for i, a in enumerate(participants)]
+        with obs.span("executor.place", cat="executor", backend=self.name,
+                      clients=len(participants)):
+            local = self._slot_count(len(participants)) // self.num_shards
+            return [dataclasses.replace(a, shard=i // local)
+                    for i, a in enumerate(participants)]
 
     # ---- execution ---------------------------------------------------------
     def _get_step(self, scope: str) -> Callable:
@@ -235,26 +246,32 @@ class MeshExecutor(CohortExecutor):
         n = len(parts)
         slots = self._slot_count(n)
         pad = slots - n
-        w = jnp.asarray(list(weights) if not sync else [1.0] * n,
-                        jnp.float32)
-        w = jnp.concatenate([w, jnp.ones((pad,), jnp.float32)]) if pad else w
-        mask = jnp.concatenate([jnp.ones((n,), jnp.float32),
-                                jnp.zeros((pad,), jnp.float32)]) \
-            if pad else jnp.ones((n,), jnp.float32)
-        sh_clients = clients_sharding(self.mesh)
-        batches = jax.device_put(self._pad(_stack_parts(parts), pad),
-                                 sh_clients)
-        w = jax.device_put(w, sh_clients)
-        mask = jax.device_put(mask, sh_clients)
-        if cut_state is not None:
-            cut_state = jax.device_put(self._pad(cut_state, pad), sh_clients)
-        state = jax.device_put(state, replicated_sharding(self.mesh))
-        step = self._get_step("cohort" if sync else "client")
-        state, metrics = step(state, batches, w, mask, cut_state)
-        if sync:
-            # keep synchronous metrics key-compatible with the stacked path
-            metrics.pop("mean_staleness_weight", None)
-        return state, metrics
+        with obs.span("executor.execute", cat="executor", backend=self.name,
+                      clients=n, slots=slots, shards=self.num_shards,
+                      mode="sync" if sync else "weighted"):
+            w = jnp.asarray(list(weights) if not sync else [1.0] * n,
+                            jnp.float32)
+            w = jnp.concatenate([w, jnp.ones((pad,), jnp.float32)]) \
+                if pad else w
+            mask = jnp.concatenate([jnp.ones((n,), jnp.float32),
+                                    jnp.zeros((pad,), jnp.float32)]) \
+                if pad else jnp.ones((n,), jnp.float32)
+            sh_clients = clients_sharding(self.mesh)
+            batches = jax.device_put(self._pad(_stack_parts(parts), pad),
+                                     sh_clients)
+            w = jax.device_put(w, sh_clients)
+            mask = jax.device_put(mask, sh_clients)
+            if cut_state is not None:
+                cut_state = jax.device_put(self._pad(cut_state, pad),
+                                           sh_clients)
+            state = jax.device_put(state, replicated_sharding(self.mesh))
+            step = self._get_step("cohort" if sync else "client")
+            state, metrics = step(state, batches, w, mask, cut_state)
+            if sync:
+                # keep synchronous metrics key-compatible with the stacked
+                # path
+                metrics.pop("mean_staleness_weight", None)
+            return state, metrics
 
 
 # ---------------------------------------------------------------------------

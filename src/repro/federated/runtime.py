@@ -35,11 +35,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.compressors import (CutCompressor, CutState, NoneCompressor,
                                     PQCompressor, make_compressor)
 from repro.core.fedlite import TrainState
 from repro.core.quantizer import QuantizerState, quantize_stateful
 from repro.data.synthetic import FederatedDataset
+from repro.federated import wire
 from repro.federated.executor import make_executor
 from repro.federated.network import ClientProfile, uniform_fleet, validate_fleet
 from repro.federated.scheduler import (Arrival, AsyncBuffer, FullSync,
@@ -100,8 +102,10 @@ def fedavg_round(model, params, data: FederatedDataset, client_ids,
 
     Returns (new_params, mean local loss). Local updates are plain SGD as in
     McMahan et al. (2017). ``sgd_step`` (from `make_fedavg_step`) lets the
-    round driver reuse one jit cache across rounds; per-step losses stay on
-    device and sync once at the end of the round.
+    round driver reuse one jit cache across rounds. The mean loss is
+    returned as a DEVICE scalar — no host sync per round; the caller
+    batches the transfer (``run_fedavg`` flushes every round's loss through
+    one `obs.MetricsBuffer` transfer at the end of the run).
     """
     batch_kwargs = batch_kwargs or {}
     if sgd_step is None:
@@ -121,7 +125,7 @@ def fedavg_round(model, params, data: FederatedDataset, client_ids,
 
     mean_delta = weighted_average(deltas, weights)
     new_params = jax.tree.map(operator.add, params, mean_delta)
-    return new_params, float(np.mean(jax.device_get(losses)))
+    return new_params, jnp.mean(jnp.stack(losses))
 
 
 def run_fedavg(model, params, data: FederatedDataset, *, rounds: int,
@@ -134,15 +138,15 @@ def run_fedavg(model, params, data: FederatedDataset, *, rounds: int,
     rng = np.random.default_rng(seed)
     weights = data.client_weights if weighted_sampling else None
     sgd_step = make_fedavg_step(model, lr)   # one jit cache for the run
-    losses = []
+    buf = obs.MetricsBuffer()   # device losses; one transfer at end of run
     for r in range(rounds):
         ids = sample_clients(rng, data.num_clients, cohort, weights=weights)
         params, loss = fedavg_round(
             model, params, data, ids, jax.random.fold_in(key, r + 1),
             local_steps=local_steps, batch=batch, lr=lr,
             batch_kwargs=batch_kwargs, sgd_step=sgd_step)
-        losses.append(loss)
-    return params, losses
+        buf.record({"loss": loss})
+    return params, [m["loss"] for m in buf.flush()]
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +291,10 @@ class FederatedTrainer:
         self._ef_memory: Dict[int, Any] = {}              # per-client rows
         self._act_struct = None                           # per-client acts
         self.last_codebook_meta: Dict[str, Any] = {}
+        # (uplink, downlink) wire-kind tags behind the measured payload
+        # bytes; set by measure_round_bytes and fed to the scheduler's
+        # per-round byte ledger (RoundRecord.ledger)
+        self.last_wire_kinds = ("dense", "dense")
         self._rng = np.random.default_rng(self.seed)
         if self.fleet is None:
             self.fleet = uniform_fleet(self.data.num_clients)
@@ -449,33 +457,41 @@ class FederatedTrainer:
         acts2 = acts.reshape(-1, acts.shape[-1])
         raw_bytes = int(acts.size * jnp.dtype(acts.dtype).itemsize)
 
-        def measured(compressor: Optional[CutCompressor]) -> int:
+        def measured(compressor: Optional[CutCompressor]):
             # quantize=False disables the cut codecs in the training VJP
             # (models gate on it), so the measurement must stay dense too
             if not self.quantize or compressor is None \
                     or compressor.name == "none":
-                return raw_bytes
+                return raw_bytes, "dense"
             comp = compressor.compress(acts2)
-            return len(compressor.wire_payload(
-                comp, value_dtype=self.codebook_wire_dtype))
+            payload = compressor.wire_payload(
+                comp, value_dtype=self.codebook_wire_dtype)
+            # the kind tag the receiver will dispatch on — read from the
+            # actual payload header so chains report their outermost stage
+            return len(payload), wire.payload_kind(payload)
 
-        uplink_bytes = measured(self.uplink)
-        downlink_bytes = measured(self.downlink)
-        self.last_codebook_meta = {}
-        if self.codebook_delta_bits is not None and self.quantize:
-            acts_b = self._second_round_acts(state, key)
-            if isinstance(self.uplink, PQCompressor):
-                uplink_bytes = self._measure_delta_direction(
-                    self.uplink.cfg, acts2, acts_b, uplink_bytes, prefix="",
-                    bytes_key="uplink_bytes")
-            if isinstance(self.downlink, PQCompressor):
-                # same machinery, other direction: the gradient message's
-                # codebooks delta-encoded against the previous round's
-                # acked reference (the activation tensor stands in for the
-                # gradient, as for the non-delta downlink measurement)
-                downlink_bytes = self._measure_delta_direction(
-                    self.downlink.cfg, acts2, acts_b, downlink_bytes,
-                    prefix="downlink_", bytes_key="downlink_bytes")
+        with obs.span("trainer.measure_round_bytes", cat="wire"):
+            uplink_bytes, up_kind = measured(self.uplink)
+            downlink_bytes, down_kind = measured(self.downlink)
+            self.last_codebook_meta = {}
+            if self.codebook_delta_bits is not None and self.quantize:
+                acts_b = self._second_round_acts(state, key)
+                if isinstance(self.uplink, PQCompressor):
+                    uplink_bytes = self._measure_delta_direction(
+                        self.uplink.cfg, acts2, acts_b, uplink_bytes,
+                        prefix="", bytes_key="uplink_bytes")
+                    up_kind = "pq-delta"
+                if isinstance(self.downlink, PQCompressor):
+                    # same machinery, other direction: the gradient
+                    # message's codebooks delta-encoded against the
+                    # previous round's acked reference (the activation
+                    # tensor stands in for the gradient, as for the
+                    # non-delta downlink measurement)
+                    downlink_bytes = self._measure_delta_direction(
+                        self.downlink.cfg, acts2, acts_b, downlink_bytes,
+                        prefix="downlink_", bytes_key="downlink_bytes")
+                    down_kind = "pq-delta"
+        self.last_wire_kinds = (up_kind, down_kind)
         return uplink_bytes, downlink_bytes
 
     def _second_round_acts(self, state: TrainState, key: jax.Array):
@@ -497,7 +513,6 @@ class FederatedTrainer:
         fidelity, not the sender's private fp32 copy. Round 1 quantizes
         warm-started from round 0's `QuantizerState` and ships b-bit
         codebook deltas against the reference."""
-        from repro.federated import wire
         qb1, qstate = quantize_stateful(acts2, cfg)
         ref = wire.decode_bytes(
             wire.encode_bytes(qb1, self.codebook_wire_dtype)) \
@@ -555,7 +570,9 @@ class FederatedTrainer:
         """
         state = self.init_state(key) if state is None \
             else jax.tree.map(jnp.copy, state)
-        device_metrics: List[Dict[str, jax.Array]] = []
+        # per-round step metrics stay on device; MetricsBuffer.flush is the
+        # run's single blocking transfer (tests/test_obs.py counts it)
+        metrics_buf = obs.MetricsBuffer()
 
         def execute(update_idx: int, participants: Sequence[Arrival],
                     weights: Sequence[float]) -> Dict:
@@ -583,7 +600,7 @@ class FederatedTrainer:
             self._absorb_cut_state(participants,
                                    metrics.pop("cut_state", None),
                                    stacked=not per_client)
-            device_metrics.append(metrics)
+            metrics_buf.record(metrics)
             if log_every and update_idx % log_every == 0:
                 # the only mid-run host sync, at the caller-chosen cadence
                 logger.info("step %d: loss=%.4f", update_idx,
@@ -600,7 +617,8 @@ class FederatedTrainer:
             steps, sample_cohort=lambda rd: sample_clients(
                 self._rng, self.data.num_clients, self.cohort),
             uplink_bytes=uplink, downlink_bytes=downlink, execute=execute,
-            placement=self.executor.place)
+            placement=self.executor.place,
+            wire_kinds=self.last_wire_kinds)
         dl = self.downlink
         trace.meta.update({
             "uplink_compressor": getattr(self.uplink, "spec",
@@ -614,16 +632,17 @@ class FederatedTrainer:
             "stochastic_downlink": self.stochastic_downlink,
             "executor": self.executor.name,
             "executor_shards": getattr(self.executor, "num_shards", 1),
+            "uplink_wire_kind": self.last_wire_kinds[0],
+            "downlink_wire_kind": self.last_wire_kinds[1],
         })
         trace.meta.update(self.last_codebook_meta)
 
         # one blocking transfer for the whole run
-        host_metrics = jax.device_get(device_metrics)
+        host_metrics = metrics_buf.flush()
         history: List[Dict[str, float]] = []
         it = iter(host_metrics)
         for rec in trace:
-            floats = {k: float(v) for k, v in next(it).items()} \
-                if rec.metrics else {}
+            floats = next(it) if rec.metrics else {}
             rec.metrics = floats
             entry = dict(floats, step=rec.round, t_start=rec.t_start,
                          t_end=rec.t_end, uplink_bytes=rec.uplink_bytes,
@@ -632,4 +651,5 @@ class FederatedTrainer:
                          dropped=len(rec.dropped))
             history.append(entry)
         self.last_trace = trace
+        obs.log_trace(trace)   # no-op unless a recorder is configured
         return state, history

@@ -47,6 +47,7 @@ import numpy as np
 
 logger = logging.getLogger(__name__)
 
+from repro import obs
 from repro.federated.network import ClientProfile
 from repro.federated.trace import RoundRecord, Trace
 
@@ -167,20 +168,26 @@ class Scheduler:
             downlink_bytes: int,
             execute: ExecuteFn,
             placement: Optional[Callable[[Sequence[Arrival]],
-                                         Sequence[Arrival]]] = None) -> Trace:
+                                         Sequence[Arrival]]] = None,
+            wire_kinds: Optional[Tuple[str, str]] = None) -> Trace:
         """Drive ``rounds`` server updates.
 
         ``placement`` (optional) maps each update's surviving participants
         to shard-annotated `Arrival`s just before ``execute`` — the cohort
         executor's ``place`` hook — so the cohort the executor runs and
         the cohort the trace records carry the same device placement.
+
+        ``wire_kinds`` (optional) is the ``(uplink, downlink)`` wire-kind
+        pair behind the per-client payload bytes ("pq", "dense",
+        "sparse", "scalar", "pq-delta"); when given, every `RoundRecord`
+        carries a ``ledger`` of per-direction, per-kind byte totals.
         """
         place = placement or (lambda parts: list(parts))
         if isinstance(self.policy, AsyncBuffer):
             return self._run_async(rounds, sample_cohort, uplink_bytes,
-                                   downlink_bytes, execute, place)
+                                   downlink_bytes, execute, place, wire_kinds)
         return self._run_sync(rounds, sample_cohort, uplink_bytes,
-                              downlink_bytes, execute, place)
+                              downlink_bytes, execute, place, wire_kinds)
 
     # ---- shared -----------------------------------------------------------
     def _round_trip(self, p: ClientProfile, uplink_bytes: int,
@@ -189,32 +196,50 @@ class Scheduler:
                 + p.compute_seconds(self.client_step_seconds)
                 + p.uplink_seconds(uplink_bytes))
 
+    @staticmethod
+    def _ledger(wire_kinds: Optional[Tuple[str, str]],
+                uplink_total: int, downlink_total: int) -> Dict[str, int]:
+        if wire_kinds is None:
+            return {}
+        up_kind, down_kind = wire_kinds
+        return {f"uplink/{up_kind}": uplink_total,
+                f"downlink/{down_kind}": downlink_total}
+
     # ---- synchronous policies ---------------------------------------------
     def _run_sync(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
-                  execute, place) -> Trace:
+                  execute, place, wire_kinds=None) -> Trace:
         rng = np.random.default_rng(self.seed)
         trace = Trace()
         t = 0.0
         for rd in range(rounds):
-            ids = [int(c) for c in sample_cohort(rd)]
-            dropouts: List[int] = []
-            heap: List[Tuple[float, int, int]] = []
-            for seq, cid in enumerate(ids):
-                p = self.fleet[cid]
-                if rng.random() < p.dropout_prob:
-                    dropouts.append(cid)
-                    continue
-                dt = self._round_trip(p, uplink_bytes, downlink_bytes)
-                heapq.heappush(heap, (t + dt, seq, cid))
-            arrivals: List[Arrival] = []
-            while heap:
-                t_arr, _, cid = heapq.heappop(heap)
-                arrivals.append(Arrival(cid, rd, t_arr))
-            survivors, cut, t_end = self.policy.split(arrivals, t)
-            t_end += self.server_step_seconds
-            survivors = place(survivors)
-            metrics = execute(rd, survivors, [1.0] * len(survivors)) \
-                if survivors else {}
+            with obs.span("scheduler.round", cat="scheduler", round=rd):
+                ids = [int(c) for c in sample_cohort(rd)]
+                dropouts: List[int] = []
+                heap: List[Tuple[float, int, int]] = []
+                for seq, cid in enumerate(ids):
+                    p = self.fleet[cid]
+                    if rng.random() < p.dropout_prob:
+                        dropouts.append(cid)
+                        continue
+                    dt = self._round_trip(p, uplink_bytes, downlink_bytes)
+                    heapq.heappush(heap, (t + dt, seq, cid))
+                arrivals: List[Arrival] = []
+                while heap:
+                    t_arr, _, cid = heapq.heappop(heap)
+                    arrivals.append(Arrival(cid, rd, t_arr))
+                survivors, cut, t_end = self.policy.split(arrivals, t)
+                t_end += self.server_step_seconds
+                survivors = place(survivors)
+                metrics = execute(rd, survivors, [1.0] * len(survivors)) \
+                    if survivors else {}
+            obs.virtual_span("scheduler.round", t, t_end, round=rd,
+                             participants=len(survivors),
+                             dropped=len(dropouts) + len(cut))
+            if cut:
+                obs.event("policy.cut", cat="scheduler", lane="virtual",
+                          t=t_end, round=rd,
+                          policy=getattr(self.policy, "name", "?"),
+                          cut=[a.client for a in cut])
             trace.append(RoundRecord(
                 round=rd, t_start=t, t_end=t_end,
                 participants=tuple(a.client for a in survivors),
@@ -224,13 +249,16 @@ class Scheduler:
                 downlink_bytes=len(ids) * downlink_bytes,
                 staleness=(0,) * len(survivors),
                 shards=tuple(a.shard for a in survivors),
-                metrics=metrics))
+                metrics=metrics,
+                ledger=self._ledger(wire_kinds,
+                                    len(arrivals) * uplink_bytes,
+                                    len(ids) * downlink_bytes)))
             t = t_end
         return trace
 
     # ---- async buffer ------------------------------------------------------
     def _run_async(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
-                   execute, place) -> Trace:
+                   execute, place, wire_kinds=None) -> Trace:
         """FedBuff loop: the initial cohort sets the concurrency; every
         completed (or dropped) slot is refilled with the next client from a
         fresh-cohort stream, so the whole population keeps rotating through
@@ -294,7 +322,12 @@ class Scheduler:
                 staleness = [version - a.version for a in buffer]
                 weights = [policy.staleness_weight(s) for s in staleness]
                 buffer = place(buffer)
-                metrics = execute(updates, buffer, weights)
+                with obs.span("scheduler.flush", cat="scheduler",
+                              update=updates, buffered=len(buffer)):
+                    metrics = execute(updates, buffer, weights)
+                obs.virtual_span("scheduler.flush", t_round_start, t_end,
+                                 update=updates, buffered=len(buffer),
+                                 staleness_max=max(staleness))
                 version += 1
                 dispatch(next_client(), t_arr, version)  # slot sees new model
                 dispatches += 1
@@ -306,7 +339,10 @@ class Scheduler:
                     downlink_bytes=dispatches * downlink_bytes,
                     staleness=tuple(staleness),
                     shards=tuple(a.shard for a in buffer),
-                    metrics=metrics))
+                    metrics=metrics,
+                    ledger=self._ledger(wire_kinds,
+                                        len(buffer) * uplink_bytes,
+                                        dispatches * downlink_bytes)))
                 buffer, dropped_accum, dispatches = [], [], 0
                 t_round_start = t_end
                 updates += 1

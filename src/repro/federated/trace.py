@@ -31,6 +31,10 @@ class RoundRecord:
     staleness: Tuple[int, ...] = ()  # per-participant model-version lag (async)
     shards: Tuple[int, ...] = ()     # per-participant executor shard placement
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # the byte ledger: "<direction>/<wire-kind>" -> bytes this round, e.g.
+    # {"uplink/pq": 81920, "downlink/dense": 262144}; empty when the caller
+    # did not tell the scheduler which wire kinds crossed (legacy callers)
+    ledger: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def duration(self) -> float:
@@ -82,6 +86,14 @@ class Trace:
     def mean_staleness(self) -> float:
         s = [x for r in self.records for x in r.staleness]
         return sum(s) / len(s) if s else 0.0
+
+    def ledger_totals(self) -> Dict[str, int]:
+        """Whole-run byte totals per "<direction>/<wire-kind>" ledger key."""
+        out: Dict[str, int] = {}
+        for r in self.records:
+            for k, v in r.ledger.items():
+                out[k] = out.get(k, 0) + v
+        return out
 
     # ---- windowed observations (consumed by federated/autoscale.py) -------
     def window(self, n: Optional[int] = None) -> Sequence[RoundRecord]:

@@ -135,6 +135,14 @@ def _check_header(payload: bytes):
     return fields
 
 
+def payload_kind(payload: bytes) -> str:
+    """The kind tag of a payload ("pq" | "dense" | "sparse" | "scalar" |
+    "pq-delta") from its header alone — what the byte ledger records
+    without decoding the body. Nested chain payloads report the OUTERMOST
+    stage, the one the receiver dispatches on first."""
+    return _KIND_NAMES[_check_header(payload)[4]]
+
+
 class WireBatch(NamedTuple):
     """Decoded pq payload: everything the server needs to dequantize."""
     codes: np.ndarray      # (R, (q/R)*n) int32, values in [0, L)
@@ -586,3 +594,27 @@ def wire_bits(cfg: PQConfig, n: int, d: int,
     cb_bits = r * num_clusters * dsub * w
     code_bits = 8 * _code_stream_bytes(cfg.num_codes(n), cfg.bits_per_code)
     return HEADER_BYTES * 8 + cb_bits + code_bits
+
+
+# ---------------------------------------------------------------------------
+# observability
+# ---------------------------------------------------------------------------
+# Spans around the public codec entry points, applied by REASSIGNMENT rather
+# than decorators: the encode_* function bodies (including decorator lists)
+# are pinned by AST hash in repro/lint/wire_manifest.json, so a decorator
+# would read as an encode-body change without a version bump. Wrapping the
+# module attributes leaves the pinned FunctionDefs byte-identical; internal
+# callers resolve the module globals at call time, so nested stages record
+# nested spans. All wrappers are no-ops until `repro.obs.configure` runs.
+from repro import obs as _obs
+
+encode_bytes = _obs.instrument("wire.encode_bytes", cat="wire")(encode_bytes)
+decode_bytes = _obs.instrument("wire.decode_bytes", cat="wire")(decode_bytes)
+encode_pq_delta = _obs.instrument("wire.encode_pq_delta",
+                                  cat="wire")(encode_pq_delta)
+decode_pq_delta = _obs.instrument("wire.decode_pq_delta",
+                                  cat="wire")(decode_pq_delta)
+encode_compressed = _obs.instrument("wire.encode_compressed",
+                                    cat="wire")(encode_compressed)
+decode_payload = _obs.instrument("wire.decode_payload",
+                                 cat="wire")(decode_payload)

@@ -14,12 +14,19 @@ Flags device→host synchronization and recompilation hazards:
     i.e. a full retrace per round;
   * ``static_argnames`` naming parameters the wrapped function does not
     have, and ``static_argnums``/``donate_argnums`` out of range — silent
-    cache-miss churn on newer JAX, errors on older.
+    cache-miss churn on newer JAX, errors on older;
+  * hand-rolled timing (``time.perf_counter`` & friends) and ``print``
+    in the ``repro/federated`` / ``repro/core`` hot paths — telemetry
+    there goes through ``repro.obs`` spans/events so host and virtual
+    time lanes stay aligned in one exportable log (benchmarks, tests and
+    the obs package itself are exempt; ``# fedlint: disable=`` works as
+    everywhere).
 """
 
 from __future__ import annotations
 
 import ast
+import re
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from repro.lint.core import (Finding, LintContext, LintPass, Module,
@@ -31,6 +38,15 @@ _TRACE_WRAPPERS = {"shard_map", "jax.experimental.shard_map.shard_map",
 _NP_HOST = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
             "onp.asarray", "onp.array"}
 _SYNC_ATTRS = {"item", "block_until_ready"}
+
+# the hot paths where ad-hoc timing/printing is banned in favor of
+# repro.obs spans/events (repro/obs itself is deliberately outside)
+_HOT_PATH_RE = re.compile(r"(^|[/\\])repro[/\\](federated|core)[/\\]")
+_TEST_PATH_RE = re.compile(r"(^|[/\\])(tests?[/\\]|test_)")
+_RAW_TIMERS = {"time.perf_counter", "time.monotonic", "time.process_time",
+               "time.perf_counter_ns", "time.monotonic_ns",
+               "perf_counter", "monotonic", "process_time",
+               "perf_counter_ns", "monotonic_ns"}
 
 
 def _is_jit_expr(node: ast.expr) -> bool:
@@ -137,6 +153,10 @@ class HostSyncPass(LintPass):
         "jit-static-args":
             "static_argnames/static_argnums/donate_argnums inconsistent "
             "with the wrapped function's signature",
+        "raw-timing-in-hot-path":
+            "hand-rolled time.perf_counter()/print() instrumentation in a "
+            "repro/federated or repro/core hot path; record through "
+            "repro.obs spans/events instead",
     }
 
     # ---- module facts ------------------------------------------------------
@@ -227,7 +247,39 @@ class HostSyncPass(LintPass):
             findings.extend(self._check_closure_rebuild(module, fn))
             findings.extend(self._check_callbacks(module, fn))
         findings.extend(self._check_static_args(module, defs))
+        findings.extend(self._check_raw_timing(module))
         return findings
+
+    def _check_raw_timing(self, module: Module) -> Iterable[Finding]:
+        """Ban ad-hoc wall-clock timing and print() in the hot paths.
+
+        `repro.obs.span` records the same interval into the run's event
+        log (host lane, aligned with the scheduler's virtual lane) at
+        near-zero cost when telemetry is off — a bare ``perf_counter``
+        pair or a ``print`` is measurement that vanishes when the run
+        ends. Scoped to ``repro/federated`` and ``repro/core`` (not
+        benchmarks, tests, or ``repro/obs`` itself, which legitimately
+        owns the clock)."""
+        if not _HOT_PATH_RE.search(module.path) \
+                or _TEST_PATH_RE.search(module.path):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name in _RAW_TIMERS:
+                yield self.finding(
+                    module, node, "raw-timing-in-hot-path",
+                    f"{name}() hand-rolls wall-clock timing in a hot "
+                    "path; wrap the region in repro.obs.span(...) so the "
+                    "measurement lands in the run's event log alongside "
+                    "the scheduler's virtual clock")
+            elif name == "print":
+                yield self.finding(
+                    module, node, "raw-timing-in-hot-path",
+                    "print() in a hot path is unstructured and serializes "
+                    "stdout; emit repro.obs.event(...) (or logging) so "
+                    "the record survives in the run's event log")
 
     @staticmethod
     def _static_argnames(root) -> Set[str]:

@@ -1,0 +1,91 @@
+"""Run-wide telemetry: spans, sync-free in-jit metrics, exporters, inspector.
+
+Three pillars, one event log:
+
+  spans.py   — `span`/`virtual_span`/`event`/`instrument` record host
+               wall-clock and the scheduler's simulated clock as parallel
+               lanes into a module-level `Recorder` (`configure` installs
+               one; everything is a no-op otherwise, and inside jit
+               tracing). The hot path is permanently instrumented:
+               scheduler rounds, executor execute/place, wire
+               encode/decode, Lloyd/kmeans, checkpoint save/restore.
+  metrics.py — `MetricsBuffer` plus jit-safe `counter`/`gauge`/`histogram`
+               helpers: metrics accumulate as arrays inside jitted steps
+               and ride the existing aux pytrees; the host records them
+               without looking and flushes the whole run with exactly one
+               ``jax.device_get`` — instrumentation adds zero host syncs.
+  export.py  — append-only JSONL event logs and Chrome/Perfetto
+               ``trace_event`` JSON (host and virtual lanes render as two
+               processes with per-category tracks).
+  inspect.py — ``python -m repro.obs <run.jsonl>``: round tables,
+               duration percentiles, the per-direction/per-wire-kind byte
+               ledger, and bytes/time-to-target.
+
+Typical wiring (what ``bench_network.py --emit-trace`` and the femnist
+example's ``--emit-trace`` flag do):
+
+    from repro import obs
+    obs.configure(run="bench", meta={"fleet": "lognormal"})
+    ...  # run training; Scheduler/executor/wire spans record themselves
+    rec = obs.shutdown()
+    rec.write_jsonl("run.jsonl")
+    rec.write_perfetto("run.perfetto.json")
+"""
+
+from repro.obs.export import (
+    jsonable,
+    read_jsonl,
+    to_perfetto,
+    write_jsonl,
+    write_perfetto,
+)
+from repro.obs.metrics import MetricsBuffer, counter, gauge, histogram
+from repro.obs.spans import (
+    Recorder,
+    configure,
+    current,
+    enabled,
+    event,
+    instrument,
+    shutdown,
+    span,
+    virtual_span,
+)
+
+
+def log_trace(trace, run=None) -> None:
+    """Append a finished `repro.federated.Trace` to the event log.
+
+    Each `RoundRecord` becomes a ``type: "round"`` event on the virtual
+    lane carrying participants, per-direction bytes, the wire-kind ledger
+    and the round's (already host-side) metrics; the run's meta + summary
+    close it out as a ``type: "run"`` event. Duck-typed on the record
+    fields so this package never imports the federated layer."""
+    rec = current()
+    if rec is None:
+        return
+    for r in trace:
+        rec.append({
+            "type": "round", "lane": "virtual", "cat": "rounds",
+            "name": f"round {r.round}",
+            "t0": float(r.t_start), "t1": float(r.t_end),
+            "args": {"round": r.round,
+                     "participants": len(r.participants),
+                     "dropped": len(r.dropped),
+                     "uplink_bytes": r.uplink_bytes,
+                     "downlink_bytes": r.downlink_bytes,
+                     "staleness": list(r.staleness),
+                     "ledger": dict(r.ledger),
+                     "metrics": dict(r.metrics)}})
+    rec.append({"type": "run", "lane": "host", "cat": "obs",
+                "name": run or rec.run, "t": rec.now(),
+                "args": {"meta": jsonable(dict(trace.meta)),
+                         "summary": jsonable(trace.summary())}})
+
+
+__all__ = [
+    "MetricsBuffer", "Recorder", "configure", "counter", "current",
+    "enabled", "event", "gauge", "histogram", "instrument", "jsonable",
+    "log_trace", "read_jsonl", "shutdown", "span", "to_perfetto",
+    "virtual_span", "write_jsonl", "write_perfetto",
+]

@@ -1,0 +1,8 @@
+"""CLI entry point: ``python -m repro.obs <run.jsonl>``."""
+
+import sys
+
+from repro.obs.inspect import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+"""Exporters: append-only JSONL event logs and Chrome/Perfetto traces.
+
+Both exporters consume the plain-dict event schema documented in
+``spans.py``. The JSONL log is the durable artifact (one JSON object per
+line, append-only, streamable); the Perfetto export is a view of the same
+events as Chrome ``trace_event`` JSON, loadable at https://ui.perfetto.dev
+or chrome://tracing.
+
+The two time lanes map to two Perfetto "processes":
+
+  pid 1 — "host wall-clock"        (process wall time, seconds from epoch)
+  pid 2 — "scheduler virtual-clock" (simulated fleet time)
+
+within which each span category gets its own named thread row, so
+scheduler rounds, executor phases, wire encode/decode and round records
+render as separate, aligned tracks.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Iterable, List
+
+_HOST_PID = 1
+_VIRTUAL_PID = 2
+_LANE_NAMES = {_HOST_PID: "host wall-clock",
+               _VIRTUAL_PID: "scheduler virtual-clock"}
+
+
+def jsonable(value: Any) -> Any:
+    """Best-effort conversion of an event payload to JSON-able builtins.
+
+    Handles numpy/jax scalars and arrays (via ``item``/``tolist``), tuples,
+    sets and nested containers; anything else falls back to ``str``."""
+    if value is None or isinstance(value, (bool, int, float, str)):
+        return value
+    if isinstance(value, dict):
+        return {str(k): jsonable(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple, set, frozenset)):
+        return [jsonable(v) for v in value]
+    if hasattr(value, "ndim") and hasattr(value, "tolist"):
+        return value.item() if value.ndim == 0 else value.tolist()
+    if hasattr(value, "item"):  # numpy generic scalars
+        return value.item()
+    return str(value)
+
+
+def write_jsonl(events: Iterable[Dict[str, Any]], path,
+                append: bool = False) -> int:
+    """Write events as JSON Lines; returns the number of lines written."""
+    path = Path(path)
+    mode = "a" if append else "w"
+    n = 0
+    with path.open(mode, encoding="utf-8") as fh:
+        for ev in events:
+            fh.write(json.dumps(jsonable(ev), sort_keys=True))
+            fh.write("\n")
+            n += 1
+    return n
+
+
+def read_jsonl(path) -> List[Dict[str, Any]]:
+    """Read a JSONL event log back into a list of event dicts."""
+    events = []
+    with Path(path).open("r", encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+def _pid(ev: Dict[str, Any]) -> int:
+    return _VIRTUAL_PID if ev.get("lane") == "virtual" else _HOST_PID
+
+
+def to_perfetto(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
+    """Render events as a Chrome ``trace_event`` JSON document.
+
+    Spans (and round records) become complete "X" events with microsecond
+    ts/dur; instants become "i" events; each (lane, category) pair gets a
+    named thread row via "M" metadata."""
+    out: List[Dict[str, Any]] = []
+    for pid, name in _LANE_NAMES.items():
+        out.append({"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                    "args": {"name": name}})
+    tids: Dict[tuple, int] = {}
+
+    def tid_for(pid: int, cat: str) -> int:
+        key = (pid, cat)
+        if key not in tids:
+            tids[key] = len([k for k in tids if k[0] == pid]) + 1
+            out.append({"ph": "M", "name": "thread_name", "pid": pid,
+                        "tid": tids[key], "args": {"name": cat}})
+        return tids[key]
+
+    for ev in events:
+        pid = _pid(ev)
+        cat = str(ev.get("cat", "app"))
+        base = {"name": str(ev.get("name", "?")), "cat": cat, "pid": pid,
+                "tid": tid_for(pid, cat),
+                "args": jsonable(ev.get("args", {}))}
+        if "t0" in ev and "t1" in ev:      # spans and round records
+            base["ph"] = "X"
+            base["ts"] = float(ev["t0"]) * 1e6
+            base["dur"] = max(0.0, (float(ev["t1"]) - float(ev["t0"])) * 1e6)
+        elif "t" in ev:                    # instants / run boundaries
+            base["ph"] = "i"
+            base["ts"] = float(ev["t"]) * 1e6
+            base["s"] = "t"
+        else:  # pragma: no cover - malformed event; keep the export loadable
+            continue
+        out.append(base)
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_perfetto(events: Iterable[Dict[str, Any]], path) -> None:
+    Path(path).write_text(json.dumps(to_perfetto(events)) + "\n",
+                          encoding="utf-8")

@@ -1,0 +1,241 @@
+"""The run inspector behind ``python -m repro.obs <run.jsonl>``.
+
+Consumes a JSONL event log written by `Recorder.write_jsonl` and prints:
+
+  * the run header (meta + end-of-run summary events),
+  * a round table (virtual start/end, participants, dropped, bytes, loss),
+  * round-duration percentiles (p50/p90/p99 + tail ratio) on the virtual
+    lane and span-duration percentiles per (lane, name) for the host lane,
+  * the per-direction, per-wire-kind byte ledger totals,
+  * bytes/time-to-target when ``--target`` is given (or a target loss is
+    found in the run summary).
+
+``--json`` emits the same summary as one JSON document for scripting.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.obs.export import read_jsonl
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile; q in [0, 100]; 0.0 on empty."""
+    vals = sorted(float(v) for v in values)
+    if not vals:
+        return 0.0
+    q = min(max(float(q), 0.0), 100.0)
+    pos = (len(vals) - 1) * (q / 100.0)
+    lo = int(pos)
+    hi = min(lo + 1, len(vals) - 1)
+    frac = pos - lo
+    return vals[lo] * (1.0 - frac) + vals[hi] * frac
+
+
+def _span_stats(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    groups: Dict[tuple, List[float]] = {}
+    for ev in events:
+        if ev.get("type") != "span":
+            continue
+        key = (ev.get("lane", "host"), ev.get("name", "?"))
+        groups.setdefault(key, []).append(
+            float(ev["t1"]) - float(ev["t0"]))
+    rows = []
+    for (lane, name), durs in sorted(groups.items()):
+        rows.append({"lane": lane, "name": name, "count": len(durs),
+                     "total_s": sum(durs),
+                     "p50_s": percentile(durs, 50),
+                     "p99_s": percentile(durs, 99)})
+    rows.sort(key=lambda r: (r["lane"], -r["total_s"]))
+    return rows
+
+
+def _round_rows(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    rows = []
+    for ev in events:
+        if ev.get("type") != "round":
+            continue
+        args = ev.get("args", {})
+        rows.append({"round": args.get("round", len(rows)),
+                     "t_start": float(ev.get("t0", 0.0)),
+                     "t_end": float(ev.get("t1", 0.0)),
+                     "participants": args.get("participants", 0),
+                     "dropped": args.get("dropped", 0),
+                     "uplink_bytes": args.get("uplink_bytes", 0),
+                     "downlink_bytes": args.get("downlink_bytes", 0),
+                     "ledger": args.get("ledger", {}) or {},
+                     "loss": (args.get("metrics", {}) or {}).get("loss")})
+    return rows
+
+
+def summarize(events: List[Dict[str, Any]],
+              target: Optional[float] = None,
+              metric: str = "loss") -> Dict[str, Any]:
+    """Reduce an event log to the inspector's summary document."""
+    rounds = _round_rows(events)
+    durations = [r["t_end"] - r["t_start"] for r in rounds]
+    ledger: Dict[str, float] = {}
+    for r in rounds:
+        for k, v in r["ledger"].items():
+            ledger[k] = ledger.get(k, 0) + v
+
+    runs = [ev for ev in events if ev.get("type") == "run"]
+    meta = [ev for ev in events if ev.get("type") == "meta"]
+    p50 = percentile(durations, 50)
+    summary: Dict[str, Any] = {
+        "events": len(events),
+        "runs": [ev.get("args", {}).get("meta", {}) for ev in runs],
+        "run_meta": (meta[0].get("args", {}) if meta else {}),
+        "rounds": rounds,
+        "round_duration_p50_s": p50,
+        "round_duration_p90_s": percentile(durations, 90),
+        "round_duration_p99_s": percentile(durations, 99),
+        "tail_ratio": (percentile(durations, 99) / p50) if p50 > 0 else 1.0,
+        "simulated_seconds": (rounds[-1]["t_end"] if rounds else 0.0),
+        "uplink_bytes": sum(r["uplink_bytes"] for r in rounds),
+        "downlink_bytes": sum(r["downlink_bytes"] for r in rounds),
+        "ledger": ledger,
+        "spans": _span_stats(events),
+    }
+
+    if target is None:  # fall back to a target recorded in the run summary
+        for ev in runs:
+            t = (ev.get("args", {}).get("summary", {}) or {}).get("target")
+            if isinstance(t, (int, float)):
+                target = float(t)
+                break
+    if target is not None:
+        summary["target"] = {"metric": metric, "value": target}
+        up = down = 0
+        t_hit = bytes_hit = round_hit = None
+        for r in rounds:
+            up += r["uplink_bytes"]
+            down += r["downlink_bytes"]
+            value = r.get(metric) if metric != "loss" else r["loss"]
+            if value is not None and value <= target:
+                t_hit, bytes_hit, round_hit = r["t_end"], up + down, r["round"]
+                break
+        summary["target"].update({"reached_round": round_hit,
+                                  "time_to_target_s": t_hit,
+                                  "bytes_to_target": bytes_hit})
+    return summary
+
+
+def _fmt_bytes(n: float) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024.0 or unit == "GiB":
+            return f"{n:,.1f} {unit}" if unit != "B" else f"{int(n):,} B"
+        n /= 1024.0
+    return f"{n:,.1f} GiB"  # pragma: no cover - unreachable
+
+
+def format_report(summary: Dict[str, Any], max_rows: int = 12) -> str:
+    """Render the summary document as the human-readable report."""
+    lines: List[str] = []
+    run_meta = summary.get("run_meta", {})
+    lines.append(f"run: {run_meta.get('run', '?')}  "
+                 f"events: {summary['events']}  "
+                 f"rounds: {len(summary['rounds'])}")
+    extras = {k: v for k, v in run_meta.items() if k != "run"}
+    if extras:
+        lines.append("meta: " + ", ".join(f"{k}={v}"
+                                          for k, v in sorted(extras.items())))
+
+    rounds = summary["rounds"]
+    if rounds:
+        lines.append("")
+        lines.append(f"{'round':>5} {'t_start':>9} {'t_end':>9} "
+                     f"{'parts':>5} {'drop':>4} {'uplink':>12} "
+                     f"{'downlink':>12} {'loss':>9}")
+        shown = rounds if len(rounds) <= max_rows else rounds[:max_rows]
+        for r in shown:
+            loss = f"{r['loss']:.4f}" if r["loss"] is not None else "-"
+            lines.append(f"{r['round']:>5} {r['t_start']:>9.2f} "
+                         f"{r['t_end']:>9.2f} {r['participants']:>5} "
+                         f"{r['dropped']:>4} "
+                         f"{_fmt_bytes(r['uplink_bytes']):>12} "
+                         f"{_fmt_bytes(r['downlink_bytes']):>12} {loss:>9}")
+        if len(rounds) > max_rows:
+            lines.append(f"  ... {len(rounds) - max_rows} more rounds")
+        lines.append("")
+        lines.append(
+            f"virtual round duration  p50={summary['round_duration_p50_s']:.2f}s"
+            f"  p90={summary['round_duration_p90_s']:.2f}s"
+            f"  p99={summary['round_duration_p99_s']:.2f}s"
+            f"  tail_ratio={summary['tail_ratio']:.2f}")
+        lines.append(
+            f"simulated {summary['simulated_seconds']:.1f}s   "
+            f"uplink {_fmt_bytes(summary['uplink_bytes'])}   "
+            f"downlink {_fmt_bytes(summary['downlink_bytes'])}")
+
+    if summary["ledger"]:
+        lines.append("")
+        lines.append("byte ledger (direction/wire-kind):")
+        for k, v in sorted(summary["ledger"].items()):
+            lines.append(f"  {k:<24} {_fmt_bytes(v):>14}")
+
+    target = summary.get("target")
+    if target:
+        lines.append("")
+        if target.get("reached_round") is not None:
+            lines.append(
+                f"target {target['metric']} <= {target['value']}: reached at "
+                f"round {target['reached_round']} "
+                f"(t={target['time_to_target_s']:.1f}s, "
+                f"{_fmt_bytes(target['bytes_to_target'])} on the wire)")
+        else:
+            lines.append(f"target {target['metric']} <= {target['value']}: "
+                         "not reached")
+
+    spans = summary["spans"]
+    if spans:
+        lines.append("")
+        lines.append("spans (by total time within lane):")
+        lines.append(f"  {'lane':<8} {'name':<28} {'count':>6} "
+                     f"{'total':>10} {'p50':>10} {'p99':>10}")
+        for row in spans[:max_rows]:
+            lines.append(f"  {row['lane']:<8} {row['name']:<28} "
+                         f"{row['count']:>6} {row['total_s']:>9.3f}s "
+                         f"{row['p50_s'] * 1e3:>8.2f}ms "
+                         f"{row['p99_s'] * 1e3:>8.2f}ms")
+        if len(spans) > max_rows:
+            lines.append(f"  ... {len(spans) - max_rows} more span groups")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize a telemetry JSONL log written with "
+                    "--emit-trace (round tables, percentiles, byte ledger, "
+                    "bytes/time-to-target).")
+    ap.add_argument("path", help="JSONL event log (Recorder.write_jsonl)")
+    ap.add_argument("--target", type=float, default=None,
+                    help="metric threshold for time/bytes-to-target")
+    ap.add_argument("--metric", default="loss",
+                    help="round metric the target applies to (default: loss)")
+    ap.add_argument("--rows", type=int, default=12,
+                    help="max table rows to print (default: 12)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of a report")
+    args = ap.parse_args(argv)
+
+    try:
+        events = read_jsonl(args.path)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"error: cannot read {args.path}: {exc}", file=sys.stderr)
+        return 2
+    summary = summarize(events, target=args.target, metric=args.metric)
+    try:
+        if args.json:
+            print(json.dumps(summary, sort_keys=True))
+        else:
+            print(format_report(summary, max_rows=args.rows))
+    except BrokenPipeError:   # e.g. `... | head`; the report is best-effort
+        return 0
+    return 0

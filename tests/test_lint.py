@@ -302,3 +302,48 @@ def test_cli_list_rules():
     assert r.returncode == 0
     for pass_name in available_passes():
         assert pass_name in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# raw-timing-in-hot-path: ad-hoc timers/print in federated/core hot paths
+# ---------------------------------------------------------------------------
+
+_HOT_TIMING_SRC = """\
+import time
+
+def round_loop():
+    t0 = time.perf_counter()
+    print("round took", time.perf_counter() - t0)
+"""
+
+
+def _timing_findings(path, src=_HOT_TIMING_SRC, tmp=None):
+    return [f for f in run_passes([Module(path, src)], make_passes())
+            if f.rule == "raw-timing-in-hot-path"]
+
+
+def test_raw_timing_flagged_in_hot_paths(tmp_manifest):
+    findings = _timing_findings("src/repro/federated/runtime.py")
+    # two perf_counter calls + one print
+    assert sorted(f.line for f in findings) == [4, 5, 5]
+    assert any("repro.obs.span" in f.message for f in findings)
+    assert any("repro.obs.event" in f.message for f in findings)
+    assert _timing_findings("src/repro/core/kmeans.py")
+
+
+def test_raw_timing_exempt_paths(tmp_manifest):
+    for path in ("src/repro/obs/spans.py",          # obs implements timing
+                 "benchmarks/common.py",            # benchmarks time freely
+                 "tests/test_something.py",         # test code
+                 "src/repro/federated/test_util.py",
+                 "src/repro/models/paper_models.py"):
+        assert _timing_findings(path) == [], path
+
+
+def test_raw_timing_line_suppression(tmp_manifest):
+    src = _HOT_TIMING_SRC.replace(
+        "t0 = time.perf_counter()",
+        "t0 = time.perf_counter()"
+        "  # fedlint: disable=raw-timing-in-hot-path")
+    findings = _timing_findings("src/repro/federated/runtime.py", src)
+    assert sorted(f.line for f in findings) == [5, 5]  # only the bare line

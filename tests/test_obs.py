@@ -1,0 +1,346 @@
+"""Observability tests: span recording + trace-safety, exporter
+round-trips, Trace windowed-reduction edge cases, the run inspector, and
+the transfer-counting guarantee (instrumentation adds zero device→host
+syncs to a training run)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.quantizer import PQConfig
+from repro.data.synthetic import make_federated_image_data
+from repro.federated import DropSlowestK, FederatedTrainer, lognormal_fleet
+from repro.federated.trace import RoundRecord, Trace
+from repro.models.paper_models import FemnistCNN
+from repro.obs.inspect import format_report, main, percentile, summarize
+from repro.optim import sgd
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_recorder():
+    """Every test starts and ends without a module-level recorder."""
+    obs.shutdown()
+    yield
+    obs.shutdown()
+
+
+def _record(round, t0, t1, loss=None, up=100, down=200, dropped=(),
+            ledger=None):
+    return RoundRecord(
+        round=round, t_start=t0, t_end=t1, participants=(0, 1),
+        dropped=tuple(dropped), uplink_bytes=up, downlink_bytes=down,
+        metrics={} if loss is None else {"loss": loss},
+        ledger=ledger or {})
+
+
+# ---------------------------------------------------------------------------
+# Trace windowed reductions: empty / single-round / extreme-q edge cases
+# ---------------------------------------------------------------------------
+
+def test_empty_trace_reductions_are_defined():
+    t = Trace()
+    assert t.duration_percentile(50.0) == 0.0
+    assert t.duration_percentile(0.0) == 0.0
+    assert t.tail_ratio() == 1.0
+    assert t.loss_slope() == 0.0
+    assert t.drop_rate() == 0.0
+    assert t.bytes_per_round() == 0.0
+    assert t.ledger_totals() == {}
+    s = t.summary()
+    assert s["rounds"] == 0
+    assert s["simulated_seconds"] == 0.0
+    assert s["mean_staleness"] == 0.0
+
+
+def test_single_round_trace_reductions():
+    t = Trace(records=[_record(0, 0.0, 2.5, loss=1.0)])
+    # every percentile of one sample is that sample, including q in {0, 1}
+    for q in (0.0, 1.0, 50.0, 100.0):
+        assert t.duration_percentile(q) == pytest.approx(2.5)
+    assert t.tail_ratio() == pytest.approx(1.0)
+    assert t.loss_slope() == 0.0          # needs >= 2 loss points
+    assert t.summary()["rounds"] == 1
+
+
+def test_duration_percentile_extreme_q():
+    durations = [1.0, 2.0, 4.0, 8.0]
+    t = Trace(records=[_record(i, 0.0, d) for i, d in enumerate(durations)])
+    assert t.duration_percentile(0.0) == pytest.approx(1.0)    # the min
+    assert t.duration_percentile(100.0) == pytest.approx(8.0)  # the max
+    # q is clamped, not wrapped, outside [0, 100]
+    assert t.duration_percentile(-5.0) == pytest.approx(1.0)
+    assert t.duration_percentile(250.0) == pytest.approx(8.0)
+    # q=1 (of 100) interpolates just above the minimum
+    assert 1.0 <= t.duration_percentile(1.0) < 2.0
+
+
+def test_loss_slope_and_targets():
+    t = Trace(records=[_record(i, float(i), float(i + 1), loss=4.0 - i)
+                       for i in range(4)])
+    assert t.loss_slope() == pytest.approx(-1.0)
+    assert t.time_to_target(2.0) == pytest.approx(3.0)
+    assert t.bytes_to_target(2.0) == 300          # 3 rounds of uplink
+    assert t.time_to_target(-10.0) is None
+
+
+def test_ledger_totals_accumulate_across_rounds():
+    t = Trace(records=[
+        _record(0, 0.0, 1.0, ledger={"uplink/pq": 10, "downlink/dense": 50}),
+        _record(1, 1.0, 2.0, ledger={"uplink/pq": 15}),
+        _record(2, 2.0, 3.0),                     # legacy: empty ledger
+    ])
+    assert t.ledger_totals() == {"uplink/pq": 25, "downlink/dense": 50}
+
+
+# ---------------------------------------------------------------------------
+# spans: recording, trace-safety, the instrument wrapper
+# ---------------------------------------------------------------------------
+
+def test_span_is_noop_without_recorder():
+    with obs.span("nothing", cat="test") as sp:
+        sp.set(key="value")                       # must not raise
+    assert obs.current() is None
+    assert not obs.enabled()
+
+
+def test_span_records_host_lane():
+    rec = obs.configure(run="t", meta={"k": "v"})
+    with obs.span("work", cat="test", n=3) as sp:
+        sp.set(extra=1)
+    obs.virtual_span("simwork", 1.0, 3.5, cat="test", round=0)
+    obs.event("mark", cat="test", lane="virtual", t=2.0, why="x")
+    spans = [e for e in rec.events if e["type"] == "span"]
+    assert {(s["lane"], s["name"]) for s in spans} == \
+        {("host", "work"), ("virtual", "simwork")}
+    host = next(s for s in spans if s["lane"] == "host")
+    assert host["t1"] >= host["t0"] >= 0.0
+    assert host["args"] == {"n": 3, "extra": 1}
+    virt = next(s for s in spans if s["lane"] == "virtual")
+    assert (virt["t0"], virt["t1"]) == (1.0, 3.5)
+    ev = next(e for e in rec.events if e["type"] == "event")
+    assert (ev["name"], ev["t"], ev["lane"]) == ("mark", 2.0, "virtual")
+    # the run_start meta event carries the configured meta
+    assert rec.events[0]["args"] == {"k": "v", "run": "t"}
+
+
+def test_span_suppressed_inside_jit_tracing():
+    rec = obs.configure(run="t")
+
+    @jax.jit
+    def f(x):
+        with obs.span("should-not-record", cat="test"):
+            pass
+        obs.event("should-not-record-either", cat="test")
+        return x * 2
+
+    f(jnp.ones(3)).block_until_ready()
+    names = {e["name"] for e in rec.events}
+    assert "should-not-record" not in names
+    assert "should-not-record-either" not in names
+
+
+def test_instrument_wrapper_records_per_call():
+    @obs.instrument("my.fn", cat="test")
+    def fn(a, b=1):
+        return a + b
+
+    assert fn(2, b=3) == 5                        # no recorder: plain call
+    rec = obs.configure(run="t")
+    assert fn(2) == 3
+    spans = [e for e in rec.events if e["type"] == "span"]
+    assert [s["name"] for s in spans] == ["my.fn"]
+    assert fn.__name__ == "fn"                    # functools.wraps preserved
+
+
+# ---------------------------------------------------------------------------
+# exporters: JSONL append-only round-trip + Perfetto structure
+# ---------------------------------------------------------------------------
+
+def test_jsonl_round_trip_and_incremental_append(tmp_path):
+    rec = obs.configure(run="t")
+    with obs.span("a", cat="test"):
+        pass
+    path = tmp_path / "run.jsonl"
+    n1 = rec.write_jsonl(path)
+    assert n1 == 2                                # run_start meta + 1 span
+    assert rec.write_jsonl(path) == 0             # nothing new: no rewrite
+    with obs.span("b", cat="test"):
+        pass
+    assert rec.write_jsonl(path) == 1             # only the new event
+    events = obs.read_jsonl(path)
+    assert [e.get("name") for e in events] == ["run_start", "a", "b"]
+    assert events == json.loads(
+        "[" + ",".join(p for p in path.read_text().splitlines()) + "]")
+
+
+def test_jsonable_handles_arrays_and_fallbacks():
+    assert obs.jsonable(jnp.arange(3)) == [0, 1, 2]
+    assert obs.jsonable(np.float32(1.5)) == 1.5
+    assert obs.jsonable({"k": (1, 2)}) == {"k": [1, 2]}
+    assert obs.jsonable(object()).startswith("<object")
+
+
+def test_perfetto_two_lanes_and_phases(tmp_path):
+    rec = obs.configure(run="t")
+    with obs.span("hostwork", cat="exec"):
+        pass
+    obs.virtual_span("round 0", 0.0, 1.0, cat="rounds")
+    obs.event("cut", cat="sched", lane="virtual", t=0.5)
+    path = tmp_path / "trace.perfetto.json"
+    rec.write_perfetto(path)
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    lanes = {e["args"]["name"] for e in evs if e.get("name") == "process_name"}
+    assert lanes == {"host wall-clock", "scheduler virtual-clock"}
+    xs = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert set(xs) == {"hostwork", "round 0"}
+    assert xs["hostwork"]["pid"] != xs["round 0"]["pid"]   # distinct lanes
+    assert xs["round 0"]["dur"] == pytest.approx(1e6)      # µs
+    assert all(e["dur"] >= 0.0 for e in evs if e["ph"] == "X")
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert {e["name"] for e in inst} >= {"cut"}
+    assert all(e["s"] == "t" for e in inst)
+
+
+# ---------------------------------------------------------------------------
+# in-jit metrics + the single-flush buffer
+# ---------------------------------------------------------------------------
+
+def test_metric_helpers_inside_jit():
+    @jax.jit
+    def step(x):
+        return {"n": obs.counter(jnp.ones_like(x)),
+                "mean": obs.gauge(x.mean()),
+                "hist": obs.histogram(x, bins=4, lo=0.0, hi=1.0)}
+
+    buf = obs.MetricsBuffer()
+    buf.record(step(jnp.array([0.1, 0.3, 0.6, 0.9])))
+    buf.record(step(jnp.array([-1.0, 2.0])))      # out-of-range clamps
+    assert len(buf) == 2
+    out = buf.flush()
+    assert len(buf) == 0
+    assert out[0]["n"] == 4.0 and isinstance(out[0]["n"], float)
+    assert out[0]["hist"] == [1.0, 1.0, 1.0, 1.0]
+    assert out[1]["hist"] == [1.0, 0.0, 0.0, 1.0]  # edge buckets
+    assert buf.flush() == []                       # idempotent when drained
+
+
+def _small_trainer():
+    data = make_federated_image_data(num_clients=8, seed=0)
+    pq = PQConfig(num_subvectors=288, num_clusters=4, kmeans_iters=2)
+    model = FemnistCNN(pq=pq, lam=1e-4)
+    return FederatedTrainer(model, sgd(0.03), data, cohort=4, client_batch=8,
+                            fleet=lognormal_fleet(8, seed=0),
+                            policy=DropSlowestK(1))
+
+
+def _count_transfers(monkeypatch, configured):
+    calls = {"n": 0}
+    real = jax.device_get
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    try:
+        if configured:
+            obs.configure(run="count")
+        tr = _small_trainer()
+        tr.run(2, jax.random.PRNGKey(0))
+    finally:
+        monkeypatch.setattr(jax, "device_get", real)
+        rec = obs.shutdown()
+    if configured:
+        assert any(e["type"] == "round" for e in rec.events)
+    return calls["n"]
+
+
+def test_instrumentation_adds_no_device_transfers(monkeypatch):
+    """The sync-free contract: a fully instrumented run performs no more
+    blocking device→host transfers than an uninstrumented one, and the
+    whole run's metrics arrive through a single flush."""
+    plain = _count_transfers(monkeypatch, configured=False)
+    instrumented = _count_transfers(monkeypatch, configured=True)
+    assert instrumented <= plain
+    assert plain >= 1                              # the run's single flush
+
+
+# ---------------------------------------------------------------------------
+# log_trace + the run inspector
+# ---------------------------------------------------------------------------
+
+def _synthetic_run_events():
+    rec = obs.configure(run="synthetic", meta={"suite": "unit"})
+    trace = Trace(records=[
+        _record(0, 0.0, 1.0, loss=4.0, up=1000, down=4000,
+                ledger={"uplink/pq": 1000, "downlink/dense": 4000}),
+        _record(1, 1.0, 3.0, loss=2.0, up=1000, down=4000, dropped=(7,),
+                ledger={"uplink/pq": 1000, "downlink/dense": 4000}),
+    ], meta={"uplink_compressor": "pq"})
+    obs.log_trace(trace)
+    obs.shutdown()
+    return rec.events
+
+
+def test_log_trace_emits_round_and_run_events():
+    events = _synthetic_run_events()
+    rounds = [e for e in events if e["type"] == "round"]
+    assert [r["args"]["round"] for r in rounds] == [0, 1]
+    assert all(r["lane"] == "virtual" for r in rounds)
+    assert rounds[1]["args"]["dropped"] == 1
+    runs = [e for e in events if e["type"] == "run"]
+    assert len(runs) == 1
+    assert runs[0]["args"]["meta"]["uplink_compressor"] == "pq"
+
+
+def test_log_trace_is_noop_without_recorder():
+    obs.log_trace(Trace(records=[_record(0, 0.0, 1.0)]))  # must not raise
+
+
+def test_summarize_rounds_ledger_and_target():
+    events = _synthetic_run_events()
+    s = summarize(events, target=2.5)
+    assert len(s["rounds"]) == 2
+    assert s["ledger"] == {"uplink/pq": 2000, "downlink/dense": 8000}
+    assert s["uplink_bytes"] == 2000
+    assert s["simulated_seconds"] == pytest.approx(3.0)
+    assert s["round_duration_p50_s"] == pytest.approx(1.5)
+    assert s["target"]["reached_round"] == 1
+    assert s["target"]["time_to_target_s"] == pytest.approx(3.0)
+    assert s["target"]["bytes_to_target"] == 10000    # both directions
+    missed = summarize(events, target=0.1)
+    assert missed["target"]["reached_round"] is None
+    report = format_report(s)
+    assert "byte ledger" in report and "uplink/pq" in report
+    assert "reached at round 1" in report
+
+
+def test_summarize_empty_and_percentile_edges():
+    s = summarize([])
+    assert s["events"] == 0 and s["rounds"] == []
+    assert s["tail_ratio"] == 1.0
+    assert percentile([], 50) == 0.0
+    assert percentile([3.0], 0) == 3.0
+    assert percentile([3.0], 100) == 3.0
+    assert percentile([1.0, 3.0], 200) == 3.0         # clamped
+    format_report(s)                                  # renders without rounds
+
+
+def test_inspector_cli(tmp_path, capsys):
+    rec = obs.configure(run="cli")
+    obs.log_trace(Trace(records=[_record(0, 0.0, 1.0, loss=1.0)]))
+    obs.shutdown()
+    path = tmp_path / "run.jsonl"
+    rec.write_jsonl(path)
+    assert main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "run: cli" in out and "round" in out
+    assert main([str(path), "--json", "--target", "2.0"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["target"]["reached_round"] == 0
+    assert main([str(tmp_path / "missing.jsonl")]) == 2

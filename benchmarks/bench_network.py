@@ -33,6 +33,13 @@ Scenario axes (fast mode keeps a 2x3 slice; --full runs the grid):
     4-shard speedup over 1 shard must be >= 1.5x (asserted — acceptance
     criterion); see ``run_executor_scaling`` for the calibrated
     smaller-host bars.
+  * fleet scale — (``--fleet-scale``) scheduler-core scaling cells with a
+    stub execute: simulated rounds per second and peak RSS at 10^5 and
+    10^6 lognormal clients (10^3 / 10^4-client cohorts) under both
+    scheduler backends, the 10^6 cells through a `TwoTierTopology` with
+    per-tier measured bytes in the row. The 1M-client / 10k-cohort vector
+    cell must finish a round inside the wall-clock budget and both
+    backends' traces must match bitwise (asserted — acceptance criteria).
   * autoscale   — (``--autoscale``) one training run on the lognormal
     straggler fleet driven by the trace-driven `TraceAutoscaler`
     (``federated/autoscale.py``) in plan-sized segments, next to the
@@ -64,6 +71,7 @@ import sys
 import time
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit, write_bench_json
 from repro import obs
@@ -71,8 +79,9 @@ from repro.core.quantizer import PQConfig
 from repro.data.synthetic import make_federated_image_data
 from repro.federated import (AsyncBuffer, AutoscalePlan, Deadline,
                              DropSlowestK, FederatedTrainer, FullSync,
-                             TraceAutoscaler, autoscale_run, lognormal_fleet,
-                             make_policy, mobile_fleet, uniform_fleet)
+                             Scheduler, TraceAutoscaler, TwoTierTopology,
+                             autoscale_run, lognormal_fleet, make_policy,
+                             mobile_fleet, uniform_fleet)
 from repro.models.paper_models import FemnistCNN
 from repro.optim import sgd
 
@@ -165,7 +174,8 @@ def _run_cell(data, fleet, policy, pq, downlink, rounds, fast,
 
 
 def run(fast: bool = True, downlink: bool = False,
-        executor: str = "stacked", autoscale: bool = False):
+        executor: str = "stacked", autoscale: bool = False,
+        fleet_scale: bool = False):
     data = make_federated_image_data(num_clients=NUM_CLIENTS, seed=0)
     fleets, policies, pqs = _fleets(), _policies(), _compressions()
     scenarios = FAST_SCENARIOS if fast else \
@@ -197,6 +207,8 @@ def run(fast: bool = True, downlink: bool = False,
     if autoscale:
         rows.extend(run_autoscale_cell(data, fleets, rounds, fast,
                                        executor=executor))
+    if fleet_scale:
+        rows.extend(run_fleet_scale(fast))
     # serialize before emit() strips the row keys
     write_bench_json(
         "network", rows,
@@ -355,6 +367,128 @@ def run_executor_scaling():
 
 
 # ---------------------------------------------------------------------------
+# fleet-scale dimension: the vectorized scheduler core at 10^5-10^6 clients
+# ---------------------------------------------------------------------------
+
+# wall-clock budget for one simulated round of the 1M-client / 10k-cohort
+# vector cell (measured ~0.02 s on the CI-class host; the bar is generous
+# because it must hold on loaded shared runners)
+FLEET_SCALE_BUDGET_S = 5.0
+
+
+def _peak_rss_mb() -> float:
+    """Peak resident set of this process in MB (0.0 where unavailable)."""
+    try:
+        import resource
+    except ImportError:        # non-POSIX
+        return 0.0
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _fleet_scale_cell(fleet, cohort, backend, rounds, topology=None,
+                      seed=7):
+    """Time ``rounds`` scheduler rounds with a stub execute.
+
+    The cohort sampler is seeded per round (identical across backends) so
+    the heapq/vector pair in a cell runs the exact same cohorts and their
+    traces can be compared record-for-record.
+    """
+    n = len(fleet)
+
+    def sample_cohort(rd):
+        return np.random.default_rng((seed, rd)).choice(n, cohort,
+                                                        replace=False)
+
+    sched = Scheduler(fleet=fleet, policy=DropSlowestK(max(cohort // 10, 1)),
+                      client_step_seconds=1.0, seed=seed, backend=backend,
+                      topology=topology)
+    t0 = time.perf_counter()
+    trace = sched.run(rounds, sample_cohort=sample_cohort,
+                      uplink_bytes=81920, downlink_bytes=262144,
+                      execute=lambda rd, parts, weights: {},
+                      wire_kinds=("pq", "dense"))
+    wall = (time.perf_counter() - t0) / rounds
+    return wall, trace
+
+
+def run_fleet_scale(fast: bool = True):
+    """The ``--fleet-scale`` dimension: scheduler-core scaling cells.
+
+    Pure scheduler throughput (stub execute — the executor's compute is
+    the other benchmarks' business): lognormal fleets at 10^5 and 10^6
+    clients, 1%-of-fleet cohorts, both backends where affordable. The
+    10^6 cells run through a 32-edge `TwoTierTopology`, so their rows
+    carry the per-tier measured bytes. Asserted acceptance criteria: the
+    1M/10k vector cell finishes a round inside ``FLEET_SCALE_BUDGET_S``
+    with both tier ledger entries present and nonzero, and the heapq and
+    vector traces of every cell match record-for-record (bitwise parity
+    at fleet scale, not just on the small test fleets).
+    """
+    rounds = 3 if fast else 8
+    rows = []
+    traces = {}
+    cells = [
+        (100_000, 1_000, None),
+        (1_000_000, 10_000, TwoTierTopology(num_edges=32, seed=0)),
+    ]
+    for clients, cohort, topo in cells:
+        setup0 = time.perf_counter()
+        fleet = lognormal_fleet(clients, dropout_prob=0.01, seed=1)
+        if topo is not None:
+            topo.ensure(clients)       # k-means once, shared by backends
+        setup_s = time.perf_counter() - setup0
+        for backend in ("heapq", "vector"):
+            wall, trace = _fleet_scale_cell(fleet, cohort, backend, rounds,
+                                            topology=topo)
+            traces[(clients, backend)] = trace
+            tiers = trace.tier_totals()
+            row = {
+                "name": f"fleet_{clients}c_{cohort}cohort_{backend}",
+                "us_per_call": round(wall * 1e6, 1),
+                "s_per_round": round(wall, 4),
+                "clients": clients,
+                "cohort": cohort,
+                "rounds": rounds,
+                "sim_seconds_per_round": round(
+                    trace.simulated_seconds / rounds, 2),
+                "peak_rss_mb": round(_peak_rss_mb(), 1),
+                "setup_s": round(setup_s, 2),
+            }
+            if topo is not None:
+                row["edge_uplink_bytes"] = tiers.get("edge_uplink", 0)
+                row["server_uplink_bytes"] = tiers.get("server_uplink", 0)
+            rows.append(row)
+        # bitwise parity at fleet scale: same cohorts, same records
+        assert traces[(clients, "heapq")].records \
+            == traces[(clients, "vector")].records, \
+            f"backend traces diverge at {clients} clients"
+
+    # the headline acceptance criteria: 1M clients, 10k cohort, vector
+    big = next(r for r in rows
+               if r["name"] == "fleet_1000000c_10000cohort_vector")
+    assert big["s_per_round"] <= FLEET_SCALE_BUDGET_S, \
+        f"1M-client vector round took {big['s_per_round']:.2f}s, over " \
+        f"the {FLEET_SCALE_BUDGET_S:g}s budget"
+    assert big["edge_uplink_bytes"] > 0 and big["server_uplink_bytes"] > 0, \
+        f"two-tier ledger entries missing from the 1M cell: {big}"
+    assert big["server_uplink_bytes"] < big["edge_uplink_bytes"], \
+        "edge pre-combination should shrink the server tier below the " \
+        "edge tier"
+    rows.append({
+        "name": "fleet_scale_claim", "us_per_call": 0.0,
+        "s_per_round_1m_vector": big["s_per_round"],
+        "budget_s": FLEET_SCALE_BUDGET_S,
+        "speedup_vs_heapq": round(
+            next(r for r in rows
+                 if r["name"] == "fleet_1000000c_10000cohort_heapq")
+            ["s_per_round"] / max(big["s_per_round"], 1e-9), 1),
+        "server_vs_edge_bytes": round(
+            big["server_uplink_bytes"] / big["edge_uplink_bytes"], 4),
+    })
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # autoscale dimension: trace-driven (cohort, policy, codec) control
 # ---------------------------------------------------------------------------
 
@@ -430,7 +564,8 @@ def run_autoscale_cell(data, fleets, rounds, fast, executor="stacked"):
 
 def main(fast: bool = True, downlink: bool = False,
          executor: str = "stacked", autoscale: bool = False,
-         emit_trace: str = None, perfetto: str = None):
+         fleet_scale: bool = False, emit_trace: str = None,
+         perfetto: str = None):
     if executor == "mesh" and len(jax.devices()) < 2 \
             and not os.environ.get("_BENCH_MESH_CHILD"):
         # re-exec with forced host devices so the mesh cells see a real
@@ -448,9 +583,11 @@ def main(fast: bool = True, downlink: bool = False,
         obs.configure(run="bench_network", meta={
             "suite": "network_tradeoff", "fast": fast, "downlink": downlink,
             "executor": executor, "autoscale": autoscale,
+            "fleet_scale": fleet_scale,
             "jax_backend": jax.default_backend()})
     emit(run(fast, downlink=downlink, executor=executor,
-             autoscale=autoscale), "network_tradeoff")
+             autoscale=autoscale, fleet_scale=fleet_scale),
+         "network_tradeoff")
     recorder = obs.shutdown()
     if emit_trace and recorder is not None:
         n = recorder.write_jsonl(emit_trace)
@@ -477,6 +614,10 @@ if __name__ == "__main__":
                          "mesh adds the shard-scaling cell")
     ap.add_argument("--autoscale", action="store_true",
                     help="run the trace-driven autoscaler cell")
+    ap.add_argument("--fleet-scale", action="store_true",
+                    help="run the 10^5/10^6-client scheduler-core scaling "
+                         "cells (wall-clock budget + backend parity "
+                         "asserted)")
     ap.add_argument("--emit-trace", nargs="?",
                     const="BENCH_network_trace.jsonl", default=None,
                     metavar="PATH",
@@ -496,4 +637,5 @@ if __name__ == "__main__":
     else:
         main(fast=not args.full, downlink=args.downlink,
              executor=args.executor, autoscale=args.autoscale,
-             emit_trace=args.emit_trace, perfetto=args.perfetto)
+             fleet_scale=args.fleet_scale, emit_trace=args.emit_trace,
+             perfetto=args.perfetto)

@@ -11,7 +11,7 @@ paper's grouped PQ; the downlink default is dense — the measured traffic
 that motivated the stack, since the cut-layer *gradient* dominates
 bytes-on-the-wire once the uplink is PQ-compressed.
 
-Seven layers, composed by `FederatedTrainer`:
+Eight layers, composed by `FederatedTrainer`:
 
   runtime.py    — the algorithm drivers (FedAvg / SplitFed / FedLite round
                   logic, cohort sampling — uniform or p_i-weighted — and
@@ -27,15 +27,26 @@ Seven layers, composed by `FederatedTrainer`:
                   rejected loudly; measured bytes validate the compressors'
                   ``analytic_bits``.
   network.py    — `ClientProfile` (asymmetric bandwidth, latency, compute
-                  multiplier, dropout) and fleet samplers: `uniform_fleet`
-                  (the IDEAL pre-subsystem clients), `lognormal_fleet`
-                  (heavy-tailed broadband), `mobile_fleet` (flaky mobile
-                  mixture).
-  scheduler.py  — a virtual-clock event loop dispatching rounds under a
+                  multiplier, dropout), the struct-of-arrays `ClientFleet`
+                  population (one float64 column per field — the
+                  representation the vectorized scheduler core runs on),
+                  and fleet samplers (all returning `ClientFleet`):
+                  `uniform_fleet` (the IDEAL pre-subsystem clients),
+                  `lognormal_fleet` (heavy-tailed broadband),
+                  `mobile_fleet` (flaky mobile mixture).
+  scheduler.py  — a virtual-clock round core dispatching rounds under a
                   participation policy: `FullSync`, `DropSlowestK`,
                   `Deadline`, or FedBuff-style `AsyncBuffer` whose
                   staleness weights are applied per contribution
-                  (``core/fedlite.make_weighted_step``).
+                  (``core/fedlite.make_weighted_step``). Two backends —
+                  the vectorized array core and the per-arrival heapq
+                  reference — produce bitwise-identical traces (see
+                  "Scaling fleets" below).
+  topology.py   — `TwoTierTopology`: a hierarchical aggregation tier
+                  (clients -> edge aggregators -> server) with clients
+                  k-means-clustered by simulated location; edges
+                  pre-combine their cluster's uplinks so the
+                  parameter-server link carries one payload per edge.
   trace.py      — per-round `RoundRecord`s (simulated wall-clock, measured
                   uplink AND downlink bytes, stragglers dropped, staleness,
                   per-participant shard placement) collected into a `Trace`
@@ -70,6 +81,43 @@ shard. Round wall-clock then scales with the shard count
 (``benchmarks/bench_network.py --executor mesh`` measures it), which is
 what lets cohort size become an autoscaler knob rather than a hardware
 ceiling.
+
+Scaling fleets (the vectorized scheduler core)
+----------------------------------------------
+The executor scales WHERE cohort math runs; the vectorized scheduler core
+scales HOW MANY clients the simulation can hold. Populations are
+struct-of-arrays (`ClientFleet`: one float64 column per profile field), so
+a million-client fleet is five arrays, not 10^6 boxed Python objects, and
+a round is a handful of whole-cohort array ops: one gather-and-add chain
+for every participant's ``downlink + compute + uplink`` round trip, one
+vectorized Bernoulli draw for dropouts, one stable argsort of arrival
+times, and a policy *prefix cut* on the sorted vector
+(``Policy.split_vector``). Python touches a round only at its boundary.
+``Scheduler(backend=...)`` selects the core: ``"vector"``, ``"heapq"``
+(the original per-arrival event loop, kept as the reference
+implementation), or ``"auto"`` (vector whenever the policy supports it —
+all four built-ins do; custom split-only policies fall back to heapq).
+Both backends evaluate the same IEEE-double expressions in the same
+association order and share one RNG draw sequence, so their traces are
+*bitwise identical* — asserted across fleet x policy x cohort in
+tests/test_fleet_scale.py, which makes the heapq backend a standing
+parity oracle for the array core. At 10^6 clients / 10^4-client cohorts
+the vector core runs a round in tens of milliseconds
+(``benchmarks/bench_network.py --fleet-scale`` measures it, and CI
+asserts the budget).
+
+Hierarchical aggregation rides the same scale: ``TwoTierTopology``
+(``topology.py``) k-means-clusters clients by simulated location into
+edge aggregators; each edge pre-combines its cluster's surviving uplinks
+(aggregation is linear, so sync-policy pre-combination is semantically
+free) and ships ONE edge payload over the edge->server hop, decongesting
+the parameter-server link. Round end under a topology is when the last
+participating edge's payload lands. Async buffers relay store-and-forward
+(per-contribution staleness must survive, so no pre-combination — every
+contribution pays the edge hop instead). The trace's byte ledger splits
+tiers — ``edge_uplink/<kind>`` vs ``server_uplink/<kind>`` — and
+`Trace.tier_totals` / `Trace.tier_bytes_per_round` expose where bytes
+flow; `TraceAutoscaler` observes both tier signals.
 
 Cross-round state (all default-off): `FederatedTrainer` can additionally
 carry cut-layer state across scheduler rounds — PQ codebook warm-start
@@ -127,8 +175,8 @@ a jit closure rebuilt per round retraces the step each call, a typo'd
 mesh axis explodes only at trace time on a real mesh, and a wire kind
 without an explicit decoder arm mis-decodes the *next* kind added. The
 `repro.lint` package (``python -m repro.lint src benchmarks examples``)
-checks all of these statically — five AST/jaxpr passes (host-sync,
-custom-vjp, mesh-axes, pallas, wire-format; catalogue in the
+checks all of these statically — six AST/jaxpr passes (fleet-scale,
+host-sync, custom-vjp, mesh-axes, pallas, wire-format; catalogue in the
 ``repro.lint`` docstring, ``--list-rules`` for the full list). CI's
 ``static-analysis`` job fails on any finding, and
 ``python -m benchmarks.run --preflight`` runs the identical gate before a
@@ -138,7 +186,11 @@ decision is visible in review. The host-sync pass additionally bans
 hand-rolled ``time.perf_counter()``/``print()`` instrumentation in the
 ``repro/federated`` and ``repro/core`` hot paths
 (``raw-timing-in-hot-path``): measurements belong in `repro.obs`
-spans/events so they land in the run's exportable two-lane log. ``wire.py``'s encoder bodies are pinned by
+spans/events so they land in the run's exportable two-lane log, and the
+fleet-scale pass (``python-loop-over-fleet``) bans per-client Python
+loops in ``repro/federated`` hot paths — fleet-sized iteration belongs
+on `ClientFleet` columns; the heapq reference backend's per-arrival code
+carries reviewed suppressions. ``wire.py``'s encoder bodies are pinned by
 AST hash in ``repro/lint/wire_manifest.json``: editing an encode body
 without bumping its version literal (and re-running ``python -m
 repro.lint --update-wire-manifest``) is a lint error, so old decoders can
@@ -161,10 +213,12 @@ from repro.federated.executor import (
 )
 from repro.federated.network import (
     IDEAL,
+    ClientFleet,
     ClientProfile,
     lognormal_fleet,
     mobile_fleet,
     uniform_fleet,
+    validate_fleet,
 )
 from repro.federated.runtime import (
     FederatedTrainer,
@@ -180,15 +234,17 @@ from repro.federated.scheduler import (
     FullSync,
     Scheduler,
 )
+from repro.federated.topology import TwoTierTopology
 from repro.federated.trace import RoundRecord, Trace
 from repro.federated import wire
 
 __all__ = [
-    "AsyncBuffer", "AutoscalePlan", "ClientProfile", "CohortExecutor",
-    "Deadline", "DropSlowestK", "FederatedTrainer", "FullSync", "IDEAL",
-    "MeshExecutor", "RoundRecord", "Scheduler", "StackedExecutor", "Trace",
-    "TraceAutoscaler", "autoscale_run", "available_executors",
-    "fedavg_round", "lognormal_fleet", "make_executor", "make_policy",
-    "mobile_fleet", "register_executor", "run_fedavg", "sample_clients",
-    "uniform_fleet", "weighted_average", "wire",
+    "AsyncBuffer", "AutoscalePlan", "ClientFleet", "ClientProfile",
+    "CohortExecutor", "Deadline", "DropSlowestK", "FederatedTrainer",
+    "FullSync", "IDEAL", "MeshExecutor", "RoundRecord", "Scheduler",
+    "StackedExecutor", "Trace", "TraceAutoscaler", "TwoTierTopology",
+    "autoscale_run", "available_executors", "fedavg_round",
+    "lognormal_fleet", "make_executor", "make_policy", "mobile_fleet",
+    "register_executor", "run_fedavg", "sample_clients", "uniform_fleet",
+    "validate_fleet", "weighted_average", "wire",
 ]

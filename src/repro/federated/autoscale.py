@@ -100,7 +100,17 @@ class TraceAutoscaler:
     max_cohort: int = 64
 
     def observe(self, trace: Trace) -> Dict[str, float]:
-        """The windowed signals every rule reads (also a benchmark row)."""
+        """The windowed signals every rule reads (also a benchmark row).
+
+        The two tier signals are observational (0.0 on flat-star runs):
+        under a two-tier topology ``bytes_per_round`` — which rule 3
+        budgets against — already includes both tiers via
+        ``RoundRecord.uplink_bytes``, and the split shows WHERE the bytes
+        flow: a congested parameter server shows up as
+        ``server_uplink_per_round`` growth, which more edges would
+        dilute, while ``edge_uplink_per_round`` only responds to cohort
+        size and codec moves.
+        """
         w = self.window
         return {
             "rounds": float(len(trace)),
@@ -109,6 +119,10 @@ class TraceAutoscaler:
             "bytes_per_round": trace.bytes_per_round(w),
             "p50_duration": trace.duration_percentile(50.0, w),
             "loss_slope": trace.loss_slope(w),
+            "edge_uplink_per_round": trace.tier_bytes_per_round(
+                "edge_uplink", w),
+            "server_uplink_per_round": trace.tier_bytes_per_round(
+                "server_uplink", w),
         }
 
     def recommend(self, trace: Trace,

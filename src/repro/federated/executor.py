@@ -55,6 +55,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.core.fedlite import (TrainState, make_mesh_step, make_train_step,
@@ -104,6 +105,20 @@ class CohortExecutor:
         with obs.span("executor.place", cat="executor", backend=self.name,
                       clients=len(participants)):
             return [dataclasses.replace(a, shard=0) for a in participants]
+
+    # ---- topology awareness ------------------------------------------------
+    def set_topology(self, topology: Any) -> None:
+        """Make placement cluster-aware under hierarchical aggregation.
+
+        The trainer calls this (after ``topology.ensure``) so ``place``
+        can co-locate clients of the same edge cluster on the same shard
+        — the shard-local partial sums then mirror the edges' partial
+        sums, keeping the pre-combination communication pattern aligned
+        between the simulation's tiers and the device mesh. The stacked
+        single-device path stores but ignores it.
+        """
+        self._cluster_of = None if topology is None \
+            else getattr(topology, "cluster_of", None)
 
     # ---- execution ---------------------------------------------------------
     def execute(self, state: TrainState, parts: Sequence[Dict],
@@ -212,11 +227,27 @@ class MeshExecutor(CohortExecutor):
                    self.num_shards)
 
     def place(self, participants):
+        """Contiguous-block shard assignment; cluster-major when a
+        topology is installed.
+
+        With ``set_topology``, participants are stably sorted by edge
+        cluster before the block split, so one shard's slice holds whole
+        clusters wherever sizes allow — the scheduler records ``place``'s
+        output order, so the trace, the executed cohort and the staleness
+        weights all follow the reordering consistently.
+        """
         with obs.span("executor.place", cat="executor", backend=self.name,
                       clients=len(participants)):
-            local = self._slot_count(len(participants)) // self.num_shards
+            parts = list(participants)
+            cluster_of = getattr(self, "_cluster_of", None)
+            if cluster_of is not None and parts:
+                order = np.argsort(
+                    np.asarray([int(cluster_of[a.client]) for a in parts]),
+                    kind="stable")
+                parts = [parts[i] for i in order]
+            local = self._slot_count(len(parts)) // self.num_shards
             return [dataclasses.replace(a, shard=i // local)
-                    for i, a in enumerate(participants)]
+                    for i, a in enumerate(parts)]
 
     # ---- execution ---------------------------------------------------------
     def _get_step(self, scope: str) -> Callable:

@@ -226,6 +226,16 @@ class FederatedTrainer:
     # "mesh(shards=N)" (shard_map over the `clients` device axis), or a
     # CohortExecutor instance.
     executor: Any = "stacked"
+    # topology: optional aggregation hierarchy (federated/topology.py) —
+    # None is the flat client->server star; TwoTierTopology(...) routes
+    # uploads through location-clustered edge aggregators (per-tier times
+    # on the virtual clock, edge_uplink/server_uplink ledger entries, and
+    # cluster-aware cohort placement on the mesh executor).
+    topology: Any = None
+    # scheduler_backend: "auto" (vectorized fleet-scale core whenever the
+    # policy supports it) | "vector" | "heapq" (per-arrival reference).
+    # Both backends produce bitwise-identical traces.
+    scheduler_backend: str = "auto"
 
     def __post_init__(self):
         pq = getattr(self.model, "pq", None)
@@ -301,6 +311,11 @@ class FederatedTrainer:
         validate_fleet(self.fleet, self.data.num_clients)
         if self.policy is None:
             self.policy = FullSync()
+        if self.topology is not None:
+            # cluster the fleet once up front so the executor's placement
+            # and every scheduler run see the same client->edge map
+            self.topology.ensure(self.data.num_clients)
+            self.executor.set_topology(self.topology)
         self.last_trace: Optional[Trace] = None
 
     def init_state(self, key: jax.Array) -> TrainState:
@@ -610,7 +625,9 @@ class FederatedTrainer:
         scheduler = Scheduler(fleet=self.fleet, policy=self.policy,
                               client_step_seconds=self.client_step_seconds,
                               server_step_seconds=self.server_step_seconds,
-                              seed=self.seed)
+                              seed=self.seed,
+                              backend=self.scheduler_backend,
+                              topology=self.topology)
         uplink, downlink = self.measure_round_bytes(
             state, jax.random.fold_in(key, 0))
         trace = scheduler.run(
@@ -634,7 +651,10 @@ class FederatedTrainer:
             "executor_shards": getattr(self.executor, "num_shards", 1),
             "uplink_wire_kind": self.last_wire_kinds[0],
             "downlink_wire_kind": self.last_wire_kinds[1],
+            "scheduler_backend": scheduler._resolve_backend(),
         })
+        if self.topology is not None:
+            trace.meta.update(self.topology.meta())
         trace.meta.update(self.last_codebook_meta)
 
         # one blocking transfer for the whole run

@@ -1,4 +1,4 @@
-"""Virtual-clock event scheduler for heterogeneous federated rounds.
+"""Virtual-clock round scheduler for heterogeneous federated fleets.
 
 The scheduler owns *time and participation*; it never touches model math.
 Each round it asks the caller for a cohort, simulates every client's
@@ -30,9 +30,49 @@ Policies
                          ``core/fedlite.make_weighted_step``), not as a
                          cohort-mean scale on the fused update.
 
-Determinism: given the same seed, fleet, policy and cohort stream, the
-event loop (a heapq keyed on (time, sequence number)) produces an
-identical trace — asserted by tests/test_scheduler.py.
+Backends
+--------
+Two interchangeable event cores produce **bitwise-identical traces**
+(tests/test_fleet_scale.py sweeps fleet x policy x cohort asserting it):
+
+  * ``backend="heapq"``  — the original per-arrival Python event loop.
+    Every cohort member becomes heap entries and `ClientProfile` method
+    calls; O(cohort) Python objects per round. Kept as the reference
+    implementation and parity oracle — it is the executable spec.
+  * ``backend="vector"`` — the fleet-scale core. The fleet is a
+    struct-of-arrays `ClientFleet`; per-round dropout draws, the whole
+    cohort's downlink/compute/uplink times, and the policy cut run as
+    array ops (one stable argsort + an O(1) prefix cut — the sort
+    subsumes the ``np.partition`` selection DropSlowestK alone would
+    need, because the trace records participants in arrival order).
+    Python appears only at round boundaries: ~10k-client rounds over a
+    10^6-client fleet cost milliseconds, not seconds
+    (``benchmarks/bench_network.py --fleet-scale`` tracks it).
+    `AsyncBuffer` cannot be a pure per-round array op — each completion
+    triggers a refill whose dispatch time depends on completion order —
+    so its vector core keeps a *lean* heap of ``(time, seq)`` scalar
+    tuples while everything per-dispatch (client stream, dropout draws,
+    round-trip times, staleness at flush) is precomputed in vectorized
+    waves; seq order == stream order == RNG draw order makes that exact.
+
+Parity rests on three invariants, pinned by tests: numpy float64
+elementwise ops are the same IEEE doubles as Python's scalar float ops
+when associated identically (`ClientFleet.round_trip_seconds` keeps the
+``(downlink + compute) + uplink`` order); one ``Generator.random(n)``
+call consumes the identical PCG64 stream as ``n`` scalar draws; and a
+stable argsort on arrival times reproduces heap pop order because heap
+ties break on the cohort sequence number.
+
+Topology: with ``topology=TwoTierTopology(...)`` uploads terminate on
+location-clustered edge aggregators that pre-combine their cluster's
+payloads before one edge->server backhaul hop (async: store-and-forward
+relay) — per-tier times on the virtual clock, per-tier
+``edge_uplink/server_uplink`` ledger entries. Both backends call the
+same `TwoTierTopology` array helpers, so parity is preserved under a
+topology by construction (see ``federated/topology.py``).
+
+Determinism: given the same seed, fleet, policy, cohort stream and
+backend, the trace is identical — asserted by tests/test_scheduler.py.
 """
 
 from __future__ import annotations
@@ -48,7 +88,7 @@ import numpy as np
 logger = logging.getLogger(__name__)
 
 from repro import obs
-from repro.federated.network import ClientProfile
+from repro.federated.network import ClientFleet, ClientProfile
 from repro.federated.trace import RoundRecord, Trace
 
 
@@ -71,18 +111,45 @@ class Arrival:
 # ---------------------------------------------------------------------------
 # participation policies
 # ---------------------------------------------------------------------------
+#
+# Each sync policy implements two equivalent cuts:
+#   split(arrivals, t_start)          — reference: list of Arrival objects,
+#                                       already sorted by (t_arrival, seq).
+#   split_vector(t_sorted, t_start)   — vector core: the sorted arrival-time
+#                                       array; returns (keep_count, t_end)
+#                                       where survivors are the first
+#                                       ``keep_count`` sorted entries.
+# The prefix-cut form exists because the scheduler hands every policy the
+# *stably sorted* arrival vector (the trace needs arrival order anyway), so
+# all three cuts are O(1)/O(log n) index arithmetic on it.
 
 class FullSync:
     """Aggregate every upload that was not lost to dropout."""
     name = "full_sync"
 
     def split(self, arrivals: List[Arrival], t_start: float):
-        t_end = max((a.t_arrival for a in arrivals), default=t_start)
+        t_end = max((a.t_arrival for a in arrivals), default=t_start)  # fedlint: disable=python-loop-over-fleet
         return list(arrivals), [], t_end
+
+    def split_vector(self, t_sorted: np.ndarray, t_start: float):
+        n = int(t_sorted.shape[0])
+        return n, (float(t_sorted[-1]) if n else t_start)
 
 
 class DropSlowestK:
-    """Cut the k slowest uploads; the round closes with the survivors."""
+    """Cut the k slowest uploads; the round closes with the survivors.
+
+    Edge semantics (pinned by tests in BOTH backends):
+
+      * ``k >= len(arrivals)`` keeps exactly ONE survivor — the fastest
+        upload — never zero: ``keep = max(len - k, 1)``. Cutting the
+        whole cohort would leave the server aggregating nothing while
+        still paying the round, so over-provisioned ``k`` degrades to
+        "fastest client wins" rather than a silent no-op round.
+      * Empty arrivals (the entire cohort dropped out before uploading)
+        keep zero and the round ends at ``t_start`` — there was never an
+        upload to wait for.
+    """
 
     def __init__(self, k: int):
         if k < 0:
@@ -97,9 +164,20 @@ class DropSlowestK:
         t_end = survivors[-1].t_arrival if survivors else t_start
         return survivors, cut, t_end
 
+    def split_vector(self, t_sorted: np.ndarray, t_start: float):
+        # selection needs no np.partition: t_sorted arrives fully sorted
+        n = int(t_sorted.shape[0])
+        keep = max(n - self.k, 1) if n else 0
+        return keep, (float(t_sorted[keep - 1]) if keep else t_start)
+
 
 class Deadline:
-    """Hard wall-clock budget per round; late uploads are dropped."""
+    """Hard wall-clock budget per round; late uploads are dropped.
+
+    An upload landing exactly on the cutoff survives (``<=``). With no
+    arrivals at all the round still ends at the cutoff — the server
+    waits out its budget before deciding nobody came.
+    """
 
     def __init__(self, seconds: float):
         if seconds <= 0:
@@ -109,13 +187,21 @@ class Deadline:
 
     def split(self, arrivals: List[Arrival], t_start: float):
         cutoff = t_start + self.seconds
-        survivors = [a for a in arrivals if a.t_arrival <= cutoff]
-        cut = [a for a in arrivals if a.t_arrival > cutoff]
+        survivors = [a for a in arrivals if a.t_arrival <= cutoff]  # fedlint: disable=python-loop-over-fleet
+        cut = [a for a in arrivals if a.t_arrival > cutoff]  # fedlint: disable=python-loop-over-fleet
         if cut:
             t_end = cutoff
         else:
             t_end = max((a.t_arrival for a in survivors), default=cutoff)
         return survivors, cut, t_end
+
+    def split_vector(self, t_sorted: np.ndarray, t_start: float):
+        n = int(t_sorted.shape[0])
+        cutoff = t_start + self.seconds
+        keep = int(np.searchsorted(t_sorted, cutoff, side="right"))
+        if keep < n:
+            return keep, cutoff
+        return keep, (float(t_sorted[-1]) if n else cutoff)
 
 
 class AsyncBuffer:
@@ -146,21 +232,35 @@ Policy = Any  # FullSync | DropSlowestK | Deadline | AsyncBuffer
 # on device; the caller converts at end of run)
 ExecuteFn = Callable[[int, Sequence[Arrival], Sequence[float]], Dict]
 
+_BACKENDS = ("auto", "vector", "heapq")
+
 
 @dataclasses.dataclass
 class Scheduler:
-    """Event-driven round driver over a fixed fleet of `ClientProfile`s.
+    """Round driver over a fixed fleet (`ClientFleet` or profile list).
 
     ``uplink_bytes`` / ``downlink_bytes`` are the measured per-client
     payload sizes (wire-codec bytes for FedLite, raw activation bytes for
     SplitFed, parameter bytes for FedAvg) — static per run because the
     payload layout is shape-determined.
+
+    ``backend`` selects the event core: ``"vector"`` (fleet-scale array
+    core), ``"heapq"`` (per-arrival reference), or ``"auto"`` (vector
+    whenever the policy provides ``split_vector`` or is `AsyncBuffer`;
+    custom policies exposing only ``split`` fall back to the reference
+    loop). Both produce bitwise-identical traces.
+
+    ``topology`` (optional, e.g. `TwoTierTopology`) inserts an edge
+    aggregation tier between clients and server — see the module
+    docstring and ``federated/topology.py``.
     """
     fleet: Sequence[ClientProfile]
     policy: Policy = dataclasses.field(default_factory=FullSync)
     client_step_seconds: float = 1.0
     server_step_seconds: float = 0.0
     seed: int = 0
+    backend: str = "auto"
+    topology: Optional[Any] = None
 
     def run(self, rounds: int, *,
             sample_cohort: Callable[[int], Sequence[int]],
@@ -180,14 +280,37 @@ class Scheduler:
         ``wire_kinds`` (optional) is the ``(uplink, downlink)`` wire-kind
         pair behind the per-client payload bytes ("pq", "dense",
         "sparse", "scalar", "pq-delta"); when given, every `RoundRecord`
-        carries a ``ledger`` of per-direction, per-kind byte totals.
+        carries a ``ledger`` of per-direction, per-kind byte totals —
+        split into ``edge_uplink``/``server_uplink`` tiers when a
+        topology is installed.
         """
         place = placement or (lambda parts: list(parts))
-        if isinstance(self.policy, AsyncBuffer):
-            return self._run_async(rounds, sample_cohort, uplink_bytes,
-                                   downlink_bytes, execute, place, wire_kinds)
-        return self._run_sync(rounds, sample_cohort, uplink_bytes,
-                              downlink_bytes, execute, place, wire_kinds)
+        if self.topology is not None:
+            self.topology.ensure(len(self.fleet))
+        backend = self._resolve_backend()
+        is_async = isinstance(self.policy, AsyncBuffer)
+        if backend == "vector":
+            runner = self._run_async_vector if is_async else \
+                self._run_sync_vector
+        else:
+            runner = self._run_async if is_async else self._run_sync
+        return runner(rounds, sample_cohort, uplink_bytes, downlink_bytes,
+                      execute, place, wire_kinds)
+
+    def _resolve_backend(self) -> str:
+        if self.backend not in _BACKENDS:
+            raise ValueError(
+                f"unknown scheduler backend {self.backend!r}; "
+                f"expected one of {_BACKENDS}")
+        vectorizable = isinstance(self.policy, AsyncBuffer) or \
+            hasattr(self.policy, "split_vector")
+        if self.backend == "vector" and not vectorizable:
+            raise ValueError(
+                f"policy {getattr(self.policy, 'name', self.policy)!r} has "
+                "no split_vector; use backend='heapq' or 'auto'")
+        if self.backend == "auto":
+            return "vector" if vectorizable else "heapq"
+        return self.backend
 
     # ---- shared -----------------------------------------------------------
     def _round_trip(self, p: ClientProfile, uplink_bytes: int,
@@ -198,14 +321,46 @@ class Scheduler:
 
     @staticmethod
     def _ledger(wire_kinds: Optional[Tuple[str, str]],
-                uplink_total: int, downlink_total: int) -> Dict[str, int]:
+                uplink_total: int, downlink_total: int,
+                tier_bytes: Optional[Tuple[int, int]] = None) -> Dict[str, int]:
+        """Per-direction, per-wire-kind byte entries for one record.
+
+        Flat star topology keys uplink traffic as ``uplink/<kind>``;
+        under a two-tier topology the same traffic splits into
+        ``edge_uplink/<kind>`` (client->edge, every completed upload) and
+        ``server_uplink/<kind>`` (edge->server backhaul) via
+        ``tier_bytes=(edge_total, server_total)``.
+        """
         if wire_kinds is None:
             return {}
         up_kind, down_kind = wire_kinds
-        return {f"uplink/{up_kind}": uplink_total,
-                f"downlink/{down_kind}": downlink_total}
+        if tier_bytes is None:
+            entries = {f"uplink/{up_kind}": uplink_total}
+        else:
+            entries = {f"edge_uplink/{up_kind}": tier_bytes[0],
+                       f"server_uplink/{up_kind}": tier_bytes[1]}
+        entries[f"downlink/{down_kind}"] = downlink_total
+        return entries
 
-    # ---- synchronous policies ---------------------------------------------
+    def _sync_uplink_accounting(self, n_arrivals: int, uplink_bytes: int,
+                                survivor_clients: np.ndarray,
+                                survivor_t: np.ndarray, t_policy_end: float,
+                                ) -> Tuple[float, int, Optional[Tuple[int, int]],
+                                           Optional[int]]:
+        """Apply the topology tier (if any) to one sync round's cut.
+
+        Returns ``(t_end, uplink_total, tier_bytes, edges)`` — shared by
+        both backends so their topology arithmetic is the same code.
+        """
+        flat_total = n_arrivals * uplink_bytes
+        if self.topology is None:
+            return float(t_policy_end), flat_total, None, None
+        t_end, edges, server_bytes = self.topology.sync_round(
+            survivor_clients, survivor_t, t_policy_end, uplink_bytes)
+        return t_end, flat_total + server_bytes, \
+            (flat_total, server_bytes), edges
+
+    # ---- synchronous policies: reference heapq backend --------------------
     def _run_sync(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
                   execute, place, wire_kinds=None) -> Trace:
         rng = np.random.default_rng(self.seed)
@@ -228,13 +383,19 @@ class Scheduler:
                     t_arr, _, cid = heapq.heappop(heap)
                     arrivals.append(Arrival(cid, rd, t_arr))
                 survivors, cut, t_end = self.policy.split(arrivals, t)
+                t_end, uplink_total, tier_bytes, edges = \
+                    self._sync_uplink_accounting(
+                        len(arrivals), uplink_bytes,
+                        np.asarray([a.client for a in survivors], np.int64),
+                        np.asarray([a.t_arrival for a in survivors]), t_end)
                 t_end += self.server_step_seconds
                 survivors = place(survivors)
                 metrics = execute(rd, survivors, [1.0] * len(survivors)) \
                     if survivors else {}
+            span_extra = {} if edges is None else {"edges": edges}
             obs.virtual_span("scheduler.round", t, t_end, round=rd,
                              participants=len(survivors),
-                             dropped=len(dropouts) + len(cut))
+                             dropped=len(dropouts) + len(cut), **span_extra)
             if cut:
                 obs.event("policy.cut", cat="scheduler", lane="virtual",
                           t=t_end, round=rd,
@@ -244,19 +405,91 @@ class Scheduler:
                 round=rd, t_start=t, t_end=t_end,
                 participants=tuple(a.client for a in survivors),
                 dropped=tuple(dropouts) + tuple(a.client for a in cut),
-                # every completed upload crossed the wire, aggregated or not
-                uplink_bytes=len(arrivals) * uplink_bytes,
+                # every completed upload crossed a wire, aggregated or not;
+                # under a topology this is both tiers' traffic
+                uplink_bytes=uplink_total,
                 downlink_bytes=len(ids) * downlink_bytes,
                 staleness=(0,) * len(survivors),
                 shards=tuple(a.shard for a in survivors),
                 metrics=metrics,
-                ledger=self._ledger(wire_kinds,
-                                    len(arrivals) * uplink_bytes,
-                                    len(ids) * downlink_bytes)))
+                ledger=self._ledger(wire_kinds, uplink_total,
+                                    len(ids) * downlink_bytes, tier_bytes)))
             t = t_end
         return trace
 
-    # ---- async buffer ------------------------------------------------------
+    # ---- synchronous policies: vectorized fleet-scale backend -------------
+    def _run_sync_vector(self, rounds, sample_cohort, uplink_bytes,
+                         downlink_bytes, execute, place,
+                         wire_kinds=None) -> Trace:
+        """Whole-cohort array core; Python only at round boundaries.
+
+        Per round: one vectorized dropout draw over the cohort (same RNG
+        stream as the reference's per-member scalar draws), one gathered
+        round-trip computation over the live members, one stable argsort
+        (reproducing heap pop order: ties break on cohort seq in both),
+        and an O(1) policy prefix cut. `Arrival` objects materialize for
+        survivors only — the executor/trace API stays object-based while
+        the 10^4..10^6-element math never touches Python.
+        """
+        fleet = ClientFleet.from_any(self.fleet)
+        rng = np.random.default_rng(self.seed)
+        trace = Trace()
+        t = 0.0
+        for rd in range(rounds):
+            with obs.span("scheduler.round", cat="scheduler", round=rd):
+                ids = np.asarray([int(c) for c in sample_cohort(rd)],
+                                 dtype=np.int64)
+                draws = rng.random(ids.shape[0])
+                alive = draws >= fleet.dropout_prob[ids]
+                dropouts = ids[~alive]
+                live = ids[alive]
+                dt = fleet.round_trip_seconds(live, uplink_bytes,
+                                              downlink_bytes,
+                                              self.client_step_seconds)
+                t_arrivals = t + dt
+                order = np.argsort(t_arrivals, kind="stable")
+                t_sorted = t_arrivals[order]
+                cid_sorted = live[order]
+                keep, t_end = self.policy.split_vector(t_sorted, t)
+                n_arrivals = int(t_sorted.shape[0])
+                t_end, uplink_total, tier_bytes, edges = \
+                    self._sync_uplink_accounting(
+                        n_arrivals, uplink_bytes, cid_sorted[:keep],
+                        t_sorted[:keep], t_end)
+                t_end += self.server_step_seconds
+                survivors = [Arrival(c, rd, ta) for c, ta in
+                             zip(cid_sorted[:keep].tolist(),
+                                 t_sorted[:keep].tolist())]
+                cut_clients = cid_sorted[keep:].tolist()
+                survivors = place(survivors)
+                metrics = execute(rd, survivors, [1.0] * len(survivors)) \
+                    if survivors else {}
+            span_extra = {} if edges is None else {"edges": edges}
+            obs.virtual_span("scheduler.round", t, t_end, round=rd,
+                             participants=len(survivors),
+                             dropped=int(dropouts.shape[0]) + len(cut_clients),
+                             **span_extra)
+            if cut_clients:
+                obs.event("policy.cut", cat="scheduler", lane="virtual",
+                          t=t_end, round=rd,
+                          policy=getattr(self.policy, "name", "?"),
+                          cut=cut_clients)
+            trace.append(RoundRecord(
+                round=rd, t_start=t, t_end=t_end,
+                participants=tuple(a.client for a in survivors),
+                dropped=tuple(dropouts.tolist()) + tuple(cut_clients),
+                uplink_bytes=uplink_total,
+                downlink_bytes=int(ids.shape[0]) * downlink_bytes,
+                staleness=(0,) * len(survivors),
+                shards=tuple(a.shard for a in survivors),
+                metrics=metrics,
+                ledger=self._ledger(wire_kinds, uplink_total,
+                                    int(ids.shape[0]) * downlink_bytes,
+                                    tier_bytes)))
+            t = t_end
+        return trace
+
+    # ---- async buffer: reference heapq backend ----------------------------
     def _run_async(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
                    execute, place, wire_kinds=None) -> Trace:
         """FedBuff loop: the initial cohort sets the concurrency; every
@@ -266,6 +499,10 @@ class Scheduler:
         policy: AsyncBuffer = self.policy
         rng = np.random.default_rng(self.seed)
         trace = Trace()
+        # async edges relay each contribution (no pre-combination: staleness
+        # weights are per contribution, known only at server flush)
+        relay_hop = 0.0 if self.topology is None else \
+            self.topology.relay_hop_seconds(uplink_bytes)
         # heap entries: (t_arrival, seq, client, version, was_dropped)
         heap: List[Tuple[float, int, int, int, bool]] = []
         seq = 0
@@ -284,7 +521,7 @@ class Scheduler:
             nonlocal seq
             p = self.fleet[cid]
             dropped = bool(rng.random() < p.dropout_prob)
-            dt = self._round_trip(p, uplink_bytes, downlink_bytes)
+            dt = self._round_trip(p, uplink_bytes, downlink_bytes) + relay_hop
             heapq.heappush(heap, (t + dt, seq, cid, ver, dropped))
             seq += 1
 
@@ -319,9 +556,11 @@ class Scheduler:
             buffer.append(Arrival(cid, ver, t_arr))
             if len(buffer) >= policy.buffer_size:
                 t_end = t_arr + self.server_step_seconds
+                # place BEFORE computing weights so staleness stays aligned
+                # with the (possibly reordered) cohort execute receives
+                buffer = place(buffer)
                 staleness = [version - a.version for a in buffer]
                 weights = [policy.staleness_weight(s) for s in staleness]
-                buffer = place(buffer)
                 with obs.span("scheduler.flush", cat="scheduler",
                               update=updates, buffered=len(buffer)):
                     metrics = execute(updates, buffer, weights)
@@ -331,23 +570,156 @@ class Scheduler:
                 version += 1
                 dispatch(next_client(), t_arr, version)  # slot sees new model
                 dispatches += 1
+                flat_total = len(buffer) * uplink_bytes
+                tier_bytes = None if self.topology is None else \
+                    (flat_total, flat_total)   # relayed 1:1, no combine
+                uplink_total = flat_total if tier_bytes is None else \
+                    tier_bytes[0] + tier_bytes[1]
                 trace.append(RoundRecord(
                     round=updates, t_start=t_round_start, t_end=t_end,
                     participants=tuple(a.client for a in buffer),
                     dropped=tuple(dropped_accum),
-                    uplink_bytes=len(buffer) * uplink_bytes,
+                    uplink_bytes=uplink_total,
                     downlink_bytes=dispatches * downlink_bytes,
                     staleness=tuple(staleness),
                     shards=tuple(a.shard for a in buffer),
                     metrics=metrics,
-                    ledger=self._ledger(wire_kinds,
-                                        len(buffer) * uplink_bytes,
-                                        dispatches * downlink_bytes)))
+                    ledger=self._ledger(wire_kinds, uplink_total,
+                                        dispatches * downlink_bytes,
+                                        tier_bytes)))
                 buffer, dropped_accum, dispatches = [], [], 0
                 t_round_start = t_end
                 updates += 1
             else:
                 dispatch(next_client(), t_arr, version)
+                dispatches += 1
+        return trace
+
+    # ---- async buffer: vectorized fleet-scale backend ---------------------
+    def _run_async_vector(self, rounds, sample_cohort, uplink_bytes,
+                          downlink_bytes, execute, place,
+                          wire_kinds=None) -> Trace:
+        """Lean-heap FedBuff core over a vectorized dispatch stream.
+
+        Asynchrony is inherently sequential — each completion triggers a
+        refill dispatch whose time depends on completion order — so a
+        heap survives; but its entries shrink to ``(time, seq)`` scalar
+        tuples and ALL per-dispatch work is precomputed in waves:
+        dispatch order consumes the cohort stream FIFO, so seq == stream
+        index == RNG draw order, and each wave's dropout draws and round
+        trips are single array ops. Staleness at flush is vectorized
+        against the per-seq version array.
+        """
+        policy: AsyncBuffer = self.policy
+        fleet = ClientFleet.from_any(self.fleet)
+        rng = np.random.default_rng(self.seed)
+        trace = Trace()
+        relay_hop = 0.0 if self.topology is None else \
+            self.topology.relay_hop_seconds(uplink_bytes)
+
+        # dispatch stream, extended one vectorized wave at a time
+        s_cid = np.empty(0, np.int64)     # stream idx -> client id
+        s_drop = np.empty(0, bool)        # stream idx -> dropout draw
+        s_dt = np.empty(0, np.float64)    # stream idx -> round-trip time
+        s_ver: List[int] = []             # stream idx -> model version seen
+        wave = 0
+        consumed = 0                      # next unused stream index
+
+        def extend_stream():
+            nonlocal s_cid, s_drop, s_dt, wave
+            ids = np.asarray([int(c) for c in sample_cohort(wave)],
+                             dtype=np.int64)
+            wave += 1
+            draws = rng.random(ids.shape[0])
+            dts = fleet.round_trip_seconds(ids, uplink_bytes, downlink_bytes,
+                                           self.client_step_seconds) \
+                + relay_hop
+            s_cid = np.concatenate([s_cid, ids])
+            s_drop = np.concatenate([s_drop, draws < fleet.dropout_prob[ids]])
+            s_dt = np.concatenate([s_dt, dts])
+            return int(ids.shape[0])
+
+        heap: List[Tuple[float, int]] = []   # (t_arrival, seq)
+
+        def dispatch(t: float, ver: int):
+            """Launch the next stream client at virtual time ``t``."""
+            nonlocal consumed
+            while consumed >= s_cid.shape[0]:
+                if extend_stream() == 0:
+                    raise ValueError("sample_cohort returned an empty cohort "
+                                     "while async slots need refilling")
+            s = consumed
+            consumed += 1
+            s_ver.append(ver)
+            heapq.heappush(heap, (t + float(s_dt[s]), s))
+
+        first_wave = extend_stream()
+        for _ in range(first_wave):
+            dispatch(0.0, 0)
+
+        version = 0
+        buffer: List[Tuple[float, int]] = []   # (t_arrival, stream idx)
+        dropped_accum: List[int] = []
+        dispatches = len(heap)
+        t_round_start = 0.0
+        updates = 0
+        consecutive_drops = 0
+        max_consecutive_drops = max(1000, 10 * len(fleet))
+        while updates < rounds and heap:
+            t_arr, s = heapq.heappop(heap)
+            if s_drop[s]:
+                dropped_accum.append(int(s_cid[s]))
+                dispatch(t_arr, version)
+                dispatches += 1
+                consecutive_drops += 1
+                if consecutive_drops >= max_consecutive_drops:
+                    logger.warning(
+                        "async scheduler: %d consecutive dropouts with no "
+                        "progress after %d updates; stopping early",
+                        consecutive_drops, updates)
+                    break
+                continue
+            consecutive_drops = 0
+            buffer.append((t_arr, s))
+            if len(buffer) >= policy.buffer_size:
+                t_end = t_arr + self.server_step_seconds
+                cohort = [Arrival(int(s_cid[i]), s_ver[i], ta)
+                          for ta, i in buffer]
+                cohort = place(cohort)
+                stal = version - np.asarray([a.version for a in cohort])
+                staleness = [int(x) for x in stal]
+                weights = [policy.staleness_weight(x) for x in staleness]
+                with obs.span("scheduler.flush", cat="scheduler",
+                              update=updates, buffered=len(cohort)):
+                    metrics = execute(updates, cohort, weights)
+                obs.virtual_span("scheduler.flush", t_round_start, t_end,
+                                 update=updates, buffered=len(cohort),
+                                 staleness_max=max(staleness))
+                version += 1
+                dispatch(t_arr, version)   # refilled slot sees new model
+                dispatches += 1
+                flat_total = len(cohort) * uplink_bytes
+                tier_bytes = None if self.topology is None else \
+                    (flat_total, flat_total)
+                uplink_total = flat_total if tier_bytes is None else \
+                    tier_bytes[0] + tier_bytes[1]
+                trace.append(RoundRecord(
+                    round=updates, t_start=t_round_start, t_end=t_end,
+                    participants=tuple(a.client for a in cohort),
+                    dropped=tuple(dropped_accum),
+                    uplink_bytes=uplink_total,
+                    downlink_bytes=dispatches * downlink_bytes,
+                    staleness=tuple(staleness),
+                    shards=tuple(a.shard for a in cohort),
+                    metrics=metrics,
+                    ledger=self._ledger(wire_kinds, uplink_total,
+                                        dispatches * downlink_bytes,
+                                        tier_bytes)))
+                buffer, dropped_accum, dispatches = [], [], 0
+                t_round_start = t_end
+                updates += 1
+            else:
+                dispatch(t_arr, version)
                 dispatches += 1
         return trace
 

@@ -95,6 +95,34 @@ class Trace:
                 out[k] = out.get(k, 0) + v
         return out
 
+    def tier_totals(self) -> Dict[str, int]:
+        """Whole-run bytes per aggregation tier (the ledger-key direction).
+
+        Flat star runs report ``{"uplink": ..., "downlink": ...}``; under
+        a two-tier topology the uplink splits into ``edge_uplink``
+        (client->edge last mile) and ``server_uplink`` (edge->server
+        backhaul — the PS-link traffic hierarchical aggregation shrinks).
+        """
+        out: Dict[str, int] = {}
+        for r in self.records:
+            for k, v in r.ledger.items():
+                tier = k.split("/", 1)[0]
+                out[tier] = out.get(tier, 0) + v
+        return out
+
+    def tier_bytes_per_round(self, tier: str,
+                             window: Optional[int] = None) -> float:
+        """Mean bytes/round on one tier over the window (0.0 when the run
+        recorded no such tier — e.g. ``server_uplink`` without a topology);
+        a windowed controller signal for `federated/autoscale.py`."""
+        recs = self.window(window)
+        if not recs:
+            return 0.0
+        prefix = tier + "/"
+        total = sum(v for r in recs for k, v in r.ledger.items()
+                    if k.startswith(prefix))
+        return total / len(recs)
+
     # ---- windowed observations (consumed by federated/autoscale.py) -------
     def window(self, n: Optional[int] = None) -> Sequence[RoundRecord]:
         """The last ``n`` records (all of them for ``None``)."""

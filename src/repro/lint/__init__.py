@@ -51,6 +51,14 @@ pallas (``pallas_checks.py``)
   * ``pallas-interpret-hardcoded`` — no ``interpret=True`` call kwargs or
     parameter defaults outside ``tests/``.
 
+fleet-scale (``fleet_loops.py``)
+  * ``python-loop-over-fleet`` — a ``for``/comprehension over a
+    fleet- or arrival-sized sequence (``fleet``/``arrivals``/
+    ``profiles``, incl. ``enumerate``/``zip``/``sorted`` wrappers) in
+    ``repro/federated/`` hot paths: O(population) interpreter work per
+    round — use the vectorized `ClientFleet`/sorted-arrival core; the
+    heapq reference backend carries reviewed suppressions.
+
 wire-format (``wire_checks.py``)
   * ``wire-kind-no-encoder`` / ``wire-kind-no-decoder`` — every
     ``KIND_*`` tag needs a ``.pack`` site and an explicit decode
@@ -76,12 +84,14 @@ from repro.lint.core import (Finding, LintPass, available_passes,
                              run_lint)
 
 # importing the pass modules registers them
+from repro.lint import fleet_loops as _fleet_loops
 from repro.lint import host_sync as _host_sync
 from repro.lint import mesh_axes as _mesh_axes
 from repro.lint import pallas_checks as _pallas_checks
 from repro.lint import vjp as _vjp
 from repro.lint import wire_checks as _wire_checks
 
+register_pass("fleet-scale", _fleet_loops.FleetLoopPass)
 register_pass("host-sync", _host_sync.HostSyncPass)
 register_pass("custom-vjp", _vjp.CustomVjpPass)
 register_pass("mesh-axes", _mesh_axes.MeshAxesPass)

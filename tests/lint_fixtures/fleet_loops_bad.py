@@ -1,0 +1,31 @@
+"""Seeded violations for the fleet-scale pass.
+
+Loaded by tests/test_lint.py under a ``src/repro/federated/`` pseudo-path
+(the pass only fires on federated hot paths, so the standard ``fixtures/``
+pseudo-path would silence it)."""
+
+
+def total_latency(fleet):
+    total = 0.0
+    for p in fleet:  # SEED: python-loop-over-fleet
+        total += p.latency_s
+    return total
+
+
+def slowest(arrivals):
+    worst = None
+    for i, a in enumerate(arrivals):  # SEED: python-loop-over-fleet
+        if worst is None or a.t_arrival > worst.t_arrival:
+            worst = a
+    return worst
+
+
+def uplinks(profiles, nbytes):
+    return [p.uplink_seconds(nbytes) for p in profiles]  # SEED: python-loop-over-fleet
+
+
+def pair_up(fleet, arrivals):
+    out = {}
+    for p, a in zip(fleet, sorted(arrivals)):  # SEED: python-loop-over-fleet
+        out[a.client] = p
+    return out

@@ -1,0 +1,376 @@
+"""Fleet-scale scheduler core: backend parity, `ClientFleet`, topology.
+
+The vectorized scheduler backend exists to make 10^6-client fleets cheap;
+its contract is that it is *bitwise indistinguishable* from the heapq
+reference event loop. These tests sweep fleet x policy x cohort asserting
+record-for-record trace equality (with and without a two-tier topology),
+pin the policy edge semantics in BOTH backends, and unit-test the
+struct-of-arrays `ClientFleet` and the `TwoTierTopology` helpers.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.federated import (AsyncBuffer, ClientFleet, ClientProfile,
+                             Deadline, DropSlowestK, FullSync, Scheduler,
+                             TwoTierTopology, lognormal_fleet, mobile_fleet,
+                             uniform_fleet, validate_fleet)
+from repro.federated.network import IDEAL, transfer_seconds
+from repro.federated.topology import kmeans_points, simulate_locations
+
+
+def _run(fleet, policy, backend, rounds=5, cohort=4, topology=None,
+         seed=0, wire_kinds=None, uplink=1000, downlink=4000):
+    """Drive one scheduler run with a stub execute and a cohort stream
+    that is deterministic across calls (so backends see identical rounds)."""
+    rng = np.random.default_rng(99)
+    cohorts = [rng.choice(len(fleet), cohort, replace=False)
+               for _ in range(rounds + 64)]
+    sched = Scheduler(fleet=fleet, policy=policy, seed=seed, backend=backend,
+                      topology=topology)
+    return sched.run(rounds, sample_cohort=lambda rd: cohorts[rd],
+                     uplink_bytes=uplink, downlink_bytes=downlink,
+                     execute=lambda i, parts, w: {"loss": float(len(parts))},
+                     wire_kinds=wire_kinds)
+
+
+def _fleets():
+    return {
+        "uniform": uniform_fleet(12, ClientProfile(dropout_prob=0.2)),
+        "lognormal": lognormal_fleet(12, median_uplink_bps=2e6,
+                                     dropout_prob=0.1, seed=3),
+        "mobile": mobile_fleet(12, flaky_fraction=0.5, seed=7),
+    }
+
+
+def _policies():
+    return {
+        "full_sync": FullSync(),
+        "drop_slowest_3": DropSlowestK(3),
+        "deadline_2.5": Deadline(2.5),
+        "async_4": AsyncBuffer(4),
+    }
+
+
+# ---------------------------------------------------------------------------
+# bitwise backend parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fleet_name", sorted(_fleets()))
+@pytest.mark.parametrize("policy_name", sorted(_policies()))
+@pytest.mark.parametrize("cohort", [4, 9])
+def test_backend_traces_bitwise_identical(fleet_name, policy_name, cohort):
+    """heapq vs vector: every RoundRecord field equal — including float
+    times, which must be the same IEEE doubles, not approximately so."""
+    fleet = _fleets()[fleet_name]
+    policy = _policies()[policy_name]
+    ref = _run(fleet, policy, "heapq", cohort=cohort,
+               wire_kinds=("pq", "dense"))
+    vec = _run(fleet, policy, "vector", cohort=cohort,
+               wire_kinds=("pq", "dense"))
+    assert len(ref) == len(vec)
+    for a, b in zip(ref, vec):
+        assert a == b  # dataclass equality: exact floats, tuples, ledger
+
+
+@pytest.mark.parametrize("policy_name", sorted(_policies()))
+def test_backend_parity_holds_under_two_tier_topology(policy_name):
+    fleet = _fleets()["mobile"]
+    policy = _policies()[policy_name]
+    traces = []
+    for backend in ("heapq", "vector"):
+        topo = TwoTierTopology(num_edges=4, seed=0)
+        traces.append(_run(fleet, policy, backend, topology=topo,
+                           wire_kinds=("pq", "dense")))
+    assert traces[0].records == traces[1].records
+
+
+def test_auto_backend_matches_explicit_vector():
+    fleet = _fleets()["lognormal"]
+    auto = _run(fleet, DropSlowestK(2), "auto")
+    vec = _run(fleet, DropSlowestK(2), "vector")
+    assert auto.records == vec.records
+
+
+# ---------------------------------------------------------------------------
+# policy edge semantics, pinned in BOTH backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_drop_slowest_overprovisioned_k_keeps_one_survivor(backend):
+    """k >= cohort size degrades to "fastest client wins", never zero:
+    keep = max(len(arrivals) - k, 1)."""
+    fleet = uniform_fleet(8)  # no dropout: all 4 uploads arrive
+    trace = _run(fleet, DropSlowestK(10), backend, cohort=4)
+    for r in trace:
+        assert len(r.participants) == 1
+        assert len(r.dropped) == 3
+
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_drop_slowest_empty_arrivals_round_is_instant(backend):
+    """The whole cohort dropping out leaves nothing to wait for: zero
+    survivors and t_end == t_start."""
+    fleet = uniform_fleet(8, ClientProfile(dropout_prob=1.0))
+    trace = _run(fleet, DropSlowestK(1), backend, rounds=3)
+    for r in trace:
+        assert r.participants == ()
+        assert len(r.dropped) == 4
+        assert r.t_end == r.t_start
+        assert r.uplink_bytes == 0
+
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_deadline_empty_arrivals_waits_out_the_budget(backend):
+    """With no arrivals the server still waits out its budget before
+    deciding nobody came: t_end == t_start + deadline."""
+    fleet = uniform_fleet(8, ClientProfile(dropout_prob=1.0))
+    trace = _run(fleet, Deadline(2.5), backend, rounds=3)
+    for r in trace:
+        assert r.participants == ()
+        assert r.duration == pytest.approx(2.5)
+
+
+def test_explicit_vector_backend_rejects_split_only_policy():
+    class SplitOnly:
+        name = "split_only"
+
+        def split(self, arrivals, t_start):
+            return list(arrivals), [], t_start
+
+    with pytest.raises(ValueError, match="split_vector"):
+        _run(uniform_fleet(4), SplitOnly(), "vector", rounds=1)
+    # auto falls back to the reference loop and still runs
+    trace = _run(uniform_fleet(4), SplitOnly(), "auto", rounds=2)
+    assert len(trace) == 2
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="backend"):
+        _run(uniform_fleet(4), FullSync(), "simd", rounds=1)
+
+
+# ---------------------------------------------------------------------------
+# per-tier byte accounting under the two-tier topology
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_two_tier_ledger_splits_uplink_by_tier(backend):
+    topo = TwoTierTopology(num_edges=4, payload_overhead_bytes=8, seed=0)
+    fleet = uniform_fleet(12)
+    trace = _run(fleet, FullSync(), backend, cohort=6, topology=topo,
+                 wire_kinds=("pq", "dense"), uplink=1000, downlink=4000)
+    tiers = trace.tier_totals()
+    assert set(tiers) == {"edge_uplink", "server_uplink", "downlink"}
+    for r in trace:
+        edge = r.ledger["edge_uplink/pq"]
+        server = r.ledger["server_uplink/pq"]
+        # every client->edge upload crossed the last mile ...
+        assert edge == 6 * 1000
+        # ... while the PS link carried one combined payload per
+        # participating edge (sum + count header)
+        n_edges = len(set(int(topo.cluster_of[c]) for c in r.participants))
+        assert server == n_edges * (1000 + 8)
+        assert server < edge
+        # RoundRecord.uplink_bytes is the sum of both tiers
+        assert r.uplink_bytes == edge + server
+    assert tiers["edge_uplink"] + tiers["server_uplink"] \
+        == trace.total_uplink_bytes
+
+
+def test_flat_star_ledger_has_no_tier_split():
+    trace = _run(uniform_fleet(8), FullSync(), "vector",
+                 wire_kinds=("pq", "dense"))
+    tiers = trace.tier_totals()
+    assert set(tiers) == {"uplink", "downlink"}
+    assert trace.tier_bytes_per_round("server_uplink") == 0.0
+    assert trace.tier_bytes_per_round("uplink") > 0.0
+
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_topology_edge_hop_extends_the_round(backend):
+    """A slow backhaul must push t_end past the flat-star round end."""
+    slow = TwoTierTopology(num_edges=2, edge_uplink_bps=1e3,
+                           edge_latency_s=1.0, seed=0)
+    flat = _run(uniform_fleet(8, ClientProfile(uplink_bps=1e6)),
+                FullSync(), backend)
+    edged = _run(uniform_fleet(8, ClientProfile(uplink_bps=1e6)),
+                 FullSync(), backend, topology=slow)
+    for f, e in zip(flat, edged):
+        assert e.t_end > f.t_end
+
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_async_topology_relays_without_precombination(backend):
+    """Async edges are store-and-forward: each contribution pays the
+    relay hop (longer rounds) and the server tier carries every payload
+    1:1 — no combine, because staleness weights are per contribution."""
+    topo = TwoTierTopology(num_edges=2, edge_uplink_bps=1e6,
+                           edge_latency_s=0.5, seed=0)
+    fleet = uniform_fleet(8, ClientProfile(uplink_bps=1e6))
+    flat = _run(fleet, AsyncBuffer(3), backend, wire_kinds=("pq", "dense"))
+    edged = _run(fleet, AsyncBuffer(3), backend, topology=topo,
+                 wire_kinds=("pq", "dense"))
+    assert edged.simulated_seconds > flat.simulated_seconds
+    tiers = edged.tier_totals()
+    assert tiers["edge_uplink"] == tiers["server_uplink"]  # 1:1 relay
+
+
+# ---------------------------------------------------------------------------
+# ClientFleet: construction, validation, adapter protocol
+# ---------------------------------------------------------------------------
+
+def test_fleet_from_profiles_roundtrips_rows():
+    profiles = [ClientProfile(uplink_bps=1e6 * (i + 1), latency_s=0.01 * i,
+                              compute_multiplier=1.0 + i,
+                              dropout_prob=0.1 * i) for i in range(5)]
+    fleet = ClientFleet.from_profiles(profiles)
+    assert len(fleet) == 5
+    for i, p in enumerate(profiles):
+        assert fleet[i] == p                      # int index -> ClientProfile
+    assert [p.latency_s for p in fleet] == [p.latency_s for p in profiles]
+    sub = fleet[1:3]                              # slice -> ClientFleet
+    assert isinstance(sub, ClientFleet) and len(sub) == 2
+    assert isinstance(fleet[np.array([0, 4])], ClientFleet)
+    assert ClientFleet.from_any(fleet) is fleet
+    assert ClientFleet.from_any(profiles)[0] == profiles[0]
+
+
+def test_fleet_bulk_validation_mirrors_profile_validation():
+    ClientFleet.from_profiles([IDEAL])  # baseline constructs fine
+    with pytest.raises(ValueError, match="bandwidth"):
+        ClientFleet(uplink_bps=np.array([1e6, -1.0]),
+                    downlink_bps=np.ones(2), latency_s=np.zeros(2),
+                    compute_multiplier=np.ones(2), dropout_prob=np.zeros(2))
+    with pytest.raises(ValueError, match="dropout_prob"):
+        ClientFleet(uplink_bps=np.ones(2), downlink_bps=np.ones(2),
+                    latency_s=np.zeros(2), compute_multiplier=np.ones(2),
+                    dropout_prob=np.array([0.5, 1.5]))
+    with pytest.raises(ValueError, match="shared"):
+        ClientFleet(uplink_bps=np.ones(3), downlink_bps=np.ones(2),
+                    latency_s=np.zeros(2), compute_multiplier=np.ones(2),
+                    dropout_prob=np.zeros(2))
+
+
+def test_vectorized_times_bitwise_match_scalar_profiles():
+    fleet = lognormal_fleet(32, median_uplink_bps=3e6, seed=11)
+    ids = np.arange(32)
+    vec = fleet.round_trip_seconds(ids, 1000, 4000, 1.0)
+    for i in range(32):
+        p = fleet[i]
+        scalar = (p.downlink_seconds(4000) + p.compute_seconds(1.0)) \
+            + p.uplink_seconds(1000)
+        assert vec[i] == scalar  # exact equality, not approx
+    # zero-byte transfers are free (skip the latency term) in both paths
+    assert fleet.uplink_seconds(0, ids).tolist() == [0.0] * 32
+    assert transfer_seconds(0, 1e6, 0.5) == 0.0
+    # infinite bandwidth costs only latency, elementwise as in scalar
+    ideal = uniform_fleet(3)
+    assert ideal.round_trip_seconds(np.arange(3), 10, 10, 1.0).tolist() \
+        == [1.0] * 3
+
+
+def test_samplers_return_fleets_and_validate_length():
+    for fleet in (uniform_fleet(6), lognormal_fleet(6),
+                  mobile_fleet(6, seed=2)):
+        assert isinstance(fleet, ClientFleet) and len(fleet) == 6
+        validate_fleet(fleet, 6)
+        with pytest.raises(ValueError, match="profiles"):
+            validate_fleet(fleet, 7)
+    validate_fleet([IDEAL, IDEAL], 2)  # profile lists still accepted
+
+
+def test_mobile_fleet_mixture_has_both_populations():
+    fleet = mobile_fleet(200, flaky_fraction=0.3, seed=0)
+    mobile = fleet.dropout_prob > 0
+    assert 0 < mobile.sum() < 200
+    assert np.all(fleet.compute_multiplier[mobile] == 3.0)
+    assert np.all(fleet.compute_multiplier[~mobile] == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# topology helpers: locations, k-means, lifecycle
+# ---------------------------------------------------------------------------
+
+def test_kmeans_partitions_hotspot_points():
+    pts = simulate_locations(2000, hotspots=6, seed=0)
+    labels, centers = kmeans_points(pts, 8, iters=6, seed=0, chunk=300)
+    assert labels.shape == (2000,) and centers.shape == (8, 2)
+    assert labels.min() >= 0 and labels.max() < 8
+    # clustering must beat a single global centroid on within-cluster SSE
+    sse = ((pts - centers[labels]) ** 2).sum()
+    sse_one = ((pts - pts.mean(axis=0)) ** 2).sum()
+    assert sse < 0.5 * sse_one
+    # chunking is an implementation detail: same labels regardless
+    labels2, _ = kmeans_points(pts, 8, iters=6, seed=0, chunk=2048)
+    assert np.array_equal(labels, labels2)
+
+
+def test_kmeans_degenerate_shapes():
+    pts = np.random.default_rng(0).uniform(size=(3, 2))
+    labels, centers = kmeans_points(pts, 5)
+    assert labels.tolist() == [0, 1, 2] and centers.shape == (3, 2)
+    with pytest.raises(ValueError):
+        kmeans_points(pts, 0)
+
+
+def test_topology_lifecycle_and_meta():
+    topo = TwoTierTopology(num_edges=3, seed=0)
+    with pytest.raises(RuntimeError, match="ensure"):
+        topo.sync_round(np.array([0]), np.array([1.0]), 1.0, 100)
+    topo.ensure(50)
+    first = topo.cluster_of
+    topo.ensure(50)                      # idempotent: same clustering
+    assert topo.cluster_of is first
+    with pytest.raises(ValueError, match="clustered"):
+        topo.ensure(60)
+    with pytest.raises(ValueError, match="num_edges"):
+        TwoTierTopology(num_edges=0)
+    meta = topo.meta()
+    assert meta["topology"] == "two_tier" and meta["topology_edges"] == 3
+
+
+def test_sync_round_empty_survivors():
+    topo = TwoTierTopology(num_edges=3, seed=0)
+    topo.ensure(10)
+    t_end, edges, server_bytes = topo.sync_round(
+        np.array([], dtype=np.int64), np.array([]), 4.5, 1000)
+    assert (t_end, edges, server_bytes) == (4.5, 0, 0)
+
+
+def test_sync_round_times_and_bytes():
+    topo = TwoTierTopology(num_edges=2, edge_uplink_bps=1e6,
+                           edge_latency_s=0.25, payload_overhead_bytes=8,
+                           seed=0)
+    topo.ensure(4)
+    survivors = np.arange(4)
+    t = np.array([1.0, 2.0, 3.0, 4.0])
+    t_end, edges, server_bytes = topo.sync_round(survivors, t, 4.0, 1000)
+    hop = 0.25 + (1000 + 8) * 8.0 / 1e6
+    assert t_end == pytest.approx(4.0 + hop)
+    assert edges == len(set(topo.cluster_of[:4].tolist()))
+    assert server_bytes == edges * 1008
+    # a late policy decision time dominates a fast backhaul
+    t_end2, _, _ = topo.sync_round(survivors, t, 100.0, 1000)
+    assert t_end2 == 100.0
+
+
+# ---------------------------------------------------------------------------
+# fleet-scale smoke (small enough for tier-1; the 10^6 cell lives in
+# benchmarks/bench_network.py --fleet-scale)
+# ---------------------------------------------------------------------------
+
+def test_vector_backend_scales_to_a_large_fleet_smoke():
+    fleet = lognormal_fleet(50_000, dropout_prob=0.01, seed=1)
+    topo = TwoTierTopology(num_edges=8, seed=0)
+    trace = _run(fleet, DropSlowestK(50), "vector", rounds=3, cohort=500,
+                 topology=topo, wire_kinds=("pq", "dense"))
+    assert len(trace) == 3
+    for r in trace:
+        # 500 sampled = survivors + (straggler cuts + dropouts)
+        assert len(r.participants) + len(r.dropped) == 500
+        assert len(r.dropped) >= 50  # at least the k cut stragglers
+    tiers = trace.tier_totals()
+    assert tiers["server_uplink"] < tiers["edge_uplink"]

@@ -86,7 +86,49 @@ def test_every_pass_is_exercised_by_a_fixture(tmp_manifest):
     for name in BAD_FIXTURES:
         for f in run_passes([_load(name)], make_passes()):
             hit.add(f.pass_name)
+    for f in run_passes([_load_federated("fleet_loops_bad.py")],
+                        make_passes()):
+        hit.add(f.pass_name)
     assert hit == set(available_passes())
+
+
+# ---------------------------------------------------------------------------
+# fleet-scale pass: path-gated to repro/federated/ hot paths
+# ---------------------------------------------------------------------------
+
+def _load_federated(name: str) -> Module:
+    """The fleet-scale pass only fires inside ``repro/federated/`` non-test
+    paths, so its fixtures load under a federated pseudo-path instead of
+    the standard ``fixtures/`` one."""
+    return Module(f"src/repro/federated/{name}",
+                  (FIXTURES / name).read_text())
+
+
+def test_fleet_loop_seeded_violations(tmp_manifest):
+    mod = _load_federated("fleet_loops_bad.py")
+    expected = _seeds(mod.source)
+    assert expected, "fleet_loops_bad.py has no SEED markers"
+    got = sorted({(f.rule, f.line)
+                  for f in run_passes([mod], make_passes())})
+    assert got == expected
+
+
+def test_fleet_loop_clean_fixture(tmp_manifest):
+    """Vectorized idiom, cohort-sized loops and a reviewed suppression all
+    lint clean under the hot-path pseudo-path."""
+    findings = run_passes([_load_federated("fleet_loops_clean.py")],
+                          make_passes())
+    assert findings == []
+
+
+def test_fleet_loop_pass_is_path_gated(tmp_manifest):
+    src = (FIXTURES / "fleet_loops_bad.py").read_text()
+    # outside repro/federated/: not a hot path, nothing fires
+    assert run_passes([Module("fixtures/fleet_loops_bad.py", src)],
+                      make_passes(["fleet-scale"])) == []
+    # federated test files are exempt too
+    assert run_passes([Module("src/repro/federated/test_x.py", src)],
+                      make_passes(["fleet-scale"])) == []
 
 
 # ---------------------------------------------------------------------------
@@ -121,9 +163,9 @@ def test_file_suppression_and_disable_all(tmp_manifest):
 # framework: registry, findings, JSON schema
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_the_five_passes():
-    assert available_passes() == ("custom-vjp", "host-sync", "mesh-axes",
-                                  "pallas", "wire-format")
+def test_registry_lists_the_six_passes():
+    assert available_passes() == ("custom-vjp", "fleet-scale", "host-sync",
+                                  "mesh-axes", "pallas", "wire-format")
 
 
 def test_unknown_pass_selection_fails_loudly():

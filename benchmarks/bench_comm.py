@@ -89,8 +89,8 @@ def run(fast: bool = True):
     overhead_bits = len(payload) * 8 - analytic_bits
     assert len(payload) * 8 == wire.wire_bits(pq, B, d, "float16"), \
         "measured payload disagrees with wire_bits"
-    assert 0 <= overhead_bits <= wire.HEADER_BYTES * 8 + 7, \
-        f"wire overhead {overhead_bits} bits exceeds the documented header"
+    assert 0 <= overhead_bits <= (wire.HEADER_BYTES + wire.CRC_BYTES) * 8 + 7, \
+        f"wire overhead {overhead_bits} bits exceeds the documented frame"
     rows.append({
         "name": "femnist_wire_measured_b20_q1152_L2",
         "us_per_call": 0.0,
@@ -113,10 +113,11 @@ def run(fast: bool = True):
     reduction = dense_bytes / len(dl_payload)
     assert reduction >= 8.0, \
         f"downlink reduction {reduction:.2f}x below the 8x acceptance bar"
-    # wire overhead: one header per chain stage + <1 B packing pad each
+    # wire overhead: header + CRC trailer per chain stage + <1 B pad each
     dl_overhead = len(dl_payload) * 8 - dl_analytic
-    assert 0 <= dl_overhead <= 2 * (wire.HEADER_BYTES * 8 + 7), \
-        f"downlink wire overhead {dl_overhead} bits exceeds stage headers"
+    assert 0 <= dl_overhead <= \
+        2 * ((wire.HEADER_BYTES + wire.CRC_BYTES) * 8 + 7), \
+        f"downlink wire overhead {dl_overhead} bits exceeds stage frames"
     rec = wire.reconstruct(wire.decode_payload(dl_payload))
     assert np.isfinite(rec).all()
     rows.append({
@@ -153,8 +154,11 @@ def run(fast: bool = True):
         assert (wb.codes == np.asarray(qb1_.codes)).all()
         np.testing.assert_array_equal(wb.codebooks, recon)  # closed loop
         cb_full = int(np.prod(pq_lm.codebook_shape(d_lm))) * 2  # fp16 bytes
-        code_bytes = len(full) - wire.HEADER_BYTES - cb_full
-        cb_delta = len(delta) - wire.HEADER_BYTES - code_bytes
+        # frame = header + body + CRC trailer in both directions; the
+        # delta body's epoch word/scale live in its codebook component
+        code_bytes = len(full) - wire.HEADER_BYTES - wire.CRC_BYTES - cb_full
+        cb_delta = len(delta) - wire.HEADER_BYTES - wire.CRC_BYTES \
+            - code_bytes
         reduction = cb_full / cb_delta
         assert reduction >= 1.5, \
             f"{row_name}: codebook reduction {reduction:.2f}x below 1.5x"

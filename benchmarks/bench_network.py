@@ -77,9 +77,10 @@ from benchmarks.common import emit, write_bench_json
 from repro import obs
 from repro.core.quantizer import PQConfig
 from repro.data.synthetic import make_federated_image_data
-from repro.federated import (AsyncBuffer, AutoscalePlan, Deadline,
-                             DropSlowestK, FederatedTrainer, FullSync,
-                             Scheduler, TraceAutoscaler, TwoTierTopology,
+from repro.federated import (DEFAULT_CHAOS, AsyncBuffer, AutoscalePlan,
+                             Deadline, DropSlowestK, FaultPlan,
+                             FederatedTrainer, FullSync, Scheduler,
+                             TraceAutoscaler, TwoTierTopology,
                              autoscale_run, lognormal_fleet, make_policy,
                              mobile_fleet, uniform_fleet)
 from repro.models.paper_models import FemnistCNN
@@ -133,7 +134,7 @@ FAST_SCENARIOS = [
 
 def _run_cell(data, fleet, policy, pq, downlink, rounds, fast,
               warm_start=False, delta_bits=None, executor="stacked",
-              cohort=COHORT):
+              cohort=COHORT, fault_plan=None):
     # the mesh executor runs per-client math: give the model the matching
     # per-client quantization granularity so both executors cluster alike
     client_batch = CLIENT_BATCH if executor != "stacked" else 0
@@ -143,7 +144,7 @@ def _run_cell(data, fleet, policy, pq, downlink, rounds, fast,
         client_batch=CLIENT_BATCH, quantize=pq is not None,
         fleet=fleet, policy=policy, downlink_compressor=downlink,
         warm_start=warm_start, codebook_delta_bits=delta_bits,
-        executor=executor)
+        executor=executor, fault_plan=fault_plan)
     t0 = time.perf_counter()
     state, hist = trainer.run(rounds, jax.random.PRNGKey(0))
     wall_us = (time.perf_counter() - t0) * 1e6 / max(rounds, 1)
@@ -175,7 +176,7 @@ def _run_cell(data, fleet, policy, pq, downlink, rounds, fast,
 
 def run(fast: bool = True, downlink: bool = False,
         executor: str = "stacked", autoscale: bool = False,
-        fleet_scale: bool = False):
+        fleet_scale: bool = False, chaos: bool = False):
     data = make_federated_image_data(num_clients=NUM_CLIENTS, seed=0)
     fleets, policies, pqs = _fleets(), _policies(), _compressions()
     scenarios = FAST_SCENARIOS if fast else \
@@ -202,6 +203,8 @@ def run(fast: bool = True, downlink: bool = False,
                                         fast))
     if downlink:
         rows.extend(run_downlink_sweep(data, fleets, policies, rounds, fast))
+    if chaos:
+        rows.extend(run_chaos_cell(data, fleets, policies, rounds, fast))
     if executor == "mesh":
         rows.extend(run_executor_scaling())
     if autoscale:
@@ -236,6 +239,70 @@ def run_warm_start_cell(data, fleets, policies, rounds, fast):
                  meta.get("codebook_bytes_reduction", 0.0), 2),
              "warm_iters": pq.effective_warm_iters,
              "cold_iters": pq.kmeans_iters}]
+
+
+def run_chaos_cell(data, fleets, policies, rounds, fast):
+    """The --chaos dimension: seeded fault injection (federated/faults.py)
+    over fault-rate x straggler-policy cells on the lognormal fleet.
+
+    Asserts graceful degradation (acceptance criteria):
+      * the baseline-rate full-sync cell still reaches the target loss —
+        quarantine + retry keep training on track;
+      * downlink byte inflation from crash retries stays bounded
+        (<= 1.5x the fault-free cell);
+      * the chaos canary holds: contributions were quarantined, and NO
+        corrupted payload ever slipped past the wire CRC undetected.
+    """
+    pq = _compressions()["fedlite_q1152_L2"]
+    # chaos cells need headroom past the fault-free round count: voided
+    # and quarantined rounds make no progress by design
+    rounds = rounds * 2
+    clean, _, _ = _run_cell(data, fleets["lognormal"],
+                            policies["full_sync"], pq, None, rounds, fast)
+    clean_dl = clean["downlink_mb_per_round"]
+    plans = {
+        "baseline": DEFAULT_CHAOS,
+        "storm": FaultPlan(seed=0, crash_rate=0.2, corrupt_rate=0.25,
+                           poison_rate=0.1, reorder_rate=0.4,
+                           reorder_max_s=2.0, quorum_fraction=0.5),
+    }
+    rows = []
+    totals = {}
+    for plan_name, plan in plans.items():
+        for policy_name in ("full_sync", "drop_slowest_1"):
+            row, trainer, _ = _run_cell(
+                data, fleets["lognormal"], policies[policy_name], pq, None,
+                rounds, fast, fault_plan=plan)
+            ft = trainer.last_trace.fault_totals()
+            totals[(plan_name, policy_name)] = (row, ft)
+            rows.append(dict(
+                {"name": f"chaos_{plan_name}_{policy_name}_fedlite"}, **row,
+                crashes=ft.get("crashes", 0),
+                retries=ft.get("retries", 0),
+                crash_dropped=ft.get("crash_dropped", 0),
+                quarantined=ft.get("quarantined", 0),
+                rounds_voided=ft.get("round_voided", 0),
+                corrupt_undetected=ft.get("corrupt_undetected", 0),
+                downlink_inflation=round(
+                    row["downlink_mb_per_round"] / max(clean_dl, 1e-12), 3)))
+    base_row, base_ft = totals[("baseline", "full_sync")]
+    assert base_row["reached_target"], \
+        "baseline-rate chaos run failed to reach the target loss"
+    inflation = base_row["downlink_mb_per_round"] / max(clean_dl, 1e-12)
+    assert inflation <= 1.5, \
+        f"retry downlink inflation {inflation:.2f}x exceeds the 1.5x bound"
+    all_ft = [ft for _, ft in totals.values()]
+    assert sum(ft.get("quarantined", 0) for ft in all_ft) > 0, \
+        "chaos sweep never exercised the quarantine path"
+    assert all(ft.get("corrupt_undetected", 0) == 0 for ft in all_ft), \
+        "a corrupted payload slipped past the wire CRC undetected"
+    rows.append({"name": "chaos_claim", "us_per_call": 0.0,
+                 "reached_target": base_row["reached_target"],
+                 "baseline_downlink_inflation": round(inflation, 3),
+                 "quarantined_total": sum(ft.get("quarantined", 0)
+                                          for ft in all_ft),
+                 "corrupt_undetected_total": 0})
+    return rows
 
 
 def run_downlink_sweep(data, fleets, policies, rounds, fast):
@@ -564,8 +631,8 @@ def run_autoscale_cell(data, fleets, rounds, fast, executor="stacked"):
 
 def main(fast: bool = True, downlink: bool = False,
          executor: str = "stacked", autoscale: bool = False,
-         fleet_scale: bool = False, emit_trace: str = None,
-         perfetto: str = None):
+         fleet_scale: bool = False, chaos: bool = False,
+         emit_trace: str = None, perfetto: str = None):
     if executor == "mesh" and len(jax.devices()) < 2 \
             and not os.environ.get("_BENCH_MESH_CHILD"):
         # re-exec with forced host devices so the mesh cells see a real
@@ -583,10 +650,10 @@ def main(fast: bool = True, downlink: bool = False,
         obs.configure(run="bench_network", meta={
             "suite": "network_tradeoff", "fast": fast, "downlink": downlink,
             "executor": executor, "autoscale": autoscale,
-            "fleet_scale": fleet_scale,
+            "fleet_scale": fleet_scale, "chaos": chaos,
             "jax_backend": jax.default_backend()})
     emit(run(fast, downlink=downlink, executor=executor,
-             autoscale=autoscale, fleet_scale=fleet_scale),
+             autoscale=autoscale, fleet_scale=fleet_scale, chaos=chaos),
          "network_tradeoff")
     recorder = obs.shutdown()
     if emit_trace and recorder is not None:
@@ -618,6 +685,10 @@ if __name__ == "__main__":
                     help="run the 10^5/10^6-client scheduler-core scaling "
                          "cells (wall-clock budget + backend parity "
                          "asserted)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection sweep (fault rate x "
+                         "policy; graceful-degradation + canary "
+                         "assertions)")
     ap.add_argument("--emit-trace", nargs="?",
                     const="BENCH_network_trace.jsonl", default=None,
                     metavar="PATH",
@@ -637,5 +708,5 @@ if __name__ == "__main__":
     else:
         main(fast=not args.full, downlink=args.downlink,
              executor=args.executor, autoscale=args.autoscale,
-             fleet_scale=args.fleet_scale, emit_trace=args.emit_trace,
-             perfetto=args.perfetto)
+             fleet_scale=args.fleet_scale, chaos=args.chaos,
+             emit_trace=args.emit_trace, perfetto=args.perfetto)

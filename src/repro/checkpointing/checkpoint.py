@@ -6,13 +6,26 @@ single compressed npz per step. Restore rebuilds the tree and (optionally)
 re-applies shardings via ``jax.device_put`` with the provided sharding tree —
 enough for the single-process simulation; a real multi-host deployment would
 swap this module for tensorstore-backed storage behind the same API.
+
+Crash consistency: every file lands via write-to-tmp + ``os.replace`` (POSIX
+rename is atomic within a filesystem), and each step additionally writes a
+``manifest_<step>.json`` — LAST, after every payload file it names — carrying
+the sha256 of each payload. A step is only *visible* (to `latest_step` /
+`restore_checkpoint`) once its manifest exists, so a process killed mid-save
+leaves at most an orphaned ``.tmp`` or an unreferenced npz, never a
+restorable-but-corrupt step. Restore re-hashes the payload against the
+manifest and raises `CheckpointError` on any mismatch, truncation, or
+unreadable archive. Pre-manifest checkpoints (bare npz) still restore, with
+hash verification skipped.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -22,6 +35,11 @@ import numpy as np
 from repro import obs
 
 _SEP = "/"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed verification: partial write, corrupt payload,
+    or a manifest/payload mismatch."""
 
 
 def _flatten(tree, prefix=""):
@@ -53,6 +71,35 @@ def _encode(a: np.ndarray):
     return a.view(np.dtype(f"u{a.dtype.itemsize}")), a.dtype.name
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _json_default(o):
+    """Meta dicts routinely carry numpy scalars (trace counters, cursor
+    times); store them as their Python equivalents."""
+    if isinstance(o, np.generic):
+        return o.item()
+    raise TypeError(f"not JSON-serializable: {type(o).__name__}")
+
+
+def _write_atomic(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _manifest_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"manifest_{step:08d}.json")
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
                     extra: Optional[dict] = None) -> str:
     with obs.span("checkpoint.save", cat="io", step=step):
@@ -67,20 +114,59 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
         path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
         tmp = path + ".tmp.npz"  # .npz suffix so numpy does not append one
         np.savez_compressed(tmp, **flat)
+        with open(tmp, "rb") as f:   # flush page cache before the rename
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        files = {os.path.basename(path): _sha256(path)}
         if extra is not None:
             meta = os.path.join(ckpt_dir, f"meta_{step:08d}.json")
-            with open(meta, "w") as f:
-                json.dump(extra, f)
+            _write_atomic(meta,
+                          json.dumps(extra, default=_json_default).encode())
+            files[os.path.basename(meta)] = _sha256(meta)
+        # the commit point: the manifest lands LAST, after every file it
+        # names — a step without one is invisible, never half-restored
+        manifest = {"step": step, "files": files}
+        _write_atomic(_manifest_path(ckpt_dir, step),
+                      json.dumps(manifest).encode())
         return path
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """The newest *committed* step: manifest-backed when any manifest
+    exists, falling back to bare npz files (pre-manifest checkpoints)."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+    names = os.listdir(ckpt_dir)
+    steps = [int(m.group(1)) for f in names
+             if (m := re.match(r"manifest_(\d+)\.json$", f))]
+    if steps:
+        return max(steps)
+    steps = [int(m.group(1)) for f in names
              if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
     return max(steps) if steps else None
+
+
+def verify_checkpoint(ckpt_dir: str, step: int) -> None:
+    """Raise `CheckpointError` unless step's manifest matches its payloads
+    byte for byte. No-op (nothing to verify against) without a manifest."""
+    mpath = _manifest_path(ckpt_dir, step)
+    if not os.path.exists(mpath):
+        return
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        files = manifest["files"]
+    except (json.JSONDecodeError, KeyError, OSError) as e:
+        raise CheckpointError(f"unreadable manifest {mpath}: {e}") from e
+    for name, digest in files.items():
+        path = os.path.join(ckpt_dir, name)
+        if not os.path.exists(path):
+            raise CheckpointError(f"manifest names missing file {path}")
+        actual = _sha256(path)
+        if actual != digest:
+            raise CheckpointError(
+                f"checksum mismatch for {path}: manifest {digest[:12]}…, "
+                f"file {actual[:12]}… — partial or corrupt write")
 
 
 def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
@@ -89,18 +175,22 @@ def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     with obs.span("checkpoint.restore", cat="io", step=step):
+        verify_checkpoint(ckpt_dir, step)
         path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-        with np.load(path) as z:
-            dtypes = {k[len("__dtype__"):]: str(z[k]) for k in z.files
-                      if k.startswith("__dtype__")}
-            flat = {}
-            for k in z.files:
-                if k.startswith("__dtype__"):
-                    continue
-                a = z[k]
-                if k in dtypes:
-                    a = a.view(jnp.dtype(dtypes[k]))
-                flat[k] = jnp.asarray(a)
+        try:
+            with np.load(path) as z:
+                dtypes = {k[len("__dtype__"):]: str(z[k]) for k in z.files
+                          if k.startswith("__dtype__")}
+                flat = {}
+                for k in z.files:
+                    if k.startswith("__dtype__"):
+                        continue
+                    a = z[k]
+                    if k in dtypes:
+                        a = a.view(jnp.dtype(dtypes[k]))
+                    flat[k] = jnp.asarray(a)
+        except (zipfile.BadZipFile, ValueError, EOFError, OSError) as e:
+            raise CheckpointError(f"corrupt checkpoint {path}: {e}") from e
         tree = _unflatten(flat)
         if shardings is not None:
             tree = jax.tree.map(

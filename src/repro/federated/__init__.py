@@ -61,6 +61,14 @@ Eight layers, composed by `FederatedTrainer`:
                   the trace's windowed signals into (cohort, policy,
                   downlink codec) moves, plus ``autoscale_run`` driving a
                   training run in plan-sized segments.
+  faults.py     — the chaos layer: a seeded, declarative `FaultPlan`
+                  (client crashes, wire corruption, poisoned gradients,
+                  arrival reordering, edge outages, server kills) whose
+                  draws come from a stateless hash stream — never the
+                  training or scheduler RNGs (see "Fault tolerance").
+  recovery.py   — crash-consistent runtime snapshots + `run_with_recovery`,
+                  the segmented driver that survives `ServerKilled` by
+                  restoring the latest snapshot from disk.
 
 Scaling cohorts across devices
 ------------------------------
@@ -129,6 +137,53 @@ memory (``error_feedback=True``), stochastic downlink rounding
 (``codebook_delta_bits``: the uplink ships b-bit quantized codebook deltas
 against the acked reference; ``wire.encode_pq_delta``).
 
+Fault tolerance
+---------------
+`faults.py` turns the simulation into a chaos harness: a frozen
+`FaultPlan` declares per-round fault rates and the `FaultInjector` draws
+every fault from a stateless splitmix64 hash keyed on (plan seed, fault
+kind, round/stream-seq, client) — never from the training or scheduler
+RNGs, so a zero-fault plan is bitwise-identical to no plan at all and
+backend trace parity holds under any plan. What the runtime survives:
+
+  * **Client crashes mid-round** — the scheduler retries with
+    exponential backoff in virtual time (both backends, identical
+    IEEE association); each retry re-pays the downlink, ledgered under
+    ``retry_downlink/<kind>``; past ``max_retries`` the client is
+    permanently dropped from the round.
+  * **Wire corruption** — every v4 frame carries a CRC32 trailer, and
+    ANY malformed payload raises from the typed `WireError` hierarchy
+    (``WireTruncationError`` / ``WireCorruptionError`` /
+    ``WireVersionError`` / ``WireResyncError``; fuzzed in
+    tests/test_wire.py). The server decodes a per-round canary through
+    the real codec and quarantines corrupt contributions; the
+    ``corrupt_undetected`` counter must stay 0 (canary assertion).
+  * **Poisoned gradients** — non-finite contributions are quarantined by
+    a finiteness screen before aggregation; eq.-5 λ-correction and
+    staleness weights renormalize over the survivors. A round whose
+    survivor fraction falls below ``quorum_fraction`` is VOIDED (no
+    server update).
+  * **pq-delta lineage breaks** — delta codebook payloads carry an epoch
+    word; an epoch or reference-geometry mismatch raises
+    `WireResyncError` and `wire.DeltaCodebookLink` falls back to a full
+    codebook resync handshake.
+  * **Edge-aggregator outages** — `TwoTierTopology.rehome` re-homes a
+    down edge's clients to the next-nearest live edge for the outage
+    window (``rehomed``/``edges_down`` counters).
+  * **Server kills between rounds** — `ServerKilled` unwinds the run;
+    `recovery.run_with_recovery` restores the latest crash-consistent
+    snapshot FROM DISK (atomic tmp+rename writes, sha256 manifest
+    written last, verified on restore — `checkpointing/checkpoint.py`)
+    and resumes from the scheduler cursor bitwise-identically
+    (tests/test_faults.py pins final params AND trace).
+
+Every fault and recovery lands in the observability stack: per-round
+``RoundRecord.faults`` counters (``Trace.fault_totals()`` for the run),
+``fault.*`` events on the obs log, and the run inspector's ``--faults``
+table. ``benchmarks/bench_network.py --chaos`` sweeps fault rate x
+policy and asserts graceful degradation: target loss still reached at
+the baseline fault rate, retry byte inflation bounded, canary clean.
+
 The ideal fleet + `FullSync` + dense downlink reproduces the original
 synchronous simulation bitwise (tests/test_scheduler.py,
 tests/test_compressors.py); heterogeneous fleets and per-direction codecs
@@ -175,9 +230,10 @@ a jit closure rebuilt per round retraces the step each call, a typo'd
 mesh axis explodes only at trace time on a real mesh, and a wire kind
 without an explicit decoder arm mis-decodes the *next* kind added. The
 `repro.lint` package (``python -m repro.lint src benchmarks examples``)
-checks all of these statically — six AST/jaxpr passes (fleet-scale,
-host-sync, custom-vjp, mesh-axes, pallas, wire-format; catalogue in the
-``repro.lint`` docstring, ``--list-rules`` for the full list). CI's
+checks all of these statically — seven AST/jaxpr passes (fleet-scale,
+host-sync, custom-vjp, mesh-axes, pallas, wire-format, wire-decode;
+catalogue in the ``repro.lint`` docstring, ``--list-rules`` for the full
+list). CI's
 ``static-analysis`` job fails on any finding, and
 ``python -m benchmarks.run --preflight`` runs the identical gate before a
 benchmark spend. Intentional syncs (e.g. the once-per-``log_every``
@@ -211,6 +267,13 @@ from repro.federated.executor import (
     make_executor,
     register_executor,
 )
+from repro.federated.faults import (
+    DEFAULT_CHAOS,
+    FaultInjector,
+    FaultPlan,
+    ServerKilled,
+    make_injector,
+)
 from repro.federated.network import (
     IDEAL,
     ClientFleet,
@@ -219,6 +282,11 @@ from repro.federated.network import (
     mobile_fleet,
     uniform_fleet,
     validate_fleet,
+)
+from repro.federated.recovery import (
+    restore_runtime,
+    run_with_recovery,
+    snapshot_runtime,
 )
 from repro.federated.runtime import (
     FederatedTrainer,
@@ -240,11 +308,13 @@ from repro.federated import wire
 
 __all__ = [
     "AsyncBuffer", "AutoscalePlan", "ClientFleet", "ClientProfile",
-    "CohortExecutor", "Deadline", "DropSlowestK", "FederatedTrainer",
-    "FullSync", "IDEAL", "MeshExecutor", "RoundRecord", "Scheduler",
+    "CohortExecutor", "DEFAULT_CHAOS", "Deadline", "DropSlowestK",
+    "FaultInjector", "FaultPlan", "FederatedTrainer", "FullSync", "IDEAL",
+    "MeshExecutor", "RoundRecord", "Scheduler", "ServerKilled",
     "StackedExecutor", "Trace", "TraceAutoscaler", "TwoTierTopology",
     "autoscale_run", "available_executors", "fedavg_round",
-    "lognormal_fleet", "make_executor", "make_policy", "mobile_fleet",
-    "register_executor", "run_fedavg", "sample_clients", "uniform_fleet",
-    "validate_fleet", "weighted_average", "wire",
+    "lognormal_fleet", "make_executor", "make_injector", "make_policy",
+    "mobile_fleet", "register_executor", "restore_runtime", "run_fedavg",
+    "run_with_recovery", "sample_clients", "snapshot_runtime",
+    "uniform_fleet", "validate_fleet", "weighted_average", "wire",
 ]

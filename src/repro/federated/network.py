@@ -186,6 +186,15 @@ class ClientFleet:
                         ids: np.ndarray) -> np.ndarray:
         return base_step_seconds * self.compute_multiplier[ids]
 
+    def downlink_compute_seconds(self, ids: np.ndarray, downlink_bytes: int,
+                                 base_step_seconds: float) -> np.ndarray:
+        """``downlink + compute`` seconds — the virtual time one crashed
+        attempt wastes before the failure is noticed (the upload never
+        happens). Associated like the scalar path so the fault injector's
+        retry arithmetic is bitwise-identical across backends."""
+        return self.downlink_seconds(downlink_bytes, ids) \
+            + self.compute_seconds(base_step_seconds, ids)
+
     def round_trip_seconds(self, ids: np.ndarray, uplink_bytes: int,
                            downlink_bytes: int,
                            base_step_seconds: float) -> np.ndarray:

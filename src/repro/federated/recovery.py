@@ -1,0 +1,192 @@
+"""Crash-consistent runtime snapshots + the self-healing run driver.
+
+`federated/faults.py` can kill the server between rounds (`ServerKilled`);
+this module is what survives it. A **snapshot** captures everything a
+`FederatedTrainer.run` needs to continue bitwise-identically:
+
+  * the `TrainState` (params, optimizer state, step counter);
+  * the cross-round cut-layer state — per-client / cohort-global
+    `QuantizerState` warm-start lineages, the seed codebook, and every
+    client's error-feedback memory;
+  * the trainer's cohort-sampling RNG (`numpy` bit-generator state);
+  * the scheduler cursor ({round, virtual clock, scheduler RNG state});
+  * the trace records and history rows of every completed round.
+
+Snapshots ride the `checkpointing/checkpoint.py` atomic-write + manifest
+machinery (tmp + rename, sha256-verified restore), with the non-array
+state in the manifest-covered meta json, so a kill mid-save can never
+leave a restorable-but-corrupt snapshot.
+
+`run_with_recovery` drives training in ``checkpoint_every``-round
+segments, snapshotting after each, and reacts to a `ServerKilled` the way
+a restarted process would: restore the latest snapshot FROM DISK (the
+in-memory trainer is treated as lost), disarm the kill that already
+fired (a restarted server does not re-die at the same round), and resume
+from the cursor. Final params and trace are bitwise-identical to an
+uninterrupted run (tests/test_faults.py pins this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.checkpointing.checkpoint import (restore_checkpoint,
+                                            save_checkpoint)
+from repro.core.quantizer import QuantizerState
+from repro.federated.faults import ServerKilled
+from repro.federated.trace import RoundRecord, Trace
+
+__all__ = ["snapshot_runtime", "restore_runtime", "run_with_recovery"]
+
+
+def _q_tree(q: Optional[QuantizerState]) -> Optional[Dict[str, Any]]:
+    return None if q is None else dict(q._asdict())
+
+
+def _q_from(tree: Optional[Dict[str, Any]]) -> Optional[QuantizerState]:
+    return None if tree is None else QuantizerState(**tree)
+
+
+def snapshot_runtime(trainer, state, cursor: Dict[str, Any],
+                     trace: Trace, history: List[Dict[str, Any]],
+                     ckpt_dir: str) -> str:
+    """Write one atomic, manifest-verified snapshot at ``cursor['round']``.
+
+    Array state goes into the npz (TrainState leaves by flatten order +
+    the cut-layer dicts by client id); everything host-side — both RNG
+    states, the cursor, completed trace records, history — goes into the
+    manifest-covered meta json.
+    """
+    step = int(cursor["round"])
+    tree: Dict[str, Any] = {
+        "train": {f"{i:04d}": leaf
+                  for i, leaf in enumerate(jax.tree.leaves(state))},
+        "client_q": {str(c): _q_tree(q)
+                     for c, q in trainer._client_q.items()},
+        "ef": {str(c): m for c, m in trainer._ef_memory.items()},
+    }
+    if trainer._global_q is not None:
+        tree["global_q"] = _q_tree(trainer._global_q)
+    if trainer._seed_q is not None:
+        tree["seed_q"] = _q_tree(trainer._seed_q)
+    meta = {
+        "cursor": cursor,
+        "trainer_rng": trainer._rng.bit_generator.state,
+        "global_q_nparts": trainer._global_q_nparts,
+        "records": [dataclasses.asdict(r) for r in trace.records],
+        "trace_meta": dict(trace.meta),
+        "history": history,
+    }
+    with obs.span("recovery.snapshot", cat="io", round=step):
+        return save_checkpoint(ckpt_dir, step, tree, extra=meta)
+
+
+def _load_meta(ckpt_dir: str, step: int) -> Dict[str, Any]:
+    with open(os.path.join(ckpt_dir, f"meta_{step:08d}.json")) as f:
+        return json.load(f)
+
+
+def restore_runtime(trainer, template_state, ckpt_dir: str,
+                    step: Optional[int] = None,
+                    ) -> Tuple[Any, Dict[str, Any], Trace,
+                               List[Dict[str, Any]]]:
+    """Rebuild ``(state, cursor, trace, history)`` from the latest (or
+    given) snapshot and reinstall the cut-layer + RNG state on ``trainer``.
+
+    ``template_state`` supplies the TrainState treedef — snapshots store
+    leaves in flatten order, which is deterministic for a fixed trainer
+    construction, exactly what a restarted process rebuilds."""
+    from repro.checkpointing.checkpoint import latest_step
+    step = step if step is not None else latest_step(ckpt_dir)
+    tree = restore_checkpoint(ckpt_dir, step)
+    meta = _load_meta(ckpt_dir, step)
+    leaves = [tree["train"][k] for k in sorted(tree["train"])]
+    state = jax.tree.unflatten(jax.tree.structure(template_state), leaves)
+    trainer._client_q = {int(c): _q_from(q)
+                         for c, q in tree.get("client_q", {}).items()}
+    trainer._ef_memory = {int(c): m for c, m in tree.get("ef", {}).items()}
+    trainer._global_q = _q_from(tree.get("global_q"))
+    trainer._seed_q = _q_from(tree.get("seed_q"))
+    trainer._global_q_nparts = int(meta["global_q_nparts"])
+    trainer._rng = np.random.default_rng()
+    trainer._rng.bit_generator.state = meta["trainer_rng"]
+    trace = Trace(records=[RoundRecord(**r) for r in meta["records"]],
+                  meta=dict(meta["trace_meta"]))
+    for r in trace.records:   # json round-trips tuples as lists
+        r.participants = tuple(r.participants)
+        r.dropped = tuple(r.dropped)
+        r.staleness = tuple(r.staleness)
+        r.shards = tuple(r.shards)
+    return state, meta["cursor"], trace, list(meta["history"])
+
+
+def run_with_recovery(trainer, steps: int, key, ckpt_dir: str, *,
+                      checkpoint_every: int = 5, log_every: int = 0,
+                      max_restarts: int = 8):
+    """Run ``steps`` rounds with periodic snapshots and kill recovery.
+
+    Returns ``(state, history)`` like `FederatedTrainer.run`, with the
+    merged whole-run `Trace` in ``trainer.last_trace``. Only synchronous
+    policies are supported (the cursor contract). ``max_restarts`` bounds
+    pathological plans that kill faster than a segment completes.
+    """
+    if checkpoint_every <= 0:
+        raise ValueError("checkpoint_every must be positive")
+    plan = trainer.fault_plan
+    state = trainer.init_state(key)
+    template = state
+    cursor: Optional[Dict[str, Any]] = None
+    trace = Trace()
+    history: List[Dict[str, Any]] = []
+    restarts = 0
+    done = 0
+    while done < steps:
+        end = min(done + checkpoint_every, steps)
+        try:
+            state, seg_hist = trainer.run(end, key, log_every=log_every,
+                                          state=state, cursor=cursor)
+        except ServerKilled as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            obs.event("fault.server_restart", cat="faults",
+                      round=e.round_index, restarts=restarts)
+            # a restarted process recovers from DISK, not from the dirty
+            # in-memory trainer — and the fired kill stays fired
+            trainer.fault_plan = trainer.fault_plan.disarm_kills_through(
+                e.round_index)
+            if done == 0:
+                # killed before the first snapshot: cold restart
+                state = trainer.init_state(key)
+                trainer._client_q = {}
+                trainer._ef_memory = {}
+                trainer._global_q = None
+                trainer._seed_q = None
+                trainer._global_q_nparts = 0
+                trainer._rng = np.random.default_rng(trainer.seed)
+                cursor = None
+                trace = Trace()
+                history = []
+            else:
+                state, cursor, trace, history = restore_runtime(
+                    trainer, template, ckpt_dir)
+                done = int(cursor["round"])
+            continue
+        seg_trace = trainer.last_trace
+        trace.records.extend(seg_trace.records)
+        trace.meta.update(seg_trace.meta)
+        trace.cursor = seg_trace.cursor
+        history.extend(seg_hist)
+        cursor = seg_trace.cursor
+        done = end
+        snapshot_runtime(trainer, state, cursor, trace, history, ckpt_dir)
+    trainer.fault_plan = plan
+    trainer.last_trace = trace
+    return state, history

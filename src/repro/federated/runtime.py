@@ -43,6 +43,7 @@ from repro.core.quantizer import QuantizerState, quantize_stateful
 from repro.data.synthetic import FederatedDataset
 from repro.federated import wire
 from repro.federated.executor import make_executor
+from repro.federated.faults import FaultPlan, make_injector
 from repro.federated.network import ClientProfile, uniform_fleet, validate_fleet
 from repro.federated.scheduler import (Arrival, AsyncBuffer, FullSync,
                                        Policy, Scheduler)
@@ -236,6 +237,14 @@ class FederatedTrainer:
     # policy supports it) | "vector" | "heapq" (per-arrival reference).
     # Both backends produce bitwise-identical traces.
     scheduler_backend: str = "auto"
+    # fault_plan: optional seeded chaos schedule (federated/faults.py).
+    # None (default) injects nothing and leaves every path bitwise-
+    # historical. A `FaultPlan` adds client crashes with scheduler-side
+    # retry, wire corruption + poisoned gradients screened server-side
+    # (quarantine + quorum), reorder jitter, edge outages, and server
+    # kills — all drawn from the plan's own hash stream, never the
+    # training or scheduler RNGs.
+    fault_plan: Optional[FaultPlan] = None
 
     def __post_init__(self):
         pq = getattr(self.model, "pq", None)
@@ -305,6 +314,12 @@ class FederatedTrainer:
         # bytes; set by measure_round_bytes and fed to the scheduler's
         # per-round byte ledger (RoundRecord.ledger)
         self.last_wire_kinds = ("dense", "dense")
+        # canary uplink payload (set by measure_round_bytes): the real
+        # wire bytes a client would ship, corrupted per-plan in
+        # _screen_cohort so detection runs against the actual wire format
+        self._canary_payload: Optional[bytes] = None
+        # per-round screening counters, merged into the trace after run()
+        self._fault_log: Dict[int, Dict[str, int]] = {}
         self._rng = np.random.default_rng(self.seed)
         if self.fleet is None:
             self.fleet = uniform_fleet(self.data.num_clients)
@@ -443,6 +458,75 @@ class FederatedTrainer:
                 for i, c in enumerate(cids):
                     self._ef_memory[c] = new_cut.ef_memory[i]
 
+    # ---- server-side admission screening (chaos plans only) ----------------
+    def _screen_cohort(self, inj, update_idx: int, participants, parts,
+                       weights):
+        """Inject the plan's payload faults, then quarantine every
+        contribution that fails the server's admission checks before any
+        of it can touch the aggregate.
+
+        Corruption is applied to the round's canary — the real uplink
+        wire frame — and detection is the actual `federated/wire.py`
+        decode (CRC + typed errors), so a corrupt contribution is either
+        caught in transit (quarantined) or counted in
+        ``corrupt_undetected`` (the chaos canary: must stay 0). Poisoned
+        clients ship NaN-filled tensors; the finiteness screen catches
+        them regardless of how they were poisoned. Survivors keep their
+        own staleness weights — aggregation renormalizes over the kept
+        cohort exactly as under straggler cuts. A round whose survivor
+        fraction falls below ``quorum_fraction`` is VOIDED: no server
+        update, counters only.
+
+        Returns ``(participants, parts, weights, fault_counters)`` —
+        empty lists mean the round was voided.
+        """
+        cids = np.asarray([int(a.client) for a in participants], np.int64)
+        poison = inj.poison_mask(update_idx, cids)
+        corrupt = inj.corrupt_mask(update_idx, cids)
+        fl: Dict[str, int] = {}
+        if not poison.any() and not corrupt.any():
+            return participants, parts, weights, fl
+        parts = list(parts)
+        for i in np.nonzero(poison)[0]:
+            parts[i] = jax.tree.map(
+                lambda x: jnp.full_like(x, jnp.nan)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, parts[i])
+        keep = np.ones(len(parts), bool)
+        undetected = 0
+        canary = self._canary_payload
+        for i in range(len(parts)):
+            if corrupt[i] and canary is not None:
+                bad = inj.corrupt_payload(canary, update_idx, int(cids[i]))
+                try:
+                    wire.decode_payload(bad)
+                except wire.WireError:
+                    keep[i] = False       # caught in transit -> quarantined
+                    continue
+                undetected += 1           # CRC missed: canary assertion trips
+            if not keep[i]:
+                continue
+            for leaf in jax.tree.leaves(parts[i]):
+                if jnp.issubdtype(leaf.dtype, jnp.floating) \
+                        and not bool(jnp.isfinite(leaf).all()):
+                    keep[i] = False       # non-finite -> quarantined
+                    break
+        quarantined = int((~keep).sum())
+        if quarantined:
+            fl["quarantined"] = quarantined
+        if undetected:
+            fl["corrupt_undetected"] = undetected
+        if int(keep.sum()) < self.fault_plan.quorum_fraction * len(parts):
+            fl["round_voided"] = 1
+            obs.event("fault.round_voided", cat="faults", round=update_idx,
+                      quarantined=quarantined, cohort=len(parts))
+            return [], [], [], fl
+        if quarantined:
+            participants = [a for a, k in zip(participants, keep) if k]
+            parts = [p for p, k in zip(parts, keep) if k]
+            if weights is not None:
+                weights = [w for w, k in zip(weights, keep) if k]
+        return participants, parts, weights, fl
+
     # ---- wire measurement --------------------------------------------------
     def measure_round_bytes(self, state: TrainState, key: jax.Array):
         """Measured per-client (uplink, downlink) payload bytes for a round.
@@ -477,17 +561,24 @@ class FederatedTrainer:
             # (models gate on it), so the measurement must stay dense too
             if not self.quantize or compressor is None \
                     or compressor.name == "none":
-                return raw_bytes, "dense"
+                return raw_bytes, "dense", None
             comp = compressor.compress(acts2)
             payload = compressor.wire_payload(
                 comp, value_dtype=self.codebook_wire_dtype)
             # the kind tag the receiver will dispatch on — read from the
             # actual payload header so chains report their outermost stage
-            return len(payload), wire.payload_kind(payload)
+            return len(payload), wire.payload_kind(payload), payload
 
         with obs.span("trainer.measure_round_bytes", cat="wire"):
-            uplink_bytes, up_kind = measured(self.uplink)
-            downlink_bytes, down_kind = measured(self.downlink)
+            uplink_bytes, up_kind, up_payload = measured(self.uplink)
+            downlink_bytes, down_kind, _ = measured(self.downlink)
+            # the chaos canary: one real uplink frame (dense tensors get a
+            # dense frame; pq-delta measurement keeps the self-contained pq
+            # frame — delta decode needs receiver state a canary lacks)
+            self._canary_payload = up_payload if up_payload is not None \
+                else wire.encode_dense(np.asarray(acts2, np.float32),
+                                       acts2.shape[0], acts2.shape[1],
+                                       "float32")
             self.last_codebook_meta = {}
             if self.codebook_delta_bits is not None and self.quantize:
                 acts_b = self._second_round_acts(state, key)
@@ -529,7 +620,8 @@ class FederatedTrainer:
         warm-started from round 0's `QuantizerState` and ships b-bit
         codebook deltas against the reference."""
         qb1, qstate = quantize_stateful(acts2, cfg)
-        ref = wire.decode_bytes(
+        # loopback of bytes we just encoded — nothing untrusted on this wire
+        ref = wire.decode_bytes(  # fedlint: disable=unchecked-wire-decode
             wire.encode_bytes(qb1, self.codebook_wire_dtype)) \
             .codebooks.astype(np.float32)
         qb2, _ = quantize_stateful(acts_b, cfg, qstate)
@@ -538,8 +630,9 @@ class FederatedTrainer:
         cb_full = int(np.prod(cfg.codebook_shape(d))) \
             * wire._np_dtype(self.codebook_wire_dtype).itemsize
         code_bytes = len(wire.encode_bytes(qb2, self.codebook_wire_dtype)) \
-            - wire.HEADER_BYTES - cb_full
-        cb_delta = len(payload) - wire.HEADER_BYTES - code_bytes
+            - wire.HEADER_BYTES - wire.CRC_BYTES - cb_full
+        cb_delta = len(payload) - wire.HEADER_BYTES - wire.CRC_BYTES \
+            - code_bytes
         self.last_codebook_meta.update({
             f"{prefix}codebook_delta_bits": self.codebook_delta_bits,
             f"{bytes_key}_full_codebook": full_bytes,
@@ -567,7 +660,9 @@ class FederatedTrainer:
 
     # ---- scheduled run -----------------------------------------------------
     def run(self, steps: int, key: jax.Array, log_every: int = 0,
-            state: Optional[TrainState] = None):
+            state: Optional[TrainState] = None,
+            cursor: Optional[Dict[str, Any]] = None,
+            on_round=None):
         """Run ``steps`` server updates through the scheduler.
 
         Returns (final state, history) where history holds one dict per
@@ -582,12 +677,20 @@ class FederatedTrainer:
         (``federated/autoscale.py``). The caller's state is copied on
         entry: the executors' weighted steps donate their input buffers,
         and donation must never reach arrays the caller still owns.
+
+        ``cursor`` / ``on_round`` are the crash-recovery hooks forwarded
+        to `Scheduler.run` (sync policies only): a cursor resumes the
+        virtual clock + scheduler RNG mid-run with ``steps`` as the
+        absolute end index, and ``on_round(rd, cursor)`` fires after
+        each completed round — `federated/recovery.py` snapshots there.
         """
         state = self.init_state(key) if state is None \
             else jax.tree.map(jnp.copy, state)
         # per-round step metrics stay on device; MetricsBuffer.flush is the
         # run's single blocking transfer (tests/test_obs.py counts it)
         metrics_buf = obs.MetricsBuffer()
+        inj = make_injector(self.fault_plan)
+        self._fault_log = {}
 
         def execute(update_idx: int, participants: Sequence[Arrival],
                     weights: Sequence[float]) -> Dict:
@@ -598,6 +701,13 @@ class FederatedTrainer:
                 rk = round_keys.setdefault(
                     a.version, jax.random.fold_in(key, a.version + 1))
                 parts.append(self.client_batch_for(a.client, rk))
+            if inj is not None and parts:
+                participants, parts, weights, fl = self._screen_cohort(
+                    inj, update_idx, participants, parts, weights)
+                if fl:
+                    self._fault_log[update_idx] = fl
+                if not parts:
+                    return {}   # round voided: below quorum, no update
             # AsyncBuffer flushes run the per-contribution staleness
             # weighting (FedBuff): each client's gradient split is
             # discounted by ITS OWN staleness before aggregation — not by
@@ -627,7 +737,8 @@ class FederatedTrainer:
                               server_step_seconds=self.server_step_seconds,
                               seed=self.seed,
                               backend=self.scheduler_backend,
-                              topology=self.topology)
+                              topology=self.topology,
+                              faults=self.fault_plan)
         uplink, downlink = self.measure_round_bytes(
             state, jax.random.fold_in(key, 0))
         trace = scheduler.run(
@@ -635,7 +746,8 @@ class FederatedTrainer:
                 self._rng, self.data.num_clients, self.cohort),
             uplink_bytes=uplink, downlink_bytes=downlink, execute=execute,
             placement=self.executor.place,
-            wire_kinds=self.last_wire_kinds)
+            wire_kinds=self.last_wire_kinds,
+            cursor=cursor, on_round=on_round)
         dl = self.downlink
         trace.meta.update({
             "uplink_compressor": getattr(self.uplink, "spec",
@@ -662,6 +774,11 @@ class FederatedTrainer:
         history: List[Dict[str, float]] = []
         it = iter(host_metrics)
         for rec in trace:
+            # merge server-side screening counters into the scheduler's
+            # wire-level fault counters for the same round
+            fl = self._fault_log.get(rec.round)
+            if fl:
+                rec.faults.update(fl)
             floats = next(it) if rec.metrics else {}
             rec.metrics = floats
             entry = dict(floats, step=rec.round, t_start=rec.t_start,

@@ -88,6 +88,7 @@ import numpy as np
 logger = logging.getLogger(__name__)
 
 from repro import obs
+from repro.federated.faults import FaultPlan, ServerKilled, make_injector
 from repro.federated.network import ClientFleet, ClientProfile
 from repro.federated.trace import RoundRecord, Trace
 
@@ -253,6 +254,16 @@ class Scheduler:
     ``topology`` (optional, e.g. `TwoTierTopology`) inserts an edge
     aggregation tier between clients and server — see the module
     docstring and ``federated/topology.py``.
+
+    ``faults`` (optional `FaultPlan`) arms deterministic fault injection:
+    mid-round client crashes with bounded retry-and-backoff in virtual
+    time (retry downlinks hit the ledger under ``retry_downlink/<kind>``,
+    budget-exhausted clients are dropped for the round), async arrival
+    jitter, edge outage windows (clients re-home), and a `ServerKilled`
+    raise at configured rounds. Fault decisions are stateless hashes —
+    they never consume the scheduler RNG — so an all-quiet plan is
+    bitwise-identical to no plan, and both backends stay parity-exact
+    under any plan (``federated/faults.py``).
     """
     fleet: Sequence[ClientProfile]
     policy: Policy = dataclasses.field(default_factory=FullSync)
@@ -261,6 +272,7 @@ class Scheduler:
     seed: int = 0
     backend: str = "auto"
     topology: Optional[Any] = None
+    faults: Optional[FaultPlan] = None
 
     def run(self, rounds: int, *,
             sample_cohort: Callable[[int], Sequence[int]],
@@ -269,7 +281,10 @@ class Scheduler:
             execute: ExecuteFn,
             placement: Optional[Callable[[Sequence[Arrival]],
                                          Sequence[Arrival]]] = None,
-            wire_kinds: Optional[Tuple[str, str]] = None) -> Trace:
+            wire_kinds: Optional[Tuple[str, str]] = None,
+            cursor: Optional[Dict[str, Any]] = None,
+            on_round: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+            ) -> Trace:
         """Drive ``rounds`` server updates.
 
         ``placement`` (optional) maps each update's surviving participants
@@ -283,19 +298,36 @@ class Scheduler:
         carries a ``ledger`` of per-direction, per-kind byte totals —
         split into ``edge_uplink``/``server_uplink`` tiers when a
         topology is installed.
+
+        ``cursor`` / ``on_round`` are the crash-recovery hooks (sync
+        policies only — async in-flight heaps are not checkpointable).
+        A cursor ``{"round", "t", "rng"}`` resumes the virtual clock and
+        RNG stream exactly where a previous run's cursor left them;
+        ``rounds`` stays the absolute end index. ``on_round(rd, cursor)``
+        fires after each completed round with the cursor that would
+        resume AFTER it — what a checkpoint must save. The returned
+        trace's ``cursor`` field holds the final resume point.
         """
         place = placement or (lambda parts: list(parts))
         if self.topology is not None:
             self.topology.ensure(len(self.fleet))
         backend = self._resolve_backend()
         is_async = isinstance(self.policy, AsyncBuffer)
-        if backend == "vector":
-            runner = self._run_async_vector if is_async else \
-                self._run_sync_vector
-        else:
-            runner = self._run_async if is_async else self._run_sync
+        inj = make_injector(self.faults)
+        if is_async:
+            if cursor is not None or on_round is not None:
+                raise ValueError(
+                    "cursor/on_round checkpoint-resume is only supported "
+                    "for synchronous policies: the async in-flight heap "
+                    "is not part of the checkpointable state")
+            runner = self._run_async_vector if backend == "vector" \
+                else self._run_async
+            return runner(rounds, sample_cohort, uplink_bytes,
+                          downlink_bytes, execute, place, wire_kinds, inj)
+        runner = self._run_sync_vector if backend == "vector" \
+            else self._run_sync
         return runner(rounds, sample_cohort, uplink_bytes, downlink_bytes,
-                      execute, place, wire_kinds)
+                      execute, place, wire_kinds, inj, cursor, on_round)
 
     def _resolve_backend(self) -> str:
         if self.backend not in _BACKENDS:
@@ -322,14 +354,18 @@ class Scheduler:
     @staticmethod
     def _ledger(wire_kinds: Optional[Tuple[str, str]],
                 uplink_total: int, downlink_total: int,
-                tier_bytes: Optional[Tuple[int, int]] = None) -> Dict[str, int]:
+                tier_bytes: Optional[Tuple[int, int]] = None,
+                retry_bytes: int = 0) -> Dict[str, int]:
         """Per-direction, per-wire-kind byte entries for one record.
 
         Flat star topology keys uplink traffic as ``uplink/<kind>``;
         under a two-tier topology the same traffic splits into
         ``edge_uplink/<kind>`` (client->edge, every completed upload) and
         ``server_uplink/<kind>`` (edge->server backhaul) via
-        ``tier_bytes=(edge_total, server_total)``.
+        ``tier_bytes=(edge_total, server_total)``. ``retry_bytes`` is the
+        fault-injected crash-retry re-broadcast traffic, ledgered under
+        its own ``retry_downlink/<kind>`` key so wasted bytes are
+        auditable separately from the first dispatch.
         """
         if wire_kinds is None:
             return {}
@@ -340,54 +376,114 @@ class Scheduler:
             entries = {f"edge_uplink/{up_kind}": tier_bytes[0],
                        f"server_uplink/{up_kind}": tier_bytes[1]}
         entries[f"downlink/{down_kind}"] = downlink_total
+        if retry_bytes:
+            entries[f"retry_downlink/{down_kind}"] = retry_bytes
         return entries
 
     def _sync_uplink_accounting(self, n_arrivals: int, uplink_bytes: int,
                                 survivor_clients: np.ndarray,
                                 survivor_t: np.ndarray, t_policy_end: float,
+                                down_edges: Sequence[int] = (),
                                 ) -> Tuple[float, int, Optional[Tuple[int, int]],
                                            Optional[int]]:
         """Apply the topology tier (if any) to one sync round's cut.
 
         Returns ``(t_end, uplink_total, tier_bytes, edges)`` — shared by
         both backends so their topology arithmetic is the same code.
+        ``down_edges`` (fault injection) marks edge aggregators in an
+        outage window; their clients re-home inside ``sync_round``.
         """
         flat_total = n_arrivals * uplink_bytes
         if self.topology is None:
             return float(t_policy_end), flat_total, None, None
         t_end, edges, server_bytes = self.topology.sync_round(
-            survivor_clients, survivor_t, t_policy_end, uplink_bytes)
+            survivor_clients, survivor_t, t_policy_end, uplink_bytes,
+            down_edges=down_edges)
         return t_end, flat_total + server_bytes, \
             (flat_total, server_bytes), edges
 
     # ---- synchronous policies: reference heapq backend --------------------
     def _run_sync(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
-                  execute, place, wire_kinds=None) -> Trace:
+                  execute, place, wire_kinds=None, inj=None, cursor=None,
+                  on_round=None) -> Trace:
         rng = np.random.default_rng(self.seed)
         trace = Trace()
         t = 0.0
-        for rd in range(rounds):
+        start = 0
+        if cursor is not None:
+            start = int(cursor["round"])
+            t = float(cursor["t"])
+            rng.bit_generator.state = cursor["rng"]
+        crash_on = inj is not None and inj.plan.crash_rate > 0
+        for rd in range(start, rounds):
+            if inj is not None and inj.server_killed(rd):
+                raise ServerKilled(rd)
+            faults: Dict[str, int] = {}
             with obs.span("scheduler.round", cat="scheduler", round=rd):
                 ids = [int(c) for c in sample_cohort(rd)]
                 dropouts: List[int] = []
                 heap: List[Tuple[float, int, int]] = []
-                for seq, cid in enumerate(ids):
-                    p = self.fleet[cid]
-                    if rng.random() < p.dropout_prob:
-                        dropouts.append(cid)
-                        continue
-                    dt = self._round_trip(p, uplink_bytes, downlink_bytes)
-                    heapq.heappush(heap, (t + dt, seq, cid))
+                gone_ids: List[int] = []
+                retry_dl = 0
+                if not crash_on:
+                    for seq, cid in enumerate(ids):
+                        p = self.fleet[cid]
+                        if rng.random() < p.dropout_prob:
+                            dropouts.append(cid)
+                            continue
+                        dt = self._round_trip(p, uplink_bytes, downlink_bytes)
+                        heapq.heappush(heap, (t + dt, seq, cid))
+                else:
+                    # benign dropout draws FIRST (same RNG order as the
+                    # fault-free path), then stateless crash/retry draws
+                    # over the live set — collect-then-push so the retry
+                    # arithmetic runs through the same vectorized helper
+                    # as the vector backend
+                    live: List[Tuple[int, int, float, float]] = []
+                    for seq, cid in enumerate(ids):
+                        p = self.fleet[cid]
+                        if rng.random() < p.dropout_prob:
+                            dropouts.append(cid)
+                            continue
+                        live.append((
+                            seq, cid,
+                            self._round_trip(p, uplink_bytes, downlink_bytes),
+                            p.downlink_seconds(downlink_bytes)
+                            + p.compute_seconds(self.client_step_seconds)))
+                    crashes = inj.crash_attempts_sync(
+                        rd, np.asarray([c for _, c, _, _ in live], np.int64))
+                    extra, gone = inj.retry_overhead(
+                        crashes, np.asarray([dc for *_, dc in live]))
+                    retry_dl = int(inj.extra_downlinks(crashes, gone).sum())
+                    for (seq, cid, dt, _), ex, g in zip(live, extra, gone):
+                        if g:
+                            gone_ids.append(cid)
+                            continue
+                        heapq.heappush(heap, (t + (float(ex) + dt), seq, cid))
+                    n_crashes = int(crashes.sum())
+                    if n_crashes:
+                        faults["crashes"] = n_crashes
+                        faults["retries"] = retry_dl
+                    if gone_ids:
+                        faults["crash_dropped"] = len(gone_ids)
                 arrivals: List[Arrival] = []
                 while heap:
                     t_arr, _, cid = heapq.heappop(heap)
                     arrivals.append(Arrival(cid, rd, t_arr))
                 survivors, cut, t_end = self.policy.split(arrivals, t)
+                down = inj.down_edges(t) \
+                    if inj is not None and self.topology is not None else ()
                 t_end, uplink_total, tier_bytes, edges = \
                     self._sync_uplink_accounting(
                         len(arrivals), uplink_bytes,
                         np.asarray([a.client for a in survivors], np.int64),
-                        np.asarray([a.t_arrival for a in survivors]), t_end)
+                        np.asarray([a.t_arrival for a in survivors]), t_end,
+                        down)
+                if down:
+                    faults["edges_down"] = len(down)
+                    rehomed = getattr(self.topology, "last_rehomed", 0)
+                    if rehomed:
+                        faults["rehomed"] = rehomed
                 t_end += self.server_step_seconds
                 survivors = place(survivors)
                 metrics = execute(rd, survivors, [1.0] * len(survivors)) \
@@ -395,32 +491,45 @@ class Scheduler:
             span_extra = {} if edges is None else {"edges": edges}
             obs.virtual_span("scheduler.round", t, t_end, round=rd,
                              participants=len(survivors),
-                             dropped=len(dropouts) + len(cut), **span_extra)
+                             dropped=len(dropouts) + len(gone_ids) + len(cut),
+                             **span_extra)
             if cut:
                 obs.event("policy.cut", cat="scheduler", lane="virtual",
                           t=t_end, round=rd,
                           policy=getattr(self.policy, "name", "?"),
                           cut=[a.client for a in cut])
+            if faults:
+                obs.event("fault.round", cat="faults", lane="virtual",
+                          t=t_end, round=rd, **faults)
             trace.append(RoundRecord(
                 round=rd, t_start=t, t_end=t_end,
                 participants=tuple(a.client for a in survivors),
-                dropped=tuple(dropouts) + tuple(a.client for a in cut),
+                dropped=tuple(dropouts) + tuple(gone_ids)
+                + tuple(a.client for a in cut),
                 # every completed upload crossed a wire, aggregated or not;
                 # under a topology this is both tiers' traffic
                 uplink_bytes=uplink_total,
-                downlink_bytes=len(ids) * downlink_bytes,
+                downlink_bytes=(len(ids) + retry_dl) * downlink_bytes,
                 staleness=(0,) * len(survivors),
                 shards=tuple(a.shard for a in survivors),
                 metrics=metrics,
                 ledger=self._ledger(wire_kinds, uplink_total,
-                                    len(ids) * downlink_bytes, tier_bytes)))
+                                    len(ids) * downlink_bytes, tier_bytes,
+                                    retry_dl * downlink_bytes),
+                faults=faults))
             t = t_end
+            if on_round is not None:
+                on_round(rd, {"round": rd + 1, "t": t,
+                              "rng": rng.bit_generator.state})
+        trace.cursor = {"round": rounds, "t": t,
+                        "rng": rng.bit_generator.state}
         return trace
 
     # ---- synchronous policies: vectorized fleet-scale backend -------------
     def _run_sync_vector(self, rounds, sample_cohort, uplink_bytes,
                          downlink_bytes, execute, place,
-                         wire_kinds=None) -> Trace:
+                         wire_kinds=None, inj=None, cursor=None,
+                         on_round=None) -> Trace:
         """Whole-cohort array core; Python only at round boundaries.
 
         Per round: one vectorized dropout draw over the cohort (same RNG
@@ -435,7 +544,16 @@ class Scheduler:
         rng = np.random.default_rng(self.seed)
         trace = Trace()
         t = 0.0
-        for rd in range(rounds):
+        start = 0
+        if cursor is not None:
+            start = int(cursor["round"])
+            t = float(cursor["t"])
+            rng.bit_generator.state = cursor["rng"]
+        crash_on = inj is not None and inj.plan.crash_rate > 0
+        for rd in range(start, rounds):
+            if inj is not None and inj.server_killed(rd):
+                raise ServerKilled(rd)
+            faults: Dict[str, int] = {}
             with obs.span("scheduler.round", cat="scheduler", round=rd):
                 ids = np.asarray([int(c) for c in sample_cohort(rd)],
                                  dtype=np.int64)
@@ -446,16 +564,41 @@ class Scheduler:
                 dt = fleet.round_trip_seconds(live, uplink_bytes,
                                               downlink_bytes,
                                               self.client_step_seconds)
-                t_arrivals = t + dt
+                gone_ids = np.empty(0, np.int64)
+                retry_dl = 0
+                if not crash_on:
+                    t_arrivals = t + dt
+                else:
+                    crashes = inj.crash_attempts_sync(rd, live)
+                    extra, gone = inj.retry_overhead(
+                        crashes, fleet.downlink_compute_seconds(
+                            live, downlink_bytes, self.client_step_seconds))
+                    retry_dl = int(inj.extra_downlinks(crashes, gone).sum())
+                    gone_ids = live[gone]
+                    t_arrivals = (t + (extra + dt))[~gone]
+                    live = live[~gone]
+                    n_crashes = int(crashes.sum())
+                    if n_crashes:
+                        faults["crashes"] = n_crashes
+                        faults["retries"] = retry_dl
+                    if gone_ids.shape[0]:
+                        faults["crash_dropped"] = int(gone_ids.shape[0])
                 order = np.argsort(t_arrivals, kind="stable")
                 t_sorted = t_arrivals[order]
                 cid_sorted = live[order]
                 keep, t_end = self.policy.split_vector(t_sorted, t)
                 n_arrivals = int(t_sorted.shape[0])
+                down = inj.down_edges(t) \
+                    if inj is not None and self.topology is not None else ()
                 t_end, uplink_total, tier_bytes, edges = \
                     self._sync_uplink_accounting(
                         n_arrivals, uplink_bytes, cid_sorted[:keep],
-                        t_sorted[:keep], t_end)
+                        t_sorted[:keep], t_end, down)
+                if down:
+                    faults["edges_down"] = len(down)
+                    rehomed = getattr(self.topology, "last_rehomed", 0)
+                    if rehomed:
+                        faults["rehomed"] = rehomed
                 t_end += self.server_step_seconds
                 survivors = [Arrival(c, rd, ta) for c, ta in
                              zip(cid_sorted[:keep].tolist(),
@@ -467,31 +610,43 @@ class Scheduler:
             span_extra = {} if edges is None else {"edges": edges}
             obs.virtual_span("scheduler.round", t, t_end, round=rd,
                              participants=len(survivors),
-                             dropped=int(dropouts.shape[0]) + len(cut_clients),
+                             dropped=int(dropouts.shape[0])
+                             + int(gone_ids.shape[0]) + len(cut_clients),
                              **span_extra)
             if cut_clients:
                 obs.event("policy.cut", cat="scheduler", lane="virtual",
                           t=t_end, round=rd,
                           policy=getattr(self.policy, "name", "?"),
                           cut=cut_clients)
+            if faults:
+                obs.event("fault.round", cat="faults", lane="virtual",
+                          t=t_end, round=rd, **faults)
             trace.append(RoundRecord(
                 round=rd, t_start=t, t_end=t_end,
                 participants=tuple(a.client for a in survivors),
-                dropped=tuple(dropouts.tolist()) + tuple(cut_clients),
+                dropped=tuple(dropouts.tolist()) + tuple(gone_ids.tolist())
+                + tuple(cut_clients),
                 uplink_bytes=uplink_total,
-                downlink_bytes=int(ids.shape[0]) * downlink_bytes,
+                downlink_bytes=(int(ids.shape[0]) + retry_dl)
+                * downlink_bytes,
                 staleness=(0,) * len(survivors),
                 shards=tuple(a.shard for a in survivors),
                 metrics=metrics,
                 ledger=self._ledger(wire_kinds, uplink_total,
                                     int(ids.shape[0]) * downlink_bytes,
-                                    tier_bytes)))
+                                    tier_bytes, retry_dl * downlink_bytes),
+                faults=faults))
             t = t_end
+            if on_round is not None:
+                on_round(rd, {"round": rd + 1, "t": t,
+                              "rng": rng.bit_generator.state})
+        trace.cursor = {"round": rounds, "t": t,
+                        "rng": rng.bit_generator.state}
         return trace
 
     # ---- async buffer: reference heapq backend ----------------------------
     def _run_async(self, rounds, sample_cohort, uplink_bytes, downlink_bytes,
-                   execute, place, wire_kinds=None) -> Trace:
+                   execute, place, wire_kinds=None, inj=None) -> Trace:
         """FedBuff loop: the initial cohort sets the concurrency; every
         completed (or dropped) slot is refilled with the next client from a
         fresh-cohort stream, so the whole population keeps rotating through
@@ -509,6 +664,9 @@ class Scheduler:
         version = 0
         wave = 0
         queue: List[int] = []
+        # per-flush-window fault counters (accounted at dispatch time, the
+        # point both backends share; crash keys on the dispatch stream seq)
+        fw = {"crashes": 0, "crash_dropped": 0, "retries": 0, "jittered": 0}
 
         def next_client() -> int:
             nonlocal wave
@@ -522,6 +680,24 @@ class Scheduler:
             p = self.fleet[cid]
             dropped = bool(rng.random() < p.dropout_prob)
             dt = self._round_trip(p, uplink_bytes, downlink_bytes) + relay_hop
+            if inj is not None:
+                # scalar path == vectorized helpers on singleton arrays
+                s_arr = np.asarray([seq], np.int64)
+                c_arr = np.asarray([cid], np.int64)
+                crashes = inj.crash_attempts_async(s_arr, c_arr)
+                extra, gone = inj.retry_overhead(
+                    crashes, np.asarray([p.downlink_seconds(downlink_bytes)
+                                         + p.compute_seconds(
+                                             self.client_step_seconds)]))
+                jitter = inj.reorder_jitter(c_arr, s_arr)
+                dt = (dt + float(extra[0])) + float(jitter[0])
+                fw["crashes"] += int(crashes[0])
+                fw["retries"] += int(inj.extra_downlinks(crashes, gone)[0])
+                if jitter[0] > 0:
+                    fw["jittered"] += 1
+                if bool(gone[0]):
+                    fw["crash_dropped"] += 1
+                    dropped = True   # retry budget exhausted: lost slot
             heapq.heappush(heap, (t + dt, seq, cid, ver, dropped))
             seq += 1
 
@@ -555,6 +731,8 @@ class Scheduler:
             consecutive_drops = 0
             buffer.append(Arrival(cid, ver, t_arr))
             if len(buffer) >= policy.buffer_size:
+                if inj is not None and inj.server_killed(updates):
+                    raise ServerKilled(updates)
                 t_end = t_arr + self.server_step_seconds
                 # place BEFORE computing weights so staleness stays aligned
                 # with the (possibly reordered) cohort execute receives
@@ -575,19 +753,27 @@ class Scheduler:
                     (flat_total, flat_total)   # relayed 1:1, no combine
                 uplink_total = flat_total if tier_bytes is None else \
                     tier_bytes[0] + tier_bytes[1]
+                retry_dl = fw["retries"]
+                faults = {k: v for k, v in fw.items() if v}
+                if faults:
+                    obs.event("fault.flush", cat="faults", lane="virtual",
+                              t=t_end, round=updates, **faults)
                 trace.append(RoundRecord(
                     round=updates, t_start=t_round_start, t_end=t_end,
                     participants=tuple(a.client for a in buffer),
                     dropped=tuple(dropped_accum),
                     uplink_bytes=uplink_total,
-                    downlink_bytes=dispatches * downlink_bytes,
+                    downlink_bytes=(dispatches + retry_dl) * downlink_bytes,
                     staleness=tuple(staleness),
                     shards=tuple(a.shard for a in buffer),
                     metrics=metrics,
                     ledger=self._ledger(wire_kinds, uplink_total,
                                         dispatches * downlink_bytes,
-                                        tier_bytes)))
+                                        tier_bytes,
+                                        retry_bytes=retry_dl * downlink_bytes),
+                    faults=faults))
                 buffer, dropped_accum, dispatches = [], [], 0
+                fw = {k: 0 for k in fw}
                 t_round_start = t_end
                 updates += 1
             else:
@@ -598,7 +784,7 @@ class Scheduler:
     # ---- async buffer: vectorized fleet-scale backend ---------------------
     def _run_async_vector(self, rounds, sample_cohort, uplink_bytes,
                           downlink_bytes, execute, place,
-                          wire_kinds=None) -> Trace:
+                          wire_kinds=None, inj=None) -> Trace:
         """Lean-heap FedBuff core over a vectorized dispatch stream.
 
         Asynchrony is inherently sequential — each completion triggers a
@@ -608,7 +794,10 @@ class Scheduler:
         dispatch order consumes the cohort stream FIFO, so seq == stream
         index == RNG draw order, and each wave's dropout draws and round
         trips are single array ops. Staleness at flush is vectorized
-        against the per-seq version array.
+        against the per-seq version array. Fault draws hash on the stream
+        seq (never the RNG), so each wave's crash/retry/jitter columns
+        are one vectorized injector call, bitwise-matching the heapq
+        backend's singleton-array calls element by element.
         """
         policy: AsyncBuffer = self.policy
         fleet = ClientFleet.from_any(self.fleet)
@@ -622,11 +811,18 @@ class Scheduler:
         s_drop = np.empty(0, bool)        # stream idx -> dropout draw
         s_dt = np.empty(0, np.float64)    # stream idx -> round-trip time
         s_ver: List[int] = []             # stream idx -> model version seen
+        # fault columns (only populated when inj is active)
+        s_gone = np.empty(0, bool)        # retry budget exhausted -> lost
+        s_crash = np.empty(0, np.int64)   # crashed attempts before success
+        s_retry = np.empty(0, np.int64)   # extra downlink dispatches
+        s_jit = np.empty(0, bool)         # reorder jitter applied
         wave = 0
         consumed = 0                      # next unused stream index
+        fw = {"crashes": 0, "crash_dropped": 0, "retries": 0, "jittered": 0}
 
         def extend_stream():
             nonlocal s_cid, s_drop, s_dt, wave
+            nonlocal s_gone, s_crash, s_retry, s_jit
             ids = np.asarray([int(c) for c in sample_cohort(wave)],
                              dtype=np.int64)
             wave += 1
@@ -634,6 +830,20 @@ class Scheduler:
             dts = fleet.round_trip_seconds(ids, uplink_bytes, downlink_bytes,
                                            self.client_step_seconds) \
                 + relay_hop
+            if inj is not None and ids.shape[0]:
+                base = s_cid.shape[0]
+                seqs = np.arange(base, base + ids.shape[0], dtype=np.int64)
+                crashes = inj.crash_attempts_async(seqs, ids)
+                extra, gone = inj.retry_overhead(
+                    crashes, fleet.downlink_compute_seconds(
+                        ids, downlink_bytes, self.client_step_seconds))
+                jitter = inj.reorder_jitter(ids, seqs)
+                dts = (dts + extra) + jitter
+                s_gone = np.concatenate([s_gone, gone])
+                s_crash = np.concatenate([s_crash, crashes])
+                s_retry = np.concatenate(
+                    [s_retry, inj.extra_downlinks(crashes, gone)])
+                s_jit = np.concatenate([s_jit, jitter > 0])
             s_cid = np.concatenate([s_cid, ids])
             s_drop = np.concatenate([s_drop, draws < fleet.dropout_prob[ids]])
             s_dt = np.concatenate([s_dt, dts])
@@ -651,6 +861,15 @@ class Scheduler:
             s = consumed
             consumed += 1
             s_ver.append(ver)
+            if inj is not None:
+                # counters accrue at consume time — the point the heapq
+                # backend draws the same hashes on singleton arrays
+                fw["crashes"] += int(s_crash[s])
+                fw["retries"] += int(s_retry[s])
+                if s_jit[s]:
+                    fw["jittered"] += 1
+                if s_gone[s]:
+                    fw["crash_dropped"] += 1
             heapq.heappush(heap, (t + float(s_dt[s]), s))
 
         first_wave = extend_stream()
@@ -667,7 +886,7 @@ class Scheduler:
         max_consecutive_drops = max(1000, 10 * len(fleet))
         while updates < rounds and heap:
             t_arr, s = heapq.heappop(heap)
-            if s_drop[s]:
+            if s_drop[s] or (inj is not None and s_gone[s]):
                 dropped_accum.append(int(s_cid[s]))
                 dispatch(t_arr, version)
                 dispatches += 1
@@ -682,6 +901,8 @@ class Scheduler:
             consecutive_drops = 0
             buffer.append((t_arr, s))
             if len(buffer) >= policy.buffer_size:
+                if inj is not None and inj.server_killed(updates):
+                    raise ServerKilled(updates)
                 t_end = t_arr + self.server_step_seconds
                 cohort = [Arrival(int(s_cid[i]), s_ver[i], ta)
                           for ta, i in buffer]
@@ -703,19 +924,27 @@ class Scheduler:
                     (flat_total, flat_total)
                 uplink_total = flat_total if tier_bytes is None else \
                     tier_bytes[0] + tier_bytes[1]
+                retry_dl = fw["retries"]
+                faults = {k: v for k, v in fw.items() if v}
+                if faults:
+                    obs.event("fault.flush", cat="faults", lane="virtual",
+                              t=t_end, round=updates, **faults)
                 trace.append(RoundRecord(
                     round=updates, t_start=t_round_start, t_end=t_end,
                     participants=tuple(a.client for a in cohort),
                     dropped=tuple(dropped_accum),
                     uplink_bytes=uplink_total,
-                    downlink_bytes=dispatches * downlink_bytes,
+                    downlink_bytes=(dispatches + retry_dl) * downlink_bytes,
                     staleness=tuple(staleness),
                     shards=tuple(a.shard for a in cohort),
                     metrics=metrics,
                     ledger=self._ledger(wire_kinds, uplink_total,
                                         dispatches * downlink_bytes,
-                                        tier_bytes)))
+                                        tier_bytes,
+                                        retry_bytes=retry_dl * downlink_bytes),
+                    faults=faults))
                 buffer, dropped_accum, dispatches = [], [], 0
+                fw = {k: 0 for k in fw}
                 t_round_start = t_end
                 updates += 1
             else:

@@ -47,7 +47,7 @@ vectorized trace parity holds under a topology by construction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -133,6 +133,10 @@ class TwoTierTopology:
         self.cluster_of: Optional[np.ndarray] = None
         self.locations: Optional[np.ndarray] = None
         self.centers: Optional[np.ndarray] = None
+        # set by sync_round: clients re-homed away from a down edge in the
+        # last round (read by the scheduler's fault accounting; kept out of
+        # the return triple for backward compatibility)
+        self.last_rehomed: int = 0
 
     # ---- clustering --------------------------------------------------------
     def ensure(self, num_clients: int) -> None:
@@ -174,9 +178,38 @@ class TwoTierTopology:
         """
         return self.edge_hop_seconds(int(uplink_bytes))
 
+    def rehome(self, clients: np.ndarray,
+               down_edges: Sequence[int]) -> np.ndarray:
+        """Edge assignment with outage failover: clients homed to a down
+        edge re-home to the next-nearest *live* edge center for the
+        window (their k-means location distance, down edges masked out).
+        With every edge down the outage is ignored — there is nowhere to
+        fail over to, and stalling the whole fleet would deadlock the
+        virtual clock. Returns the per-client edge ids."""
+        cluster_of = self._require_clusters()
+        edges = cluster_of[clients]
+        down = np.asarray(sorted(set(int(e) for e in down_edges)), np.int64)
+        self.last_rehomed = 0
+        if down.size == 0 or down.size >= self.num_edges:
+            return edges
+        hit = np.isin(edges, down)
+        if not hit.any():
+            return edges
+        # distance of each displaced client's location to every live center
+        locs = self.locations[clients[hit]]                  # (h, 2)
+        dist = np.linalg.norm(locs[:, None, :] - self.centers[None, :, :],
+                              axis=-1)                       # (h, E)
+        dist[:, down] = np.inf
+        edges = edges.copy()
+        edges[hit] = np.argmin(dist, axis=1)
+        self.last_rehomed = int(hit.sum())
+        return edges
+
     def sync_round(self, survivor_clients: np.ndarray,
                    survivor_t: np.ndarray, t_policy_end: float,
-                   uplink_bytes: int) -> Tuple[float, int, int]:
+                   uplink_bytes: int, *,
+                   down_edges: Optional[Sequence[int]] = None,
+                   ) -> Tuple[float, int, int]:
         """Second-tier times + bytes for one synchronous round.
 
         Each participating edge flushes when its last surviving client's
@@ -187,11 +220,19 @@ class TwoTierTopology:
         ``(t_end, participating_edges, server_uplink_bytes)``. Shared
         verbatim by both scheduler backends, so backend trace parity
         under a topology needs no per-backend reasoning.
+
+        ``down_edges`` (fault injection) marks edge aggregators inside an
+        outage window: their clients re-home to the next-nearest live
+        edge (see ``rehome``; the count lands in ``last_rehomed``).
         """
         cluster_of = self._require_clusters()
+        self.last_rehomed = 0
         if survivor_clients.shape[0] == 0:
             return float(t_policy_end), 0, 0
-        edges = cluster_of[survivor_clients]
+        if down_edges:
+            edges = self.rehome(survivor_clients, down_edges)
+        else:
+            edges = cluster_of[survivor_clients]
         ready = np.full(self.num_edges, -np.inf)
         np.maximum.at(ready, edges, survivor_t)
         participating = int((ready > -np.inf).sum())

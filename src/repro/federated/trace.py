@@ -35,6 +35,11 @@ class RoundRecord:
     # {"uplink/pq": 81920, "downlink/dense": 262144}; empty when the caller
     # did not tell the scheduler which wire kinds crossed (legacy callers)
     ledger: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # fault/recovery counters for this round: "<event>" -> count, e.g.
+    # {"crashes": 3, "crash_dropped": 1, "retries": 2, "quarantined": 1,
+    #  "rehomed": 4, "edges_down": 1, "jittered": 2, "round_voided": 1};
+    # empty when no fault injection was active (the common case)
+    faults: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def duration(self) -> float:
@@ -55,6 +60,10 @@ class Trace:
     """
     records: List[RoundRecord] = dataclasses.field(default_factory=list)
     meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # the scheduler's resume point after the last completed round — set by
+    # synchronous runners ({"round", "t", "rng"}); what checkpointing saves
+    # so a restored run continues the identical virtual clock + RNG stream
+    cursor: Optional[Dict[str, object]] = None
 
     def append(self, rec: RoundRecord) -> None:
         self.records.append(rec)
@@ -92,6 +101,14 @@ class Trace:
         out: Dict[str, int] = {}
         for r in self.records:
             for k, v in r.ledger.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def fault_totals(self) -> Dict[str, int]:
+        """Whole-run fault/recovery event counts (empty without chaos)."""
+        out: Dict[str, int] = {}
+        for r in self.records:
+            for k, v in r.faults.items():
                 out[k] = out.get(k, 0) + v
         return out
 
@@ -214,4 +231,7 @@ class Trace:
         for k in ("uplink_compressor", "downlink_compressor"):
             if k in self.meta:
                 out[k] = self.meta[k]
+        faults = self.fault_totals()
+        if faults:
+            out["faults"] = faults
         return out

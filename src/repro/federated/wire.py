@@ -41,11 +41,30 @@ Every payload that crosses the simulated client<->server WAN link is a
                  reference (``decode_pq_delta``); the self-describing
                  ``decode_payload`` rejects it with a pointer to that API.
 
+  Version-4 hardens the frame against a hostile wire (the chaos layer,
+  ``federated/faults.py``):
+
+  * every v4 frame ends with a 4-byte **CRC32 trailer** over header+body,
+    so a bit-flipped, truncated, or duplicated payload is *detected* —
+    decoders verify it before touching the body and raise
+    `WireCorruptionError` instead of reconstructing garbage;
+  * ``pq-delta`` bodies gain a leading u32 **lineage epoch** word: both
+    ends of the closed DPCM loop count full-codebook resyncs, and a
+    payload whose epoch does not match the receiver's reference raises
+    `WireResyncError` — the signal to fall back to a full-codebook
+    payload (`DeltaCodebookLink` implements the automatic resync).
+
 Unknown versions and kinds are rejected with a clear error — a stale or
 foreign payload fails loudly instead of decoding as garbage. Version-1
 payloads (the PR 2 codec, which only ever carried PQ uplink messages with a
-zero flags byte where the kind now lives) still decode, as do all
-version-2 payloads.
+zero flags byte where the kind now lives) still decode, as do version-2
+and version-3 payloads (no CRC, no epoch word — integrity errors in those
+frames are detected only when a length check happens to catch them).
+Decode failures raise the typed `WireError` hierarchy (all subclasses of
+``ValueError``, so pre-v4 callers catching ``ValueError`` keep working):
+`WireTruncationError` (shorter than declared), `WireCorruptionError`
+(bad magic / CRC mismatch / inconsistent geometry), `WireVersionError`
+(unsupported or version-gated), `WireResyncError` (pq-delta lineage).
 
 The codec is bit-exact: ``decode_payload(encode)`` reproduces every code,
 index and range word exactly, values exactly at the wire dtype, and
@@ -65,6 +84,7 @@ stream when 32 % b == 0.)
 from __future__ import annotations
 
 import struct
+import zlib
 from typing import NamedTuple, Optional, Tuple, Union
 
 import numpy as np
@@ -76,9 +96,36 @@ from repro.core.quantizer import PQConfig, QuantizedBatch, bits_per_code
 _HEADER = struct.Struct("<4sBBBBIIHHI")
 HEADER_BYTES = _HEADER.size  # 24
 _MAGIC = b"FLW1"
-_VERSION = 2          # what the v2 kinds are written as (v2 decoders work)
+_VERSION = 4          # what every encoder writes (CRC32-trailed frames)
 _VERSION_DELTA = 3    # pq-delta is version-gated: introduced in v3
-_SUPPORTED_VERSIONS = (1, 2, 3)
+_CRC_VERSION = 4      # frames at version >= 4 end with a CRC32 trailer
+_SUPPORTED_VERSIONS = (1, 2, 3, 4)
+_CRC = struct.Struct("<I")
+CRC_BYTES = _CRC.size  # 4
+
+
+class WireError(ValueError):
+    """Base of the typed decode-failure hierarchy (a ``ValueError`` so
+    pre-v4 call sites catching ``ValueError`` keep working)."""
+
+
+class WireTruncationError(WireError):
+    """The payload is shorter than its header/geometry declares."""
+
+
+class WireCorruptionError(WireError):
+    """The payload's content is inconsistent: bad magic, CRC32 mismatch,
+    trailing garbage, or geometry that contradicts the body length."""
+
+
+class WireVersionError(WireError):
+    """Unsupported format version, or a kind used below its gate version."""
+
+
+class WireResyncError(WireError):
+    """The pq-delta closed loop lost lineage: the payload's epoch or the
+    reference codebook geometry does not match the receiver's state. The
+    cure is a full-codebook resync (see `DeltaCodebookLink`)."""
 
 KIND_PQ = 0        # == the version-1 flags byte, so v1 payloads parse as pq
 KIND_DENSE = 1
@@ -113,26 +160,73 @@ def _dtype_name(dtype) -> str:
 
 def _check_header(payload: bytes):
     if len(payload) < HEADER_BYTES:
-        raise ValueError(f"payload shorter than header ({len(payload)} B)")
+        raise WireTruncationError(
+            f"payload shorter than header ({len(payload)} B)")
     fields = _HEADER.unpack_from(payload)
     magic, version, kind = fields[0], fields[1], fields[4]
     if magic != _MAGIC:
-        raise ValueError(f"bad magic {magic!r}")
+        raise WireCorruptionError(f"bad magic {magic!r}")
     if version not in _SUPPORTED_VERSIONS:
-        raise ValueError(
+        raise WireVersionError(
             f"unsupported wire format version {version}; this codec "
             f"understands versions {_SUPPORTED_VERSIONS} — refusing to "
             f"decode a stale or foreign payload")
     if kind not in _KIND_NAMES:
-        raise ValueError(f"unknown payload kind {kind}; known kinds: "
-                         f"{sorted(_KIND_NAMES.values())}")
+        raise WireCorruptionError(f"unknown payload kind {kind}; known "
+                                  f"kinds: {sorted(_KIND_NAMES.values())}")
     if version == 1 and kind != KIND_PQ:
-        raise ValueError(f"version-1 payloads are always pq; got kind {kind}")
+        raise WireCorruptionError(
+            f"version-1 payloads are always pq; got kind {kind}")
     if kind == KIND_PQ_DELTA and version < _VERSION_DELTA:
-        raise ValueError(
+        raise WireVersionError(
             f"pq-delta payloads require wire version >= {_VERSION_DELTA}; "
             f"got version {version}")
     return fields
+
+
+def _wire_dtype(code: int) -> np.dtype:
+    """Map a header dtype code to a numpy dtype, typed-error on garbage."""
+    name = _CODE_DTYPES.get(code)
+    if name is None:
+        raise WireCorruptionError(
+            f"unknown wire dtype code {code}; known codes: "
+            f"{sorted(_CODE_DTYPES)}")
+    return _np_dtype(name)
+
+
+def _check_pq_geometry(n: int, d: int, q: int, r: int) -> None:
+    """Reject header geometry no encoder can produce (decoders divide by
+    q and r, so garbage here must fail typed, not crash)."""
+    if q == 0 or r == 0 or d % q or q % r or (r * ((q // r) * n)) % max(n, 1):
+        raise WireCorruptionError(
+            f"inconsistent pq geometry n={n} d={d} q={q} R={r}")
+
+
+def _seal(frame: bytes) -> bytes:
+    """Append the CRC32 trailer every v>=4 frame carries."""
+    return frame + _CRC.pack(zlib.crc32(frame) & 0xFFFFFFFF)
+
+
+def _open_payload(payload: bytes):
+    """Header checks + (for v>=4) CRC32 verification.
+
+    Returns ``(fields, frame)`` where ``frame`` is the payload with the
+    CRC trailer stripped — the bytes every body length check runs
+    against. Pre-v4 frames have no trailer and pass through unchanged.
+    """
+    fields = _check_header(payload)
+    if fields[1] < _CRC_VERSION:
+        return fields, payload
+    if len(payload) < HEADER_BYTES + CRC_BYTES:
+        raise WireTruncationError(
+            f"v{fields[1]} payload too short for its CRC32 trailer "
+            f"({len(payload)} B)")
+    frame, trailer = payload[:-CRC_BYTES], payload[-CRC_BYTES:]
+    if (zlib.crc32(frame) & 0xFFFFFFFF) != _CRC.unpack(trailer)[0]:
+        raise WireCorruptionError(
+            "CRC32 mismatch: the frame was corrupted or truncated in "
+            "flight")
+    return fields, frame
 
 
 def payload_kind(payload: bytes) -> str:
@@ -219,29 +313,32 @@ def encode_bytes(qb: QuantizedBatch,
         raise ValueError("codes out of range [0, L)")
     header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES[name], bits, KIND_PQ,
                           n, d, q, r, num_clusters)
-    return header + cbs.astype(_np_dtype(name)).tobytes() \
-        + _pack_codes(codes, bits)
+    return _seal(header + cbs.astype(_np_dtype(name)).tobytes()
+                 + _pack_codes(codes, bits))
 
 
 def decode_bytes(payload: bytes) -> WireBatch:
     """Parse a ``pq`` payload back into codes + codebooks, bit-exactly."""
-    (_, _, dtype_code, bits, kind,
-     n, d, q, r, num_clusters) = _check_header(payload)
+    ((_, _, dtype_code, bits, kind,
+      n, d, q, r, num_clusters), frame) = _open_payload(payload)
     if kind != KIND_PQ:
-        raise ValueError(
+        raise WireCorruptionError(
             f"expected a pq payload, got kind {_KIND_NAMES[kind]!r}; "
             f"use decode_payload for tagged payloads")
-    dtype = _np_dtype(_CODE_DTYPES[dtype_code])
+    _check_pq_geometry(n, d, q, r)
+    dtype = _wire_dtype(dtype_code)
     dsub = d // q
     cb_bytes = r * num_clusters * dsub * dtype.itemsize
     m = (q // r) * n
     code_bytes = _code_stream_bytes(r * m, bits)
     expected = HEADER_BYTES + cb_bytes + code_bytes
-    if len(payload) != expected:
-        raise ValueError(f"payload is {len(payload)} B, expected {expected}")
-    cbs = np.frombuffer(payload, dtype, count=r * num_clusters * dsub,
+    if len(frame) != expected:
+        exc = WireTruncationError if len(frame) < expected \
+            else WireCorruptionError
+        raise exc(f"payload is {len(frame)} B, expected {expected}")
+    cbs = np.frombuffer(frame, dtype, count=r * num_clusters * dsub,
                         offset=HEADER_BYTES).reshape(r, num_clusters, dsub)
-    codes = _unpack_codes(payload[HEADER_BYTES + cb_bytes:], r * m, bits) \
+    codes = _unpack_codes(frame[HEADER_BYTES + cb_bytes:], r * m, bits) \
         .reshape(r, m)
     return WireBatch(codes=codes, codebooks=cbs, n=n, d=d)
 
@@ -265,7 +362,8 @@ def dequantize(wb: WireBatch) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def encode_pq_delta(qb: QuantizedBatch, ref_codebooks: np.ndarray,
-                    delta_bits: int = 8) -> Tuple[bytes, np.ndarray]:
+                    delta_bits: int = 8, *,
+                    epoch: int = 0) -> Tuple[bytes, np.ndarray]:
     """Serialize a ``QuantizedBatch`` as quantized codebook *deltas* against
     the last acked codebook (closed-loop DPCM; see module docstring).
 
@@ -275,9 +373,16 @@ def encode_pq_delta(qb: QuantizedBatch, ref_codebooks: np.ndarray,
     the f32 codebook the decoder will reproduce bit-exactly: the caller
     must adopt it as the next round's reference.
 
+    ``epoch`` is the lineage tag (how many full-codebook resyncs the loop
+    has seen); the decoder verifies it against its own count so a delta
+    applied to the wrong reference generation raises `WireResyncError`
+    instead of silently drifting.
+
     Codebook bytes: 8 (range) + ceil(R·L·(d/q)·delta_bits / 8), vs
     2·R·L·(d/q) for the fp16 ``pq`` kind — 2× at the default 8 bits.
     """
+    if not 0 <= int(epoch) <= 0xFFFFFFFF:
+        raise ValueError(f"epoch={epoch} does not fit the u32 lineage word")
     if not 1 <= delta_bits <= 16:
         raise ValueError(f"delta_bits={delta_bits} must be in [1, 16]")
     codes = np.asarray(qb.codes)
@@ -306,37 +411,58 @@ def encode_pq_delta(qb: QuantizedBatch, ref_codebooks: np.ndarray,
     bits = bits_per_code(num_clusters)
     if codes.min(initial=0) < 0 or codes.max(initial=0) >= num_clusters:
         raise ValueError("codes out of range [0, L)")
-    header = _HEADER.pack(_MAGIC, _VERSION_DELTA, _DTYPE_CODES["float32"],
+    header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES["float32"],
                           delta_bits, KIND_PQ_DELTA, n, d, q, r, num_clusters)
     rng = np.array([lo, scale], np.float32).tobytes()
-    return (header + rng + _pack_codes(dcodes, delta_bits)
-            + _pack_codes(codes, bits), recon)
+    return (_seal(header + _CRC.pack(int(epoch)) + rng
+                  + _pack_codes(dcodes, delta_bits)
+                  + _pack_codes(codes, bits)), recon)
 
 
-def decode_pq_delta(payload: bytes, ref_codebooks: np.ndarray) -> WireBatch:
+def decode_pq_delta(payload: bytes, ref_codebooks: np.ndarray, *,
+                    expected_epoch: Optional[int] = None) -> WireBatch:
     """Parse a ``pq-delta`` payload against the acked reference codebooks.
 
     The returned ``codebooks`` are f32 and bit-exactly equal to the
     ``recon`` the encoder returned — the server must keep them as the next
-    round's reference."""
-    (_, _, _, delta_bits, kind,
-     n, d, q, r, num_clusters) = _check_header(payload)
+    round's reference. ``expected_epoch`` (the receiver's resync count) is
+    verified against the payload's lineage word (v4+ frames): a mismatch
+    raises `WireResyncError`, as does reference geometry that does not fit
+    the payload — both mean the closed loop must resync with a full
+    codebook. Version-3 frames carry no epoch word; the check is skipped.
+    """
+    ((_, version, _, delta_bits, kind,
+      n, d, q, r, num_clusters), frame) = _open_payload(payload)
     if kind != KIND_PQ_DELTA:
-        raise ValueError(
+        raise WireCorruptionError(
             f"expected a pq-delta payload, got kind {_KIND_NAMES[kind]!r}")
+    _check_pq_geometry(n, d, q, r)
     ref = np.asarray(ref_codebooks, np.float32)
     dsub = d // q
     if ref.shape != (r, num_clusters, dsub):
-        raise ValueError(f"reference codebooks {ref.shape} do not match the "
-                         f"payload geometry ({r}, {num_clusters}, {dsub})")
-    body = payload[HEADER_BYTES:]
+        raise WireResyncError(
+            f"reference codebooks {ref.shape} do not match the "
+            f"payload geometry ({r}, {num_clusters}, {dsub}); the delta "
+            f"loop lost lineage — request a full-codebook resync")
+    body = frame[HEADER_BYTES:]
     num_delta = r * num_clusters * dsub
     delta_bytes = _code_stream_bytes(num_delta, delta_bits)
     m = (q // r) * n
     bits = bits_per_code(num_clusters)
-    expected = 8 + delta_bytes + _code_stream_bytes(r * m, bits)
+    epoch_bytes = CRC_BYTES if version >= _CRC_VERSION else 0
+    expected = epoch_bytes + 8 + delta_bytes + _code_stream_bytes(r * m, bits)
     if len(body) != expected:
-        raise ValueError(f"pq-delta body is {len(body)} B, expected {expected}")
+        exc = WireTruncationError if len(body) < expected \
+            else WireCorruptionError
+        raise exc(f"pq-delta body is {len(body)} B, expected {expected}")
+    if epoch_bytes:
+        epoch = _CRC.unpack_from(body)[0]
+        if expected_epoch is not None and epoch != int(expected_epoch):
+            raise WireResyncError(
+                f"pq-delta lineage epoch {epoch} does not match the "
+                f"receiver's epoch {int(expected_epoch)}; the delta loop "
+                f"lost lineage — request a full-codebook resync")
+        body = body[epoch_bytes:]
     rng = np.frombuffer(body[:8], np.float32, count=2)
     dcodes = _unpack_codes(body[8:8 + delta_bytes], num_delta, delta_bits) \
         .astype(np.uint32)
@@ -346,21 +472,120 @@ def decode_pq_delta(payload: bytes, ref_codebooks: np.ndarray) -> WireBatch:
     return WireBatch(codes=codes, codebooks=cbs, n=n, d=d)
 
 
+def pq_delta_epoch(payload: bytes) -> int:
+    """The lineage epoch word of a v4+ ``pq-delta`` payload (header-only
+    peek plus CRC verification; no body decode)."""
+    (fields, frame) = _open_payload(payload)
+    if fields[4] != KIND_PQ_DELTA:
+        raise WireCorruptionError(
+            f"expected a pq-delta payload, got kind "
+            f"{_KIND_NAMES[fields[4]]!r}")
+    if fields[1] < _CRC_VERSION:
+        raise WireVersionError(
+            f"v{fields[1]} pq-delta frames carry no lineage epoch word")
+    if len(frame) < HEADER_BYTES + CRC_BYTES:
+        raise WireTruncationError("pq-delta frame too short for its epoch")
+    return _CRC.unpack_from(frame, HEADER_BYTES)[0]
+
+
 def pq_delta_wire_bits(cfg: PQConfig, n: int, d: int,
                        delta_bits: int = 8) -> int:
     """Exact ``pq-delta`` payload size in bits (analytic twin of
     ``wire_bits``; asserted against ``len(encode_pq_delta(...))`` in
-    tests)."""
+    tests). Includes the v4 epoch word and CRC32 trailer."""
     r, num_clusters, dsub = cfg.codebook_shape(d)
-    cb_bits = 8 * (8 + _code_stream_bytes(r * num_clusters * dsub,
-                                          delta_bits))
+    cb_bits = 8 * (CRC_BYTES + 8 + _code_stream_bytes(
+        r * num_clusters * dsub, delta_bits))
     code_bits = 8 * _code_stream_bytes(cfg.num_codes(n), cfg.bits_per_code)
-    return HEADER_BYTES * 8 + cb_bits + code_bits
+    return HEADER_BYTES * 8 + cb_bits + code_bits + CRC_BYTES * 8
 
 
 # ---------------------------------------------------------------------------
 # dense / sparse / scalar payloads
 # ---------------------------------------------------------------------------
+
+def _legacy_frame(payload: bytes, version: int) -> bytes:
+    """Downgrade a current-version payload to an older frame ``version``.
+
+    Test/compat helper: strips the CRC trailer when targeting a pre-CRC
+    version, drops the pq-delta epoch word when targeting v3, and rewrites
+    the header's version byte. The result is what an encoder of that
+    version would have produced for the same content."""
+    fields, frame = _open_payload(payload)
+    if not 1 <= version <= fields[1]:
+        raise ValueError(f"cannot downgrade a v{fields[1]} frame to "
+                         f"v{version}")
+    body = frame[HEADER_BYTES:]
+    if fields[4] == KIND_PQ_DELTA and version < _CRC_VERSION:
+        body = body[CRC_BYTES:]   # v3 pq-delta bodies carry no epoch word
+    header = _HEADER.pack(_MAGIC, version, *fields[2:])
+    out = header + body
+    return _seal(out) if version >= _CRC_VERSION else out
+
+
+class DeltaCodebookLink:
+    """One side of the closed-loop pq-delta codebook channel, with lineage.
+
+    Both endpoints hold a ``DeltaCodebookLink``; each starts unsynced
+    (``ref is None``, ``epoch == 0``). The sender's ``encode`` ships a full
+    ``pq`` codebook payload whenever the link is unsynced (bumping the
+    lineage epoch) and b-bit deltas tagged with the current epoch once
+    synced. The receiver's ``decode`` verifies the tag against its own
+    epoch — a mismatch (or reference-geometry mismatch) raises
+    `WireResyncError`, after which the receiver calls ``request_resync()``
+    and the runtime signals the sender to do the same. The handshake
+    resets BOTH epochs to zero (full pq payloads carry no epoch word, so
+    lockstep is re-established by resetting, not by counting), and the
+    resync full codebook advances both sides to epoch 1 together."""
+
+    def __init__(self, delta_bits: int = 8,
+                 codebook_dtype: Union[str, np.dtype] = "float16"):
+        self.delta_bits = int(delta_bits)
+        self.codebook_dtype = codebook_dtype
+        self.epoch = 0
+        self.ref: Optional[np.ndarray] = None
+
+    @property
+    def synced(self) -> bool:
+        return self.ref is not None
+
+    def request_resync(self) -> None:
+        """Drop the reference and reset the lineage: the next payload must
+        be a full codebook, which re-establishes epoch lockstep."""
+        self.ref = None
+        self.epoch = 0
+
+    # -- sender side ------------------------------------------------------
+    def encode(self, qb: QuantizedBatch) -> bytes:
+        if self.ref is None:
+            payload = encode_bytes(qb, self.codebook_dtype)
+            # the decoder's reference is the wire-dtype round-trip of the
+            # codebooks; adopt the identical f32 values without a decode
+            name = _dtype_name(self.codebook_dtype)
+            self.ref = np.asarray(qb.codebooks).astype(_np_dtype(name)) \
+                .astype(np.float32)
+            self.epoch += 1
+            return payload
+        payload, recon = encode_pq_delta(qb, self.ref, self.delta_bits,
+                                         epoch=self.epoch)
+        self.ref = recon
+        return payload
+
+    # -- receiver side ----------------------------------------------------
+    def decode(self, payload: bytes) -> WireBatch:
+        if payload_kind(payload) == "pq":
+            wb = decode_bytes(payload)
+            self.ref = np.asarray(wb.codebooks, np.float32)
+            self.epoch += 1
+            return wb
+        if self.ref is None:
+            raise WireResyncError(
+                "received a pq-delta payload on an unsynced link; a full "
+                "codebook must arrive first")
+        wb = decode_pq_delta(payload, self.ref, expected_epoch=self.epoch)
+        self.ref = wb.codebooks
+        return wb
+
 
 def encode_dense(values: np.ndarray, n: int, d: int,
                  dtype: Union[str, np.dtype] = "float32") -> bytes:
@@ -368,7 +593,7 @@ def encode_dense(values: np.ndarray, n: int, d: int,
     vals = np.asarray(values).reshape(n * d).astype(_np_dtype(name))
     header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES[name], 0, KIND_DENSE,
                           n, d, 0, 0, 0)
-    return header + vals.tobytes()
+    return _seal(header + vals.tobytes())
 
 
 def encode_sparse(indices: np.ndarray, n: int, d: int, *,
@@ -391,7 +616,7 @@ def encode_sparse(indices: np.ndarray, n: int, d: int, *,
         dtype_code = _NESTED
     header = _HEADER.pack(_MAGIC, _VERSION, dtype_code, bits, KIND_SPARSE,
                           n, d, 0, 0, idx.size)
-    return header + _pack_codes(idx.astype(np.uint32), bits) + body
+    return _seal(header + _pack_codes(idx.astype(np.uint32), bits) + body)
 
 
 def encode_scalar(codes: np.ndarray, lo: float, scale: float, bits: int,
@@ -405,15 +630,16 @@ def encode_scalar(codes: np.ndarray, lo: float, scale: float, bits: int,
     header = _HEADER.pack(_MAGIC, _VERSION, _DTYPE_CODES["float32"], bits,
                           KIND_SCALAR, n, d, 0, 0, 0)
     rng = np.array([lo, scale], np.float32).tobytes()
-    return header + rng + _pack_codes(c.astype(np.uint32), bits)
+    return _seal(header + rng + _pack_codes(c.astype(np.uint32), bits))
 
 
 def decode_payload(payload: bytes) -> Decoded:
     """Parse any tagged payload (recursing into nested sparse values)."""
-    (_, _, dtype_code, bits, kind, n, d, q, r, L) = _check_header(payload)
-    body = payload[HEADER_BYTES:]
+    ((_, _, dtype_code, bits, kind, n, d, q, r, L),
+     frame) = _open_payload(payload)
+    body = frame[HEADER_BYTES:]
     if kind == KIND_PQ_DELTA:
-        raise ValueError(
+        raise WireError(
             "pq-delta payloads are not self-describing: decoding needs the "
             "acked reference codebooks — use decode_pq_delta(payload, ref)")
     if kind == KIND_PQ:
@@ -421,42 +647,50 @@ def decode_payload(payload: bytes) -> Decoded:
         return Decoded("pq", n, d, bits,
                        {"codes": wb.codes, "codebooks": wb.codebooks})
     if kind == KIND_DENSE:
-        dtype = _np_dtype(_CODE_DTYPES[dtype_code])
+        dtype = _wire_dtype(dtype_code)
         expected = n * d * dtype.itemsize
         if len(body) != expected:
-            raise ValueError(f"dense body is {len(body)} B, expected {expected}")
-        vals = np.frombuffer(payload, dtype, count=n * d,
+            exc = WireTruncationError if len(body) < expected \
+                else WireCorruptionError
+            raise exc(f"dense body is {len(body)} B, expected {expected}")
+        vals = np.frombuffer(frame, dtype, count=n * d,
                              offset=HEADER_BYTES).reshape(n, d)
         return Decoded("dense", n, d, 0, {"values": vals})
     if kind == KIND_SPARSE:
         nnz = L
         idx_bytes = _code_stream_bytes(nnz, bits)
+        if len(body) < idx_bytes:
+            raise WireTruncationError(
+                f"sparse indices are {len(body)} B, expected {idx_bytes}")
         idx = _unpack_codes(body[:idx_bytes], nnz, bits)
         rest = body[idx_bytes:]
         if dtype_code == _NESTED:
             inner = decode_payload(rest)
             return Decoded("sparse", n, d, bits, {"indices": idx},
                            inner=inner)
-        dtype = _np_dtype(_CODE_DTYPES[dtype_code])
+        dtype = _wire_dtype(dtype_code)
         if len(rest) != nnz * dtype.itemsize:
-            raise ValueError(f"sparse values are {len(rest)} B, expected "
-                             f"{nnz * dtype.itemsize}")
+            exc = WireTruncationError if len(rest) < nnz * dtype.itemsize \
+                else WireCorruptionError
+            raise exc(f"sparse values are {len(rest)} B, expected "
+                      f"{nnz * dtype.itemsize}")
         vals = np.frombuffer(rest, dtype, count=nnz)
         return Decoded("sparse", n, d, bits,
                        {"indices": idx, "values": vals})
     if kind == KIND_SCALAR:
         expected = 8 + _code_stream_bytes(n * d, bits)
         if len(body) != expected:
-            raise ValueError(
-                f"scalar body is {len(body)} B, expected {expected}")
+            exc = WireTruncationError if len(body) < expected \
+                else WireCorruptionError
+            raise exc(f"scalar body is {len(body)} B, expected {expected}")
         rng = np.frombuffer(body[:8], np.float32, count=2)
         codes = _unpack_codes(body[8:], n * d, bits)
         return Decoded("scalar", n, d, bits,
                        {"codes": codes, "lo": rng[0], "scale": rng[1]})
     # _check_header already rejects unknown kinds; this guards the dispatch
     # above staying exhaustive when the next kind is added
-    raise ValueError(f"no decoder arm for payload kind "
-                     f"{_KIND_NAMES.get(kind, kind)!r}")
+    raise WireError(f"no decoder arm for payload kind "
+                    f"{_KIND_NAMES.get(kind, kind)!r}")
 
 
 def reconstruct(dp: Decoded) -> np.ndarray:
@@ -593,7 +827,7 @@ def wire_bits(cfg: PQConfig, n: int, d: int,
     r, num_clusters, dsub = cfg.codebook_shape(d)
     cb_bits = r * num_clusters * dsub * w
     code_bits = 8 * _code_stream_bytes(cfg.num_codes(n), cfg.bits_per_code)
-    return HEADER_BYTES * 8 + cb_bits + code_bits
+    return HEADER_BYTES * 8 + cb_bits + code_bits + CRC_BYTES * 8
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,13 @@ fleet-scale (``fleet_loops.py``)
     round — use the vectorized `ClientFleet`/sorted-arrival core; the
     heapq reference backend carries reviewed suppressions.
 
+wire-decode (``wire_decode.py``)
+  * ``unchecked-wire-decode`` — a ``decode_bytes``/``decode_payload``/
+    ``decode_pq_delta`` call in ``repro/federated/`` hot paths outside a
+    ``try`` catching the `WireError` hierarchy: a malformed payload
+    crashes the server instead of being quarantined (``wire.py`` itself
+    and reviewed loopback decodes are exempt/suppressed).
+
 wire-format (``wire_checks.py``)
   * ``wire-kind-no-encoder`` / ``wire-kind-no-decoder`` — every
     ``KIND_*`` tag needs a ``.pack`` site and an explicit decode
@@ -90,6 +97,7 @@ from repro.lint import mesh_axes as _mesh_axes
 from repro.lint import pallas_checks as _pallas_checks
 from repro.lint import vjp as _vjp
 from repro.lint import wire_checks as _wire_checks
+from repro.lint import wire_decode as _wire_decode
 
 register_pass("fleet-scale", _fleet_loops.FleetLoopPass)
 register_pass("host-sync", _host_sync.HostSyncPass)
@@ -97,6 +105,7 @@ register_pass("custom-vjp", _vjp.CustomVjpPass)
 register_pass("mesh-axes", _mesh_axes.MeshAxesPass)
 register_pass("pallas", _pallas_checks.PallasPass)
 register_pass("wire-format", _wire_checks.WirePass)
+register_pass("wire-decode", _wire_decode.WireDecodePass)
 
 __all__ = ["Finding", "LintPass", "available_passes", "findings_to_json",
            "register_pass", "rule_catalogue", "run_lint"]

@@ -76,6 +76,7 @@ def log_trace(trace, run=None) -> None:
                      "downlink_bytes": r.downlink_bytes,
                      "staleness": list(r.staleness),
                      "ledger": dict(r.ledger),
+                     "faults": dict(getattr(r, "faults", {}) or {}),
                      "metrics": dict(r.metrics)}})
     rec.append({"type": "run", "lane": "host", "cat": "obs",
                 "name": run or rec.run, "t": rec.now(),

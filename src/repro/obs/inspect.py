@@ -8,9 +8,12 @@ Consumes a JSONL event log written by `Recorder.write_jsonl` and prints:
     lane and span-duration percentiles per (lane, name) for the host lane,
   * the per-direction, per-wire-kind byte ledger totals,
   * bytes/time-to-target when ``--target`` is given (or a target loss is
-    found in the run summary).
+    found in the run summary),
+  * fault-injection totals when the run carried a `FaultPlan`.
 
-``--json`` emits the same summary as one JSON document for scripting.
+``--json`` emits the same summary as one JSON document for scripting;
+``--faults`` prints the per-round fault table (crashes, retries,
+quarantines, voided rounds) instead of the full report.
 """
 
 from __future__ import annotations
@@ -68,6 +71,7 @@ def _round_rows(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
                      "uplink_bytes": args.get("uplink_bytes", 0),
                      "downlink_bytes": args.get("downlink_bytes", 0),
                      "ledger": args.get("ledger", {}) or {},
+                     "faults": args.get("faults", {}) or {},
                      "loss": (args.get("metrics", {}) or {}).get("loss")})
     return rows
 
@@ -79,9 +83,12 @@ def summarize(events: List[Dict[str, Any]],
     rounds = _round_rows(events)
     durations = [r["t_end"] - r["t_start"] for r in rounds]
     ledger: Dict[str, float] = {}
+    fault_totals: Dict[str, int] = {}
     for r in rounds:
         for k, v in r["ledger"].items():
             ledger[k] = ledger.get(k, 0) + v
+        for k, v in r["faults"].items():
+            fault_totals[k] = fault_totals.get(k, 0) + int(v)
 
     runs = [ev for ev in events if ev.get("type") == "run"]
     meta = [ev for ev in events if ev.get("type") == "meta"]
@@ -99,6 +106,7 @@ def summarize(events: List[Dict[str, Any]],
         "uplink_bytes": sum(r["uplink_bytes"] for r in rounds),
         "downlink_bytes": sum(r["downlink_bytes"] for r in rounds),
         "ledger": ledger,
+        "fault_totals": fault_totals,
         "spans": _span_stats(events),
     }
 
@@ -132,6 +140,34 @@ def _fmt_bytes(n: float) -> str:
             return f"{n:,.1f} {unit}" if unit != "B" else f"{int(n):,} B"
         n /= 1024.0
     return f"{n:,.1f} GiB"  # pragma: no cover - unreachable
+
+
+def format_faults(summary: Dict[str, Any], max_rows: int = 12) -> str:
+    """Render the per-round fault table (``--faults``).
+
+    Rows are only printed for rounds that recorded at least one fault
+    counter (crashes, retries, quarantines, voids, ...); a run with no
+    `FaultPlan` armed renders as a single "no fault events" line."""
+    lines: List[str] = []
+    faulted = [r for r in summary["rounds"] if r["faults"]]
+    totals = summary.get("fault_totals", {})
+    if not faulted:
+        lines.append("faults: no fault events recorded")
+        return "\n".join(lines)
+    cols = sorted({k for r in faulted for k in r["faults"]})
+    lines.append("faults (per round, zero-fault rounds omitted):")
+    header = f"{'round':>5}" + "".join(f" {c:>18}" for c in cols)
+    lines.append(header)
+    shown = faulted if len(faulted) <= max_rows else faulted[:max_rows]
+    for r in shown:
+        row = f"{r['round']:>5}"
+        row += "".join(f" {r['faults'].get(c, 0):>18}" for c in cols)
+        lines.append(row)
+    if len(faulted) > max_rows:
+        lines.append(f"  ... {len(faulted) - max_rows} more faulted rounds")
+    lines.append("totals: " + ", ".join(f"{k}={v}"
+                                        for k, v in sorted(totals.items())))
+    return "\n".join(lines)
 
 
 def format_report(summary: Dict[str, Any], max_rows: int = 12) -> str:
@@ -179,6 +215,12 @@ def format_report(summary: Dict[str, Any], max_rows: int = 12) -> str:
         for k, v in sorted(summary["ledger"].items()):
             lines.append(f"  {k:<24} {_fmt_bytes(v):>14}")
 
+    if summary.get("fault_totals"):
+        lines.append("")
+        lines.append("fault totals: " +
+                     ", ".join(f"{k}={v}" for k, v in
+                               sorted(summary["fault_totals"].items())))
+
     target = summary.get("target")
     if target:
         lines.append("")
@@ -223,6 +265,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="max table rows to print (default: 12)")
     ap.add_argument("--json", action="store_true",
                     help="emit the summary as JSON instead of a report")
+    ap.add_argument("--faults", action="store_true",
+                    help="print the per-round fault-injection table "
+                         "(crashes, retries, quarantines, voids) instead "
+                         "of the full report")
     args = ap.parse_args(argv)
 
     try:
@@ -234,6 +280,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     try:
         if args.json:
             print(json.dumps(summary, sort_keys=True))
+        elif args.faults:
+            print(format_faults(summary, max_rows=args.rows))
         else:
             print(format_report(summary, max_rows=args.rows))
     except BrokenPipeError:   # e.g. `... | head`; the report is best-effort

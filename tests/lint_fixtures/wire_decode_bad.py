@@ -1,0 +1,24 @@
+"""Red fixture for the wire-decode pass: unguarded decodes in a hot path
+(linted under a fake ``src/repro/federated/`` path)."""
+from repro.federated import wire
+
+
+def harvest(payload):
+    # no try at all
+    return wire.decode_payload(payload)  # SEED: unchecked-wire-decode
+
+
+def lineage(payload, ref):
+    try:
+        out = wire.decode_pq_delta(payload, ref)  # SEED: unchecked-wire-decode
+    except KeyError:   # catches the WRONG hierarchy: still unguarded
+        out = None
+    return out
+
+
+def handler_body_is_not_protected(payload):
+    try:
+        return wire.decode_payload(payload)
+    except wire.WireError:
+        # decoding a fallback INSIDE the handler is outside the try
+        return wire.decode_bytes(payload)  # SEED: unchecked-wire-decode

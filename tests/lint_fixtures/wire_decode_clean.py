@@ -1,0 +1,30 @@
+"""Green fixture for the wire-decode pass: every decode either guarded by
+the typed hierarchy or carrying a reviewed loopback suppression."""
+from repro.federated import wire
+
+
+def harvest(payload):
+    try:
+        return wire.decode_payload(payload)
+    except wire.WireError:
+        return None   # quarantine: corrupt in transit
+
+
+def lineage(link, payload, ref):
+    try:
+        return wire.decode_pq_delta(payload, ref)
+    except (wire.WireResyncError, wire.WireCorruptionError):
+        link.request_resync()
+        return None
+
+
+def broad_catch_is_fine(payload):
+    try:
+        return wire.decode_payload(payload)
+    except ValueError:   # WireError subclasses ValueError
+        return None
+
+
+def measured_loopback(qb):
+    # bytes we encoded one expression earlier: nothing untrusted here
+    return wire.decode_bytes(wire.encode_bytes(qb))  # fedlint: disable=unchecked-wire-decode

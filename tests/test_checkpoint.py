@@ -1,10 +1,22 @@
-"""Checkpoint round-trip tests."""
+"""Checkpoint round-trip + crash-consistency tests.
+
+The save path is atomic (tmp + os.replace, manifest written last): a
+process killed mid-write must leave either the previous committed step
+or no step — never a half-written one that restores garbage. These
+tests simulate every mid-write crash point by hand-crafting the on-disk
+states the real sequence can pass through."""
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpointing import (CheckpointError, latest_step,
+                                 restore_checkpoint, save_checkpoint,
+                                 verify_checkpoint)
 
 
 def test_roundtrip(tmp_path):
@@ -24,6 +36,94 @@ def test_multiple_steps_latest_wins(tmp_path):
         save_checkpoint(str(tmp_path), s, {"x": jnp.asarray(float(s))})
     assert latest_step(str(tmp_path)) == 5
     assert float(restore_checkpoint(str(tmp_path))["x"]) == 5.0
+
+
+# ---------------------------------------------------------------------------
+# crash consistency
+# ---------------------------------------------------------------------------
+
+def _ckpt(tmp_path, step, value):
+    return save_checkpoint(str(tmp_path), step, {"x": jnp.asarray(value)},
+                           extra={"v": value})
+
+
+def test_crash_before_manifest_leaves_step_invisible(tmp_path):
+    """Crash after the npz rename but before the manifest: the step was
+    never committed — latest_step must keep returning the previous one."""
+    _ckpt(tmp_path, 1, 1.0)
+    _ckpt(tmp_path, 2, 2.0)                         # the doomed step...
+    os.remove(os.path.join(tmp_path, "manifest_00000002.json"))  # ...died
+    assert latest_step(str(tmp_path)) == 1
+    assert float(restore_checkpoint(str(tmp_path))["x"]) == 1.0
+
+
+def test_crash_mid_npz_leaves_only_the_tmp_file(tmp_path):
+    """Crash during np.savez: only a ``.tmp.npz`` exists. It matches no
+    committed pattern, so the directory still reads as empty."""
+    with open(os.path.join(tmp_path, "ckpt_00000003.npz.tmp.npz"), "wb") as f:
+        f.write(b"half a zip")
+    assert latest_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path))
+
+
+def test_truncated_payload_behind_a_manifest_is_rejected(tmp_path):
+    """Bit-rot / torn write after commit: the manifest checksum catches a
+    truncated npz and restore raises instead of returning garbage."""
+    path = _ckpt(tmp_path, 4, 4.0)
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[:len(data) // 2])
+    with pytest.raises(CheckpointError, match="checksum mismatch"):
+        restore_checkpoint(str(tmp_path), 4)
+
+
+def test_missing_payload_behind_a_manifest_is_rejected(tmp_path):
+    path = _ckpt(tmp_path, 5, 5.0)
+    os.remove(path)
+    with pytest.raises(CheckpointError, match="missing file"):
+        verify_checkpoint(str(tmp_path), 5)
+
+
+def test_corrupt_manifest_is_rejected(tmp_path):
+    _ckpt(tmp_path, 6, 6.0)
+    mpath = os.path.join(tmp_path, "manifest_00000006.json")
+    with open(mpath, "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointError, match="unreadable manifest"):
+        restore_checkpoint(str(tmp_path), 6)
+
+
+def test_meta_json_is_covered_by_the_manifest(tmp_path):
+    """The extra/meta sidecar is named in the manifest too: flipping one
+    byte of it fails verification."""
+    _ckpt(tmp_path, 7, 7.0)
+    mpath = os.path.join(tmp_path, "meta_00000007.json")
+    meta = json.load(open(mpath))
+    meta["v"] = 999.0
+    with open(mpath, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(CheckpointError, match="checksum mismatch"):
+        verify_checkpoint(str(tmp_path), 7)
+
+
+def test_legacy_bare_npz_still_restores(tmp_path):
+    """Pre-manifest checkpoints (bare npz, no manifest) keep working:
+    latest_step falls back and verify is a no-op without a manifest."""
+    path = _ckpt(tmp_path, 8, 8.0)
+    os.remove(os.path.join(tmp_path, "manifest_00000008.json"))
+    os.rename(path, os.path.join(tmp_path, "ckpt_00000009.npz"))
+    assert latest_step(str(tmp_path)) == 9
+    assert float(restore_checkpoint(str(tmp_path))["x"]) == 8.0
+
+
+def test_manifest_steps_take_priority_over_bare_npz(tmp_path):
+    """A stray newer bare npz (e.g. an interrupted foreign write) must not
+    outrank the newest *committed* step."""
+    _ckpt(tmp_path, 1, 1.0)
+    with open(os.path.join(tmp_path, "ckpt_00000099.npz"), "wb") as f:
+        f.write(b"garbage")
+    assert latest_step(str(tmp_path)) == 1
 
 
 def test_train_state_roundtrip(tmp_path):

@@ -64,16 +64,16 @@ def test_wire_roundtrip_bit_exact(spec, backend):
 
 @pytest.mark.parametrize("spec", _all_specs())
 def test_measured_bytes_track_analytic(spec):
-    """len(wire_payload)*8 is within the per-stage header overhead of
-    analytic_bits at the wire width."""
+    """len(wire_payload)*8 is within the per-stage header + CRC-trailer
+    overhead of analytic_bits at the wire width."""
     c = C.make_compressor(spec, pq=PQ)
     z = _z()
     buf = c.wire_payload(c.compress(z), value_dtype="float32")
     analytic = c.analytic_bits(12, 64, phi_bits=32)
     stages = len(c.stages) if isinstance(c, C.ChainCompressor) else 1
     overhead = len(buf) * 8 - analytic
-    assert 0 <= overhead <= stages * (wire.HEADER_BYTES * 8 + 7), \
-        (spec, overhead)
+    frame = (wire.HEADER_BYTES + wire.CRC_BYTES) * 8 + 7
+    assert 0 <= overhead <= stages * frame, (spec, overhead)
 
 
 def test_multi_carrier_chain_roundtrip():
@@ -91,9 +91,9 @@ def test_multi_carrier_chain_roundtrip():
     np.testing.assert_allclose(wire.reconstruct(dp),
                                np.asarray(comp.recon), atol=1e-6)
     assert wire.encode_decoded(dp) == buf
-    # analytic accounting agrees to within the per-stage headers
+    # analytic accounting agrees to within the per-stage frame overhead
     overhead = len(buf) * 8 - c.analytic_bits(8, 48, 32)
-    assert 0 <= overhead <= 2 * (wire.HEADER_BYTES * 8 + 7)
+    assert 0 <= overhead <= 2 * ((wire.HEADER_BYTES + wire.CRC_BYTES) * 8 + 7)
 
 
 def test_chain_hits_acceptance_ratio():

@@ -1,0 +1,327 @@
+"""Chaos layer: deterministic fault injection + self-healing runtime.
+
+Covers the fault plan's determinism contract (stateless hash draws, no
+training-RNG perturbation), heapq/vector backend parity under faults,
+retry-byte ledgering, edge-outage re-homing, server-kill semantics,
+scheduler cursor resume, the runtime's quarantine/quorum screening, and
+the headline acceptance criterion: kill-and-resume through
+`run_with_recovery` is bitwise identical to the never-killed run.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.quantizer import PQConfig
+from repro.data.synthetic import make_federated_image_data
+from repro.federated import (AsyncBuffer, ClientProfile, DropSlowestK,
+                             FaultPlan, FederatedTrainer, FullSync,
+                             Scheduler, ServerKilled, TwoTierTopology,
+                             lognormal_fleet, make_injector,
+                             run_with_recovery, uniform_fleet)
+from repro.models.paper_models import FemnistCNN
+from repro.optim import sgd
+
+
+def _run(fleet, policy, backend, rounds=6, cohort=4, faults=None,
+         topology=None, seed=0, cursor=None, on_round=None,
+         wire_kinds=("pq", "dense")):
+    """Stub-executor scheduler run with a cohort stream deterministic
+    across calls, so backends and resumed runs see identical rounds."""
+    rng = np.random.default_rng(99)
+    cohorts = [rng.choice(len(fleet), cohort, replace=False)
+               for _ in range(rounds + 64)]
+    sched = Scheduler(fleet=fleet, policy=policy, seed=seed, backend=backend,
+                      topology=topology, faults=faults)
+    return sched.run(rounds, sample_cohort=lambda rd: cohorts[rd],
+                     uplink_bytes=1000, downlink_bytes=4000,
+                     execute=lambda i, parts, w: {"loss": float(len(parts))},
+                     wire_kinds=wire_kinds, cursor=cursor, on_round=on_round)
+
+
+def _chaos_trainer(plan, seed=0, **kw):
+    data = make_federated_image_data(num_clients=8, seed=0)
+    pq = PQConfig(num_subvectors=288, num_clusters=4, kmeans_iters=2)
+    model = FemnistCNN(pq=pq, lam=1e-4)
+    return FederatedTrainer(model, sgd(0.03), data, cohort=4, client_batch=8,
+                            quantize=True, seed=seed, fault_plan=plan, **kw)
+
+
+# ---------------------------------------------------------------------------
+# plan validation + injector determinism
+# ---------------------------------------------------------------------------
+
+def test_plan_validates_rates_and_quorum():
+    with pytest.raises(ValueError):
+        FaultPlan(crash_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(quorum_fraction=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(max_retries=-1)
+    assert not FaultPlan().any_faults
+    assert FaultPlan(poison_clients=(3,)).any_faults
+    assert make_injector(None) is None
+    assert make_injector(FaultPlan()) is None   # zero-fault plan == no plan
+
+
+def test_injector_draws_are_stateless_and_seeded():
+    """Same (plan, round, client) -> same draw, in any call order; a
+    different plan seed decorrelates every mask."""
+    inj = make_injector(FaultPlan(seed=7, crash_rate=0.5, corrupt_rate=0.5,
+                                  poison_rate=0.5))
+    cids = np.arange(64)
+    a = inj.corrupt_mask(3, cids)
+    # interleave unrelated draws: stateless hashing must not care
+    inj.poison_mask(0, cids)
+    inj.crash_attempts_sync(9, cids)
+    np.testing.assert_array_equal(a, inj.corrupt_mask(3, cids))
+    np.testing.assert_array_equal(inj.corrupt_mask(3, cids[::-1])[::-1], a)
+
+    other = make_injector(dataclasses.replace(inj.plan, seed=8))
+    assert not np.array_equal(a, other.corrupt_mask(3, cids))
+
+
+def test_corrupt_payload_is_deterministic_and_mutating():
+    inj = make_injector(FaultPlan(seed=0, corrupt_rate=1.0))
+    payload = bytes(range(256)) * 8
+    for cid in range(16):
+        bad = inj.corrupt_payload(payload, 2, cid)
+        assert bad != payload
+        assert bad == inj.corrupt_payload(payload, 2, cid)
+
+
+# ---------------------------------------------------------------------------
+# backend parity under faults (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+_PARITY_POLICIES = {
+    "full_sync": FullSync(),
+    "drop_slowest_3": DropSlowestK(3),
+    "async_4": AsyncBuffer(4),
+}
+
+
+@pytest.mark.parametrize("policy_name", sorted(_PARITY_POLICIES))
+def test_backend_parity_under_fault_schedule(policy_name):
+    """heapq vs vector under crashes + reordering: record-for-record
+    equality including fault counters, retry ledger and IEEE times."""
+    fleet = lognormal_fleet(64, dropout_prob=0.05, seed=3)
+    plan = FaultPlan(seed=3, crash_rate=0.15, reorder_rate=0.3,
+                     reorder_max_s=1.5)
+    ref = _run(fleet, _PARITY_POLICIES[policy_name], "heapq", faults=plan)
+    vec = _run(fleet, _PARITY_POLICIES[policy_name], "vector", faults=plan)
+    assert len(ref) == len(vec)
+    for a, b in zip(ref, vec):
+        assert a == b  # dataclass equality: floats, tuples, ledger, faults
+    assert ref.fault_totals() == vec.fault_totals()
+    assert ref.fault_totals()   # the plan actually injected something
+
+
+def test_zero_fault_plan_is_bitwise_no_plan_at_scheduler():
+    fleet = lognormal_fleet(32, dropout_prob=0.1, seed=1)
+    for backend in ("heapq", "vector"):
+        plain = _run(fleet, DropSlowestK(2), backend)
+        zeroed = _run(fleet, DropSlowestK(2), backend, faults=FaultPlan())
+        assert plain.records == zeroed.records
+
+
+# ---------------------------------------------------------------------------
+# retry ledger + edge outages
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_crash_retries_are_ledgered(backend):
+    fleet = uniform_fleet(16)
+    plan = FaultPlan(seed=11, crash_rate=0.6, max_retries=2)
+    trace = _run(fleet, FullSync(), backend, faults=plan)
+    totals = trace.fault_totals()
+    assert totals["crashes"] > 0 and totals["retries"] > 0
+    retried = [r for r in trace if r.faults.get("retries")]
+    assert retried
+    for r in retried:
+        # every retry re-sends the full model downlink, and the ledger
+        # says so in its own entry (the base entry stays analytic)
+        assert r.ledger["retry_downlink/dense"] == \
+            r.faults["retries"] * 4000
+        assert r.ledger["downlink/dense"] == 4 * 4000
+        assert r.downlink_bytes == (4 + r.faults["retries"]) * 4000
+
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_retry_budget_exhaustion_drops_the_client(backend):
+    """max_retries=0 turns every crash into a permanent drop: the crashed
+    client never uploads, but its wasted downlink is still ledgered."""
+    fleet = uniform_fleet(16)
+    plan = FaultPlan(seed=11, crash_rate=0.6, max_retries=0)
+    trace = _run(fleet, FullSync(), backend, faults=plan)
+    totals = trace.fault_totals()
+    assert totals["crashes"] > 0
+    assert totals.get("retries", 0) == 0
+    assert totals["crash_dropped"] == totals["crashes"]
+    for r in trace:
+        if r.faults.get("crash_dropped"):
+            assert len(r.participants) == 4 - r.faults["crash_dropped"]
+
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_edge_outage_rehomes_clients(backend):
+    """An edge down for the whole run: its clients re-home to the next
+    nearest edge, every round reports the outage, parity holds."""
+    fleet = lognormal_fleet(24, dropout_prob=0.0, seed=2)
+    plan = FaultPlan(seed=0, edge_outages=((0, 0.0, 1e9),))
+    topo = TwoTierTopology(num_edges=4, seed=0)
+    trace = _run(fleet, FullSync(), backend, faults=plan, topology=topo,
+                 cohort=12)
+    assert all(r.faults.get("edges_down") == 1 for r in trace)
+    assert trace.fault_totals().get("rehomed", 0) > 0
+    # a two-tier ledger still accounts every surviving byte
+    for r in trace:
+        assert r.ledger["server_uplink/pq"] > 0
+
+
+def test_edge_outage_backend_parity():
+    fleet = lognormal_fleet(24, dropout_prob=0.0, seed=2)
+    plan = FaultPlan(seed=0, edge_outages=((1, 0.0, 8.0),))
+    traces = []
+    for backend in ("heapq", "vector"):
+        topo = TwoTierTopology(num_edges=4, seed=0)
+        traces.append(_run(fleet, DropSlowestK(2), backend, faults=plan,
+                           topology=topo, cohort=8))
+    assert traces[0].records == traces[1].records
+
+
+# ---------------------------------------------------------------------------
+# server kills + cursor resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", [FullSync(), AsyncBuffer(4)],
+                         ids=["sync", "async"])
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_server_kill_raises_at_the_scheduled_round(backend, policy):
+    fleet = uniform_fleet(16)
+    plan = FaultPlan(seed=0, server_kill_rounds=(2,))
+    with pytest.raises(ServerKilled) as exc:
+        _run(fleet, policy, backend, faults=plan)
+    assert exc.value.round_index == 2
+    assert plan.disarm_kills_through(2).server_kill_rounds == ()
+
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_cursor_resume_reproduces_the_tail_under_faults(backend):
+    """Resuming from the round-3 cursor replays rounds 3..5 bitwise —
+    fault draws are keyed on (plan.seed, round), so a restarted process
+    redraws the same faults."""
+    fleet = lognormal_fleet(32, dropout_prob=0.1, seed=5)
+    plan = FaultPlan(seed=4, crash_rate=0.3)
+    cursors = {}
+    full = _run(fleet, DropSlowestK(2), backend, faults=plan,
+                on_round=lambda rd, cur: cursors.__setitem__(rd, cur))
+    resumed = _run(fleet, DropSlowestK(2), backend, faults=plan,
+                   cursor=cursors[2])
+    assert resumed.records == full.records[3:]
+    assert full.cursor["round"] == 6
+
+
+def test_async_rejects_cursor_resume():
+    fleet = uniform_fleet(8)
+    with pytest.raises(ValueError, match="async"):
+        _run(fleet, AsyncBuffer(2), "heapq", cursor={"round": 1, "t": 0.0,
+                                                     "rng": None})
+
+
+# ---------------------------------------------------------------------------
+# runtime screening: quarantine, canary, quorum
+# ---------------------------------------------------------------------------
+
+def test_chaos_training_quarantines_and_stays_finite():
+    """Poisoned + corrupted cohorts: every bad contribution is screened
+    out (the canary detects 100% of wire corruption), the aggregate stays
+    finite, and training still makes progress."""
+    plan = FaultPlan(seed=1, corrupt_rate=0.25, poison_rate=0.2,
+                     quorum_fraction=0.25)
+    tr = _chaos_trainer(plan)
+    state, hist = tr.run(8, jax.random.PRNGKey(0))
+    totals = tr.last_trace.fault_totals()
+    assert totals.get("quarantined", 0) > 0
+    assert totals.get("corrupt_undetected", 0) == 0
+    losses = [h["loss"] for h in hist if "loss" in h]
+    assert losses and all(np.isfinite(l) for l in losses)
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(state.params))
+
+
+def test_quorum_collapse_voids_every_round():
+    """poison_rate=1: nothing survives screening, every round is voided,
+    and the server parameters never move."""
+    plan = FaultPlan(seed=0, poison_rate=1.0, quorum_fraction=0.5)
+    tr = _chaos_trainer(plan)
+    key = jax.random.PRNGKey(0)
+    init = tr.init_state(key)
+    state, hist = tr.run(3, key, state=init)
+    assert tr.last_trace.fault_totals()["round_voided"] == 3
+    assert all("loss" not in h for h in hist)
+    for a, b in zip(jax.tree.leaves(init.params), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_zero_fault_plan_is_bitwise_no_plan_at_trainer():
+    key = jax.random.PRNGKey(0)
+    a_state, a_hist = _chaos_trainer(None).run(3, key)
+    b_state, b_hist = _chaos_trainer(FaultPlan()).run(3, key)
+    assert a_hist == b_hist
+    for a, b in zip(jax.tree.leaves(a_state.params),
+                    jax.tree.leaves(b_state.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume (the headline acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_kill_and_resume_is_bitwise_identical(tmp_path):
+    """A server killed at round 7 and restored from the round-6 snapshot
+    finishes with bitwise-identical params, opt state, history and trace
+    to the run that was never killed."""
+    base = FaultPlan(seed=5, crash_rate=0.1)
+    kill = dataclasses.replace(base, server_kill_rounds=(7,))
+    key = jax.random.PRNGKey(0)
+
+    tr_a = _chaos_trainer(base, warm_start=True, error_feedback=True)
+    st_a, hist_a = run_with_recovery(tr_a, 9, key, str(tmp_path / "a"),
+                                     checkpoint_every=3)
+    tr_b = _chaos_trainer(kill, warm_start=True, error_feedback=True)
+    st_b, hist_b = run_with_recovery(tr_b, 9, key, str(tmp_path / "b"),
+                                     checkpoint_every=3)
+
+    assert hist_a == hist_b
+    for a, b in zip(jax.tree.leaves(st_a.params), jax.tree.leaves(st_b.params)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree.leaves(st_a.opt_state),
+                    jax.tree.leaves(st_b.opt_state)):
+        np.testing.assert_array_equal(a, b)
+    assert tr_a.last_trace.records == tr_b.last_trace.records
+    # the restarted process must not re-die on the fired kill
+    assert tr_b.fault_plan.server_kill_rounds == (7,)  # plan restored
+
+
+def test_kill_on_first_segment_cold_restarts(tmp_path):
+    """A kill before the first snapshot exists: recovery re-initializes
+    from scratch (nothing on disk yet) and still finishes the run."""
+    plan = FaultPlan(seed=0, server_kill_rounds=(1,))
+    tr = _chaos_trainer(plan)
+    st, hist = run_with_recovery(tr, 4, jax.random.PRNGKey(0),
+                                 str(tmp_path / "ck"), checkpoint_every=3)
+    assert len(tr.last_trace.records) == 4
+    assert all(np.isfinite(h["loss"]) for h in hist if "loss" in h)
+
+
+def test_pathological_kill_plan_exhausts_restart_budget(tmp_path):
+    """A plan that kills every round can never complete a segment:
+    run_with_recovery must give up after max_restarts, not loop."""
+    plan = FaultPlan(seed=0, server_kill_rounds=tuple(range(20)))
+    tr = _chaos_trainer(plan)
+    with pytest.raises(ServerKilled):
+        run_with_recovery(tr, 6, jax.random.PRNGKey(0),
+                          str(tmp_path / "ck"), checkpoint_every=3,
+                          max_restarts=2)

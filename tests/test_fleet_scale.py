@@ -14,22 +14,22 @@ import numpy as np
 import pytest
 
 from repro.federated import (AsyncBuffer, ClientFleet, ClientProfile,
-                             Deadline, DropSlowestK, FullSync, Scheduler,
-                             TwoTierTopology, lognormal_fleet, mobile_fleet,
-                             uniform_fleet, validate_fleet)
+                             Deadline, DropSlowestK, FaultPlan, FullSync,
+                             Scheduler, TwoTierTopology, lognormal_fleet,
+                             mobile_fleet, uniform_fleet, validate_fleet)
 from repro.federated.network import IDEAL, transfer_seconds
 from repro.federated.topology import kmeans_points, simulate_locations
 
 
 def _run(fleet, policy, backend, rounds=5, cohort=4, topology=None,
-         seed=0, wire_kinds=None, uplink=1000, downlink=4000):
+         seed=0, wire_kinds=None, uplink=1000, downlink=4000, faults=None):
     """Drive one scheduler run with a stub execute and a cohort stream
     that is deterministic across calls (so backends see identical rounds)."""
     rng = np.random.default_rng(99)
     cohorts = [rng.choice(len(fleet), cohort, replace=False)
                for _ in range(rounds + 64)]
     sched = Scheduler(fleet=fleet, policy=policy, seed=seed, backend=backend,
-                      topology=topology)
+                      topology=topology, faults=faults)
     return sched.run(rounds, sample_cohort=lambda rd: cohorts[rd],
                      uplink_bytes=uplink, downlink_bytes=downlink,
                      execute=lambda i, parts, w: {"loss": float(len(parts))},
@@ -85,6 +85,24 @@ def test_backend_parity_holds_under_two_tier_topology(policy_name):
         traces.append(_run(fleet, policy, backend, topology=topo,
                            wire_kinds=("pq", "dense")))
     assert traces[0].records == traces[1].records
+
+
+@pytest.mark.parametrize("fleet_name", sorted(_fleets()))
+@pytest.mark.parametrize("policy_name", sorted(_policies()))
+def test_backend_parity_holds_under_fault_schedule(fleet_name, policy_name):
+    """The bitwise-parity contract extends to armed fault plans: crash
+    retries, reorder jitter and the per-round fault counters must be
+    identical across backends for every fleet x policy cell."""
+    fleet = _fleets()[fleet_name]
+    policy = _policies()[policy_name]
+    plan = FaultPlan(seed=13, crash_rate=0.25, max_retries=1,
+                     reorder_rate=0.4, reorder_max_s=1.0)
+    ref = _run(fleet, policy, "heapq", wire_kinds=("pq", "dense"),
+               faults=plan)
+    vec = _run(fleet, policy, "vector", wire_kinds=("pq", "dense"),
+               faults=plan)
+    assert ref.records == vec.records
+    assert ref.fault_totals() == vec.fault_totals()
 
 
 def test_auto_backend_matches_explicit_vector():

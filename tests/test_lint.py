@@ -86,9 +86,9 @@ def test_every_pass_is_exercised_by_a_fixture(tmp_manifest):
     for name in BAD_FIXTURES:
         for f in run_passes([_load(name)], make_passes()):
             hit.add(f.pass_name)
-    for f in run_passes([_load_federated("fleet_loops_bad.py")],
-                        make_passes()):
-        hit.add(f.pass_name)
+    for name in ("fleet_loops_bad.py", "wire_decode_bad.py"):
+        for f in run_passes([_load_federated(name)], make_passes()):
+            hit.add(f.pass_name)
     assert hit == set(available_passes())
 
 
@@ -132,6 +132,50 @@ def test_fleet_loop_pass_is_path_gated(tmp_manifest):
 
 
 # ---------------------------------------------------------------------------
+# wire-decode pass: unguarded decodes in hot paths
+# ---------------------------------------------------------------------------
+
+def test_wire_decode_seeded_violations(tmp_manifest):
+    """Bare decode, wrong-hierarchy except, and a decode inside a handler
+    body (outside its own try) all fire at the marked lines."""
+    mod = _load_federated("wire_decode_bad.py")
+    expected = _seeds(mod.source)
+    assert expected, "wire_decode_bad.py has no SEED markers"
+    got = sorted({(f.rule, f.line)
+                  for f in run_passes([mod], make_passes())})
+    assert got == expected
+
+
+def test_wire_decode_clean_fixture(tmp_manifest):
+    """Typed-hierarchy catches (incl. tuple form and the ValueError base)
+    and a reviewed loopback suppression all lint clean."""
+    findings = run_passes([_load_federated("wire_decode_clean.py")],
+                          make_passes())
+    assert findings == []
+
+
+def test_wire_decode_pass_is_path_gated(tmp_manifest):
+    src = (FIXTURES / "wire_decode_bad.py").read_text()
+    # outside repro/federated/: not a hot path, nothing fires
+    assert run_passes([Module("fixtures/wire_decode_bad.py", src)],
+                      make_passes(["wire-decode"])) == []
+    # federated test files are exempt
+    assert run_passes([Module("src/repro/federated/test_x.py", src)],
+                      make_passes(["wire-decode"])) == []
+    # the codec module itself is exempt: it *produces* the hierarchy
+    assert run_passes([Module("src/repro/federated/wire.py", src)],
+                      make_passes(["wire-decode"])) == []
+
+
+def test_wire_decode_repo_tree_is_clean():
+    """Every decode call in the real federated package is guarded (or
+    carries a reviewed loopback suppression)."""
+    findings = run_lint([str(REPO_ROOT / "src" / "repro" / "federated")],
+                        ["wire-decode"])
+    assert findings == [], [f.format() for f in findings]
+
+
+# ---------------------------------------------------------------------------
 # suppressions
 # ---------------------------------------------------------------------------
 
@@ -163,9 +207,10 @@ def test_file_suppression_and_disable_all(tmp_manifest):
 # framework: registry, findings, JSON schema
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_the_six_passes():
+def test_registry_lists_the_seven_passes():
     assert available_passes() == ("custom-vjp", "fleet-scale", "host-sync",
-                                  "mesh-axes", "pallas", "wire-format")
+                                  "mesh-axes", "pallas", "wire-decode",
+                                  "wire-format")
 
 
 def test_unknown_pass_selection_fails_loudly():

@@ -69,8 +69,8 @@ def test_measured_bytes_match_analytic(q, L, r, n, d):
     assert len(buf) * 8 == wire.wire_bits(cfg, n, d, "float16")
     overhead = wire.wire_bits(cfg, n, d, "float16") \
         - cfg.message_bits(n, d, phi_bits=16)
-    # header + sub-byte padding of the packed code stream, nothing else
-    assert 0 <= overhead <= wire.HEADER_BYTES * 8 + 7
+    # header + CRC trailer + sub-byte padding of the code stream, no more
+    assert 0 <= overhead <= (wire.HEADER_BYTES + wire.CRC_BYTES) * 8 + 7
 
 
 def test_multidim_leading_shape():
@@ -111,20 +111,21 @@ def test_unknown_version_rejected_with_clear_error():
     """A stale/foreign payload must fail loudly, not decode as garbage."""
     qb, _, _ = _qb()
     buf = bytearray(wire.encode_bytes(qb))
-    assert buf[4] == 2                              # current format version
+    assert buf[4] == 4                              # current format version
     buf[4] = 7                                      # a future/stale version
-    with pytest.raises(ValueError, match="version 7"):
+    with pytest.raises(wire.WireVersionError, match="version 7"):
         wire.decode_bytes(bytes(buf))
-    with pytest.raises(ValueError, match="version 7"):
+    with pytest.raises(wire.WireVersionError, match="version 7"):
         wire.decode_payload(bytes(buf))
 
 
 def test_version1_payloads_still_decode():
     """The PR 2 codec (version 1, zero flags byte) remains readable."""
     qb, _, _ = _qb()
-    buf = bytearray(wire.encode_bytes(qb, "float16"))
-    buf[4] = 1                                      # rewrite as version 1
-    wb = wire.decode_bytes(bytes(buf))
+    buf = wire._legacy_frame(wire.encode_bytes(qb, "float16"), 1)
+    assert buf[4] == 1 and len(buf) == len(wire.encode_bytes(qb, "float16")) \
+        - wire.CRC_BYTES
+    wb = wire.decode_bytes(buf)
     np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
 
 
@@ -193,14 +194,14 @@ def test_pq_delta_smaller_than_full_codebooks():
 
 
 def test_pq_delta_version_gated():
-    """pq-delta rides wire version 3; a v2 header with the pq-delta kind is
-    a protocol violation and must be rejected."""
+    """pq-delta was introduced at wire version 3; a v2 header with the
+    pq-delta kind is a protocol violation and must be rejected."""
     cfg, qb, ref = _delta_pair()
     payload, _ = wire.encode_pq_delta(qb, ref, 8)
-    assert payload[4] == 3                      # written as version 3
-    buf = bytearray(payload)
+    assert payload[4] == 4                      # written at current version
+    buf = bytearray(wire._legacy_frame(payload, 3))
     buf[4] = 2
-    with pytest.raises(ValueError, match="version >= 3"):
+    with pytest.raises(wire.WireVersionError, match="version >= 3"):
         wire.decode_pq_delta(bytes(buf), ref)
 
 
@@ -216,12 +217,167 @@ def test_pq_delta_needs_reference():
 
 
 def test_v2_payloads_still_decode_after_v3():
-    """v2 decode compatibility: every v2 kind still decodes; the default
-    pq encode still writes version 2 (v2 decoders keep working)."""
+    """Legacy decode compatibility: every v2/v3 frame (no CRC trailer, no
+    pq-delta epoch word) still decodes bit-exactly after the v4 bump."""
     qb, cfg, _ = _qb()
-    buf = wire.encode_bytes(qb, "float16")
-    assert buf[4] == 2
-    wb = wire.decode_bytes(buf)
+    for version in (2, 3):
+        buf = wire._legacy_frame(wire.encode_bytes(qb, "float16"), version)
+        assert buf[4] == version
+        wb = wire.decode_bytes(buf)
+        np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
+        dense = wire._legacy_frame(
+            wire.encode_dense(np.zeros((4, 8), np.float32), 4, 8), version)
+        assert dense[4] == version
+        assert wire.decode_payload(dense).kind == "dense"
+
+
+def test_v3_pq_delta_frames_still_decode():
+    """A v3 pq-delta body (no epoch word) decodes bit-identically to the
+    v4 frame it was downgraded from; the epoch check is skipped."""
+    cfg, qb, ref = _delta_pair()
+    payload, recon = wire.encode_pq_delta(qb, ref, 8, epoch=9)
+    legacy = wire._legacy_frame(payload, 3)
+    assert len(legacy) == len(payload) - wire.CRC_BYTES * 2  # CRC + epoch
+    wb = wire.decode_pq_delta(legacy, ref, expected_epoch=3)  # ignored: v3
+    np.testing.assert_array_equal(wb.codebooks, recon)
     np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
-    dense = wire.encode_dense(np.zeros((4, 8), np.float32), 4, 8)
-    assert dense[4] == 2 and wire.decode_payload(dense).kind == "dense"
+
+
+# ---------------------------------------------------------------------------
+# v4: CRC32 trailer, typed WireError hierarchy, pq-delta lineage epoch
+# ---------------------------------------------------------------------------
+
+def _sample_payloads():
+    """One valid payload of every wire kind (all at the current version)."""
+    qb, cfg, _ = _qb()
+    _, qb_delta, ref = _delta_pair()
+    delta, _ = wire.encode_pq_delta(qb_delta, ref, 8, epoch=1)
+    scalar = wire.encode_scalar(np.arange(32).reshape(4, 8) % 4, -1.0, 0.5,
+                                2, 4, 8)
+    nested = wire.encode_sparse(np.array([1, 5, 9]), 4, 8, inner=scalar)
+    return [
+        ("pq", wire.encode_bytes(qb, "float16"), wire.decode_payload),
+        ("dense", wire.encode_dense(np.ones((4, 8), np.float32), 4, 8),
+         wire.decode_payload),
+        ("sparse", wire.encode_sparse(np.array([0, 3, 17]), 4, 8,
+                                      values=np.array([1., 2., 3.])),
+         wire.decode_payload),
+        ("sparse-nested", nested, wire.decode_payload),
+        ("scalar", scalar, wire.decode_payload),
+        ("pq-delta", delta,
+         lambda p: wire.decode_pq_delta(p, ref, expected_epoch=1)),
+    ]
+
+
+def test_crc_detects_any_single_bitflip():
+    """Every single-bit flip of a v4 frame raises a typed WireError —
+    the CRC trailer leaves no silently-corruptible byte."""
+    rng = np.random.default_rng(7)
+    for name, payload, decode in _sample_payloads():
+        positions = rng.choice(len(payload) * 8,
+                               size=min(192, len(payload) * 8),
+                               replace=False)
+        for bitpos in positions:
+            buf = bytearray(payload)
+            buf[bitpos // 8] ^= 1 << (bitpos % 8)
+            with pytest.raises(wire.WireError):
+                decode(bytes(buf))
+
+
+def test_truncation_always_typed_error():
+    """Any truncation of any kind × any supported version raises a typed
+    WireError — never an IndexError, wrong tensor, or silent success."""
+    rng = np.random.default_rng(8)
+    for name, payload, decode in _sample_payloads():
+        versions = [4, 3, 2] if name != "pq" else [4, 3, 2, 1]
+        if name == "pq-delta":
+            versions = [4, 3]
+        for version in versions:
+            frame = wire._legacy_frame(payload, version)
+            cuts = set(rng.integers(0, len(frame), size=24).tolist())
+            cuts |= {0, 1, wire.HEADER_BYTES - 1, wire.HEADER_BYTES,
+                     len(frame) - 1}
+            for cut in sorted(cuts):
+                with pytest.raises(wire.WireError):
+                    decode(frame[:cut])
+
+
+def test_duplication_and_trailing_garbage_rejected():
+    for name, payload, decode in _sample_payloads():
+        with pytest.raises(wire.WireError):
+            decode(payload + payload)               # duplicated frame
+        with pytest.raises(wire.WireError):
+            decode(payload + b"\x00\x01\x02\x03")   # trailing garbage
+
+
+def test_legacy_bitflips_never_escape_the_error_hierarchy():
+    """Pre-CRC frames cannot detect every flip, but a flip must only ever
+    produce a typed WireError or a controlled decode — no IndexError or
+    crash from deep inside the unpackers."""
+    rng = np.random.default_rng(9)
+    for name, payload, decode in _sample_payloads():
+        if name == "pq-delta":
+            continue                                # v3 covered below
+        frame = wire._legacy_frame(payload, 2)
+        for bitpos in rng.choice(len(frame) * 8, size=96, replace=False):
+            buf = bytearray(frame)
+            buf[bitpos // 8] ^= 1 << (bitpos % 8)
+            try:
+                decode(bytes(buf))
+            except wire.WireError:
+                pass
+
+
+def test_pq_delta_epoch_lineage():
+    """The epoch word round-trips, and a mismatched receiver epoch raises
+    WireResyncError (the signal to request a full-codebook resync)."""
+    cfg, qb, ref = _delta_pair()
+    payload, _ = wire.encode_pq_delta(qb, ref, 8, epoch=5)
+    assert wire.pq_delta_epoch(payload) == 5
+    wire.decode_pq_delta(payload, ref, expected_epoch=5)    # in sync
+    wire.decode_pq_delta(payload, ref)                      # check skipped
+    with pytest.raises(wire.WireResyncError, match="epoch 5"):
+        wire.decode_pq_delta(payload, ref, expected_epoch=6)
+    with pytest.raises(wire.WireResyncError, match="resync"):
+        wire.decode_pq_delta(payload, ref[:, :1], expected_epoch=5)
+
+
+def test_delta_codebook_link_resync():
+    """The stateful link ships a full codebook when unsynced, deltas once
+    synced, and recovers from a forced resync with epochs in lockstep."""
+    from repro.core.quantizer import quantize_stateful
+    cfg = PQConfig(num_subvectors=8, num_clusters=16, kmeans_iters=3)
+    sender = wire.DeltaCodebookLink()
+    receiver = wire.DeltaCodebookLink()
+    st = None
+    for i in range(3):
+        z = jax.random.normal(jax.random.PRNGKey(40 + i), (24, 64))
+        qb, st = quantize_stateful(z, cfg, st)
+        payload = sender.encode(qb)
+        expect = "pq" if i == 0 else "pq-delta"
+        assert wire.payload_kind(payload) == expect
+        wb = receiver.decode(payload)
+        np.testing.assert_array_equal(wb.codes, np.asarray(qb.codes))
+        np.testing.assert_array_equal(wb.codebooks, sender.ref)
+        assert receiver.epoch == sender.epoch == 1
+    # receiver loses lineage (say, a restored checkpoint): stale-epoch
+    # deltas are rejected, the resync handshake restores the loop
+    receiver.epoch = 0
+    z = jax.random.normal(jax.random.PRNGKey(50), (24, 64))
+    qb, st = quantize_stateful(z, cfg, st)
+    with pytest.raises(wire.WireResyncError):
+        receiver.decode(sender.encode(qb))
+    receiver.request_resync()
+    sender.request_resync()
+    payload = sender.encode(qb)
+    assert wire.payload_kind(payload) == "pq"
+    wb = receiver.decode(payload)
+    np.testing.assert_array_equal(wb.codebooks, sender.ref)
+    assert receiver.epoch == sender.epoch == 1    # lockstep re-established
+    # and the loop carries deltas again
+    z = jax.random.normal(jax.random.PRNGKey(51), (24, 64))
+    qb, st = quantize_stateful(z, cfg, st)
+    payload = sender.encode(qb)
+    assert wire.payload_kind(payload) == "pq-delta"
+    np.testing.assert_array_equal(receiver.decode(payload).codebooks,
+                                  sender.ref)

@@ -56,10 +56,13 @@ snapshots the rows as ``BENCH_network.json`` at the repo root
 ``--emit-trace [PATH]`` additionally records the whole run through the
 ``repro.obs`` telemetry recorder — scheduler rounds on the virtual-clock
 lane, executor/wire/host spans on the wall-clock lane, per-round byte
-ledgers — writing an append-only JSONL event log (default
-``BENCH_network_trace.jsonl``) plus a Perfetto-loadable trace_event twin
+ledgers, and the contribution flight recorder's rollups + exemplar
+lifecycles — writing an append-only JSONL event log (default
+``benchmarks/out/BENCH_network_trace.jsonl``; the out/ dir is
+gitignored scratch) plus a Perfetto-loadable trace_event twin
 (``--perfetto PATH`` to relocate it). Summarize the JSONL with
-``python -m repro.obs <path>``.
+``python -m repro.obs <path>`` (``--health`` grades it against the SLO
+rules; ``--flight <client-or-id>`` reconstructs one lifecycle).
 """
 
 from __future__ import annotations
@@ -73,8 +76,10 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, write_bench_json
+from benchmarks.common import emit, out_path, write_bench_json
 from repro import obs
+from repro.obs import flight as flightlib
+from repro.obs import slo
 from repro.core.quantizer import PQConfig
 from repro.data.synthetic import make_federated_image_data
 from repro.federated import (DEFAULT_CHAOS, AsyncBuffer, AutoscalePlan,
@@ -275,6 +280,10 @@ def run_chaos_cell(data, fleets, policies, rounds, fast):
                 rounds, fast, fault_plan=plan)
             ft = trainer.last_trace.fault_totals()
             totals[(plan_name, policy_name)] = (row, ft)
+            # the run-health signals the SLO monitors grade, as columns:
+            # how much extra downlink the crash retries cost, and what
+            # fraction of admitted contributions the server quarantined
+            health = slo.trace_signals(trainer.last_trace)
             rows.append(dict(
                 {"name": f"chaos_{plan_name}_{policy_name}_fedlite"}, **row,
                 crashes=ft.get("crashes", 0),
@@ -283,6 +292,8 @@ def run_chaos_cell(data, fleets, policies, rounds, fast):
                 quarantined=ft.get("quarantined", 0),
                 rounds_voided=ft.get("round_voided", 0),
                 corrupt_undetected=ft.get("corrupt_undetected", 0),
+                retry_byte_overhead=round(health["retry_byte_overhead"], 4),
+                quarantine_rate=round(health["quarantine_rate"], 4),
                 downlink_inflation=round(
                     row["downlink_mb_per_round"] / max(clean_dl, 1e-12), 3)))
     base_row, base_ft = totals[("baseline", "full_sync")]
@@ -525,10 +536,34 @@ def run_fleet_scale(fast: bool = True):
                 row["edge_uplink_bytes"] = tiers.get("edge_uplink", 0)
                 row["server_uplink_bytes"] = tiers.get("server_uplink", 0)
             rows.append(row)
-        # bitwise parity at fleet scale: same cohorts, same records
+        # bitwise parity at fleet scale: same cohorts, same records,
+        # and the flight recorder saw the identical contribution set
         assert traces[(clients, "heapq")].records \
             == traces[(clients, "vector")].records, \
             f"backend traces diverge at {clients} clients"
+        assert traces[(clients, "heapq")].flights \
+            == traces[(clients, "vector")].flights, \
+            f"backend flight frames diverge at {clients} clients"
+
+    # flights-overhead A/B on the headline cell: re-run the 1M vector
+    # cell (fleet/cohort/topo still bound from the last loop iteration)
+    # off/on back-to-back. Both legs are warm — the cells loop above
+    # already paid the lazy topology clustering and allocator warmup, so
+    # neither leg carries setup cost the other doesn't — and the min of
+    # two interleaved passes per leg damps shared-host jitter. Recording
+    # must cost <= 15% wall-clock at O(cohort) per round.
+    wall_off = wall_on = float("inf")
+    for _ in range(2):
+        prev = flightlib.set_flights(False)
+        try:
+            w, _ = _fleet_scale_cell(fleet, cohort, "vector", rounds,
+                                     topology=topo)
+        finally:
+            flightlib.set_flights(prev)
+        wall_off = min(wall_off, w)
+        w, _ = _fleet_scale_cell(fleet, cohort, "vector", rounds,
+                                 topology=topo)
+        wall_on = min(wall_on, w)
 
     # the headline acceptance criteria: 1M clients, 10k cohort, vector
     big = next(r for r in rows
@@ -541,6 +576,18 @@ def run_fleet_scale(fast: bool = True):
     assert big["server_uplink_bytes"] < big["edge_uplink_bytes"], \
         "edge pre-combination should shrink the server tier below the " \
         "edge tier"
+    # 5 ms absolute slack so a fast host does not turn scheduler jitter
+    # into a failed relative bound
+    overhead = wall_on / max(wall_off, 1e-9)
+    assert wall_on <= max(1.15 * wall_off, wall_off + 0.005), \
+        f"flight recording costs {overhead:.2f}x wall-clock on the " \
+        f"1M-client vector cell (budget 1.15x)"
+    rows.append({
+        "name": "fleet_flights_overhead", "us_per_call": 0.0,
+        "s_per_round_flights_on": round(wall_on, 4),
+        "s_per_round_flights_off": round(wall_off, 4),
+        "overhead_x": round(overhead, 3),
+    })
     rows.append({
         "name": "fleet_scale_claim", "us_per_call": 0.0,
         "s_per_round_1m_vector": big["s_per_round"],
@@ -690,12 +737,13 @@ if __name__ == "__main__":
                          "policy; graceful-degradation + canary "
                          "assertions)")
     ap.add_argument("--emit-trace", nargs="?",
-                    const="BENCH_network_trace.jsonl", default=None,
+                    const="__default__", default=None,
                     metavar="PATH",
                     help="record an obs telemetry trace of the run and "
                          "write it as JSONL (default "
-                         "BENCH_network_trace.jsonl); a Perfetto-loadable "
-                         "twin is written next to it")
+                         "benchmarks/out/BENCH_network_trace.jsonl — "
+                         "gitignored scratch); a Perfetto-loadable twin "
+                         "is written next to it")
     ap.add_argument("--perfetto", default=None, metavar="PATH",
                     help="where to write the Perfetto trace_event JSON "
                          "(default: the --emit-trace path with .jsonl "
@@ -703,6 +751,8 @@ if __name__ == "__main__":
     ap.add_argument("--_scaling-leg", type=int, default=0,
                     dest="scaling_leg", help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.emit_trace == "__default__":
+        args.emit_trace = str(out_path("BENCH_network_trace.jsonl"))
     if args.scaling_leg:
         _scaling_leg(args.scaling_leg)
     else:

@@ -1,17 +1,69 @@
 """Shared benchmark utilities: timing, CSV emission, and the
 ``BENCH_<suite>.json`` snapshot format suites persist at the repo root so
-perf/bytes trajectories are comparable across PRs."""
+perf/bytes trajectories are comparable across PRs.
+
+Every ``write_bench_json`` additionally appends its rows to
+``BENCH_history.jsonl`` (one line per row, keyed ``suite/name`` + git
+sha) — the append-only record ``benchmarks/sentinel.py`` compares
+against its committed baseline to catch silent regressions.
+
+Scratch artifacts (event-log traces, Perfetto exports) go under
+``benchmarks/out/`` (gitignored); only the JSON snapshots and the
+history live at the repo root / in git.
+"""
 
 from __future__ import annotations
 
 import json
 import pathlib
+import subprocess
 import time
 from typing import Callable, Dict, List
 
 import jax
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+HISTORY_PATH = REPO_ROOT / "BENCH_history.jsonl"
+# gitignored scratch dir for run artifacts (traces, perfetto exports)
+OUT_DIR = REPO_ROOT / "benchmarks" / "out"
+
+
+def out_path(name: str) -> pathlib.Path:
+    """A path under the gitignored ``benchmarks/out/`` scratch dir."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    return OUT_DIR / name
+
+
+def git_sha() -> str:
+    """The current short commit sha, or ``"unknown"`` outside a checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def append_bench_history(suite: str, rows: List[Dict],
+                         path: pathlib.Path = None) -> pathlib.Path:
+    """Append one JSONL line per row: ``{suite, name, sha, t, metrics}``.
+
+    ``metrics`` keeps only the numeric fields — the shape the sentinel's
+    per-metric tolerance comparison consumes."""
+    path = path or HISTORY_PATH
+    sha = git_sha()
+    now = time.time()
+    with path.open("a", encoding="utf-8") as fh:
+        for r in rows:
+            metrics = {k: v for k, v in r.items()
+                       if k != "name" and isinstance(v, (int, float))
+                       and not isinstance(v, bool)}
+            fh.write(json.dumps({
+                "suite": suite, "name": str(r.get("name", "?")),
+                "sha": sha, "t": now, "metrics": metrics,
+            }, sort_keys=True) + "\n")
+    return path
 
 
 def write_bench_json(suite: str, rows: List[Dict], note: str = "") -> pathlib.Path:
@@ -19,15 +71,32 @@ def write_bench_json(suite: str, rows: List[Dict], note: str = "") -> pathlib.Pa
 
     Call this BEFORE ``emit`` — emit pops ``name``/``us_per_call`` out of
     the very same row dicts while printing the CSV.
+
+    Also appends every row to ``BENCH_history.jsonl`` for the
+    bench-regression sentinel.
     """
     path = REPO_ROOT / f"BENCH_{suite}.json"
+    # merge by row name into the existing snapshot: bench flags select
+    # disjoint cell subsets (--chaos vs --fleet-scale vs the default
+    # sweep), and the regression sentinel gates the committed snapshot —
+    # one invocation must refresh its own rows without evicting the rest
+    merged: Dict[str, Dict] = {}
+    try:
+        prior = json.loads(path.read_text())
+        if isinstance(prior, dict) and prior.get("suite") == suite:
+            merged = {r["name"]: r for r in prior.get("rows", [])
+                      if isinstance(r, dict) and "name" in r}
+    except (OSError, ValueError):
+        pass
+    merged.update((r["name"], r) for r in rows if "name" in r)
     payload = {
         "suite": suite,
         "jax_backend": jax.default_backend(),
         "note": note,
-        "rows": rows,
+        "rows": list(merged.values()),
     }
     path.write_text(json.dumps(payload, indent=2, sort_keys=False) + "\n")
+    append_bench_history(suite, rows)
     return path
 
 

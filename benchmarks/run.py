@@ -77,6 +77,12 @@ def aggregate_bench_json() -> None:
         print(f"bench_json/{path.name},0.0,"
               f"suite={payload.get('suite')};rows={len(rows)};"
               f"backend={payload.get('jax_backend')}")
+    # trace artifacts (event logs, perfetto exports) live in the
+    # gitignored benchmarks/out/ scratch dir, not at the repo root
+    out_dir = REPO_ROOT / "benchmarks" / "out"
+    for path in sorted(out_dir.glob("*")) if out_dir.is_dir() else []:
+        print(f"bench_artifact/{path.name},0.0,"
+              f"bytes={path.stat().st_size}")
 
 
 def main() -> None:

@@ -1,0 +1,196 @@
+"""Bench-regression sentinel: compare fresh bench rows to the baseline.
+
+Every ``write_bench_json`` call appends its rows to ``BENCH_history.jsonl``
+(keyed ``suite/name`` + git sha); this module compares the *current*
+``BENCH_<suite>.json`` snapshots against the committed
+``benchmarks/BENCH_baseline.json`` and flags any metric whose delta
+exceeds its per-metric tolerance.
+
+Metrics fall into three classes:
+
+  * **gated** (default) — deterministic outputs of the simulation:
+    bytes/MB per round, simulated seconds, drop/quarantine counts,
+    rates, compression ratios. These are bit-stable across runs on a
+    fixed tree, so the tolerance is tight (1%) and a breach fails CI.
+  * **loss-like** (name contains ``loss``) — deterministic too, but
+    legitimately moved by any training-path PR; gated with a generous
+    25% so only a blow-up trips the sentinel.
+  * **noisy** (host wall-clock: ``us_per_call``, ``wall``, ``rss``,
+    ``setup``, ``speedup``) — machine-dependent; tracked in the report,
+    never gated. Wall-clock regressions are caught by the targeted
+    bench assertions (e.g. the fleet-scale flights-overhead cell), not
+    by cross-machine comparison.
+
+CLI::
+
+    python benchmarks/sentinel.py check               # red on regression
+    python benchmarks/sentinel.py check --inject-regression  # self-test red
+    python benchmarks/sentinel.py update              # rewrite baseline
+
+``check`` only grades the intersection of baseline and current rows —
+new rows are reported as untracked (add them with ``update``), vanished
+rows as missing (a removed bench is a reviewable event, not a failure).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE_PATH = REPO_ROOT / "benchmarks" / "BENCH_baseline.json"
+
+_NOISY_RE = re.compile(
+    r"(us_per_call|wall|rss|setup|speedup|s_per_round|overhead_x)")
+_LOSS_RE = re.compile(r"loss")
+
+#: (kind, relative tolerance or None=tracked-only)
+GATED_REL_TOL = 0.01
+LOSS_REL_TOL = 0.25
+
+
+def metric_tolerance(metric: str) -> Optional[float]:
+    """Per-metric relative tolerance; None = tracked, never gated."""
+    if _NOISY_RE.search(metric):
+        return None
+    if _LOSS_RE.search(metric):
+        return LOSS_REL_TOL
+    return GATED_REL_TOL
+
+
+def _numeric(row: Dict) -> Dict[str, float]:
+    return {k: float(v) for k, v in row.items()
+            if k != "name" and isinstance(v, (int, float))
+            and not isinstance(v, bool)}
+
+
+def load_current(root: pathlib.Path = REPO_ROOT) -> Dict[str, Dict[str, float]]:
+    """``{"suite/name": {metric: value}}`` from every BENCH_<suite>.json."""
+    out: Dict[str, Dict[str, float]] = {}
+    for path in sorted(root.glob("BENCH_*.json")):
+        try:
+            doc = json.loads(path.read_text())
+        except ValueError:
+            continue
+        if not isinstance(doc, dict) or "rows" not in doc:
+            continue  # e.g. a stray perfetto export
+        suite = doc.get("suite") or path.stem.replace("BENCH_", "")
+        for row in doc["rows"]:
+            if isinstance(row, dict) and "name" in row:
+                out[f"{suite}/{row['name']}"] = _numeric(row)
+    return out
+
+
+def load_baseline(path: pathlib.Path = BASELINE_PATH) -> Dict[str, Dict[str, float]]:
+    doc = json.loads(path.read_text())
+    return {k: {m: float(v) for m, v in row.items()}
+            for k, row in doc.get("rows", {}).items()}
+
+
+def compare(baseline: Dict[str, Dict[str, float]],
+            current: Dict[str, Dict[str, float]],
+            ) -> Tuple[List[Dict], List[str], List[str]]:
+    """Grade current vs baseline on their intersection.
+
+    Returns ``(deltas, untracked, missing)``; each delta dict carries
+    ``key, metric, base, cur, rel, tol, gated, flagged``."""
+    deltas: List[Dict] = []
+    untracked = sorted(set(current) - set(baseline))
+    missing = sorted(set(baseline) - set(current))
+    for key in sorted(set(baseline) & set(current)):
+        base_row, cur_row = baseline[key], current[key]
+        for metric in sorted(set(base_row) & set(cur_row)):
+            base, cur = base_row[metric], cur_row[metric]
+            denom = max(abs(base), 1e-12)
+            rel = abs(cur - base) / denom
+            tol = metric_tolerance(metric)
+            gated = tol is not None
+            deltas.append({
+                "key": key, "metric": metric, "base": base, "cur": cur,
+                "rel": rel, "tol": tol, "gated": gated,
+                "flagged": bool(gated and rel > tol),
+            })
+    return deltas, untracked, missing
+
+
+def inject_regression(current: Dict[str, Dict[str, float]]) -> str:
+    """Perturb the first gated metric by 10x its tolerance (self-test)."""
+    for key in sorted(current):
+        for metric in sorted(current[key]):
+            tol = metric_tolerance(metric)
+            if tol is None:
+                continue
+            base = current[key][metric]
+            bump = (abs(base) or 1.0) * tol * 10.0
+            current[key][metric] = base + bump
+            return f"{key}:{metric}"
+    raise SystemExit("no gated metric found to perturb")
+
+
+def cmd_check(args: argparse.Namespace) -> int:
+    if not args.baseline.exists():
+        print(f"sentinel: no baseline at {args.baseline}; run "
+              f"'python benchmarks/sentinel.py update' first",
+              file=sys.stderr)
+        return 2
+    baseline = load_baseline(args.baseline)
+    current = load_current(args.root)
+    if args.inject_regression:
+        where = inject_regression(current)
+        print(f"sentinel: injected synthetic regression at {where}")
+    deltas, untracked, missing = compare(baseline, current)
+    flagged = [d for d in deltas if d["flagged"]]
+    for d in flagged:
+        print(f"REGRESSION  {d['key']} {d['metric']}: "
+              f"{d['base']:g} -> {d['cur']:g} "
+              f"(rel {d['rel']:.3%} > tol {d['tol']:.0%})")
+    if args.verbose:
+        for d in deltas:
+            if d["flagged"]:
+                continue
+            kind = "gated" if d["gated"] else "tracked"
+            print(f"ok ({kind})  {d['key']} {d['metric']}: "
+                  f"{d['base']:g} -> {d['cur']:g} (rel {d['rel']:.3%})")
+    for key in untracked:
+        print(f"untracked   {key} (not in baseline; 'update' to adopt)")
+    for key in missing:
+        print(f"missing     {key} (in baseline, no current row)")
+    n_gated = sum(d["gated"] for d in deltas)
+    print(f"sentinel: {len(flagged)} regression(s) across "
+          f"{n_gated} gated metric(s) "
+          f"({len(deltas) - n_gated} tracked-only)")
+    return 1 if flagged else 0
+
+
+def cmd_update(args: argparse.Namespace) -> int:
+    current = load_current(args.root)
+    payload = {"note": "bench-regression sentinel baseline; refresh with "
+                       "'python benchmarks/sentinel.py update'",
+               "rows": current}
+    args.baseline.write_text(
+        json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"sentinel: baseline updated with {len(current)} row(s) "
+          f"-> {args.baseline}")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("command", choices=["check", "update"])
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE_PATH)
+    ap.add_argument("--root", type=pathlib.Path, default=REPO_ROOT,
+                    help="directory holding the BENCH_<suite>.json files")
+    ap.add_argument("--inject-regression", action="store_true",
+                    help="perturb one gated metric 10x past tolerance "
+                         "(CI self-test: check must go red)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    return cmd_check(args) if args.command == "check" else cmd_update(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -47,6 +47,30 @@ https://ui.perfetto.dev). Summarize with ``python -m repro.obs <jsonl>``:
     PYTHONPATH=src python examples/femnist_federated_training.py \
         --rounds 100 --fleet lognormal --emit-trace
     PYTHONPATH=src python -m repro.obs femnist_trace.jsonl --target 2.0
+
+Inspector cookbook — everything below works on any ``--emit-trace`` log
+(the run-forensics layer is always recorded; add ``--chaos`` to make the
+flight lifecycles interesting):
+
+    # round table, duration percentiles, byte ledger, time-to-target
+    python -m repro.obs femnist_trace.jsonl --target 2.0
+    # the same document as JSON, for scripting/jq
+    python -m repro.obs femnist_trace.jsonl --json | jq .ledger
+    # per-round fault ledger: crashes, retries, quarantines, re-homes
+    python -m repro.obs femnist_trace.jsonl --faults
+    # grade the run against the default SLOs + one ad-hoc rule
+    python -m repro.obs femnist_trace.jsonl --health
+    python -m repro.obs femnist_trace.jsonl --slo "drop_rate<=0.3@50"
+    # reconstruct one contribution's causal lifecycle end-to-end:
+    # sampled -> placed -> uplink (retries/re-homes) -> screening -> state
+    python -m repro.obs femnist_trace.jsonl --flight r3-c17-s5
+    # ...or every recorded exemplar flight for a client id
+    python -m repro.obs femnist_trace.jsonl --flight 17
+
+In the Perfetto UI the exemplar flights render as flow arrows linking
+each contribution's uplink span (virtual-clock lane) to the server
+screening span, so one straggling or quarantined update is traceable by
+eye across lanes.
 """
 
 import argparse
@@ -59,9 +83,9 @@ from repro.checkpointing import save_checkpoint
 from repro.core.quantizer import PQConfig
 from repro.core.split import tree_bits
 from repro.data.synthetic import make_federated_image_data
-from repro.federated import (AsyncBuffer, Deadline, DropSlowestK,
-                             FederatedTrainer, FullSync, lognormal_fleet,
-                             mobile_fleet)
+from repro.federated import (DEFAULT_CHAOS, AsyncBuffer, Deadline,
+                             DropSlowestK, FederatedTrainer, FullSync,
+                             lognormal_fleet, mobile_fleet)
 from repro.models.paper_models import FemnistCNN
 from repro.optim import sgd
 
@@ -110,6 +134,11 @@ def main():
     ap.add_argument("--autoscale", action="store_true",
                     help="drive the run with the trace-driven autoscaler "
                          "(re-plans cohort/policy/downlink every 8 rounds)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm DEFAULT_CHAOS fault injection (crashes, "
+                         "payload corruption, poisoning) so the recorded "
+                         "flight lifecycles exercise retries/quarantine; "
+                         "the SLO monitor grades the finished run")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--emit-trace", nargs="?", const="femnist_trace.jsonl",
                     default=None, metavar="PATH",
@@ -147,6 +176,10 @@ def main():
                                 policy=policy, downlink_compressor=downlink,
                                 warm_start=args.warm_start,
                                 codebook_delta_bits=args.delta_bits or None,
+                                fault_plan=DEFAULT_CHAOS if args.chaos
+                                else None,
+                                slo_monitor=obs.HealthMonitor()
+                                if args.emit_trace else None,
                                 seed=seed, executor=args.executor)
 
     eval_batch = data.eval_batch(jax.random.PRNGKey(99), 512)

@@ -192,35 +192,63 @@ turn the same trainer into the paper-§5 trade-off harness driven by
 
 Observability
 -------------
-The whole subsystem is permanently instrumented through `repro.obs` —
-three pillars, all free when no recorder is configured:
+The whole subsystem is permanently instrumented through `repro.obs`,
+organized as three layers — each built on the one below, all free when
+no recorder is configured:
 
-  * **Spans on two time lanes.** ``obs.configure(run=...)`` installs a
-    recorder; from then on `Scheduler.run` records every round twice —
-    once on the *host wall-clock* lane (what the process spent, jit
-    dispatch only, never a device sync) and once on the *scheduler
-    virtual-clock* lane (what the simulated fleet spent) — alongside
-    executor place/execute phases, wire encode/decode, Lloyd/kmeans and
-    checkpoint I/O spans. Autoscaler plan moves and straggler policy cuts
-    are instant events on the same log. Export with
-    ``Recorder.write_jsonl`` (append-only JSONL, the durable artifact)
-    and ``Recorder.write_perfetto`` (Chrome trace_event JSON; the two
-    lanes render as two processes at https://ui.perfetto.dev).
-  * **Sync-free in-jit metrics.** Jitted steps return metrics as device
-    arrays through their aux pytrees (``obs.counter`` / ``obs.gauge`` /
-    ``obs.histogram`` are jit-safe helpers); `FederatedTrainer.run` and
-    `run_fedavg` record them into an `obs.MetricsBuffer` — a plain list
-    append per round — and convert everything with ONE ``jax.device_get``
-    at the end of the run. tests/test_obs.py counts transfers to hold
-    instrumented runs to "no more than uninstrumented".
-  * **The byte ledger + run inspector.** Each `RoundRecord` carries a
-    ``ledger`` mapping ``"<direction>/<wire-kind>"`` to measured bytes
-    (``Trace.ledger_totals()`` for whole-run totals), so "how many bytes
-    were pq vs dense" is a first-class query. ``python -m repro.obs
-    <run.jsonl>`` prints round tables, duration percentiles, the ledger
-    and bytes/time-to-target; ``benchmarks/bench_network.py
-    --emit-trace`` and the femnist example's ``--emit-trace`` produce
-    such logs end-to-end.
+  * **Layer 1 — spans + sync-free metrics (how long, how often).**
+    ``obs.configure(run=...)`` installs a recorder; from then on
+    `Scheduler.run` records every round twice — once on the *host
+    wall-clock* lane (what the process spent, jit dispatch only, never a
+    device sync) and once on the *scheduler virtual-clock* lane (what
+    the simulated fleet spent) — alongside executor place/execute
+    phases, wire encode/decode, Lloyd/kmeans and checkpoint I/O spans;
+    autoscaler plan moves and straggler cuts are instant events on the
+    same log. Jitted steps return metrics as device arrays through aux
+    pytrees (``obs.counter`` / ``obs.gauge`` / ``obs.histogram`` are
+    jit-safe) into an `obs.MetricsBuffer`, converted with ONE
+    ``jax.device_get`` at the end of the run — tests/test_obs.py counts
+    transfers to hold instrumented runs to "no more than
+    uninstrumented". Export with ``Recorder.write_jsonl`` (append-only
+    JSONL, the durable artifact; ``obs.read_jsonl_tolerant`` re-reads
+    logs whose writer was killed mid-line) and ``Recorder.write_perfetto``
+    (Chrome trace_event JSON; the two lanes render as two processes at
+    https://ui.perfetto.dev).
+  * **Layer 2 — the byte ledger (how many bytes, which wire).** Each
+    `RoundRecord` carries a ``ledger`` mapping
+    ``"<direction>/<wire-kind>"`` to measured bytes
+    (``Trace.ledger_totals()`` for whole-run totals), including
+    fault-attributed entries like ``retry_downlink/dense``, so "how many
+    bytes were pq vs dense" and "what did crashes cost" are first-class
+    queries.
+  * **Layer 3 — contribution flights + SLO health (what happened to
+    each update, and was the run OK).** Every sampled cohort
+    contribution gets a stable flight id (``r{round}-c{client}-s{seq}``)
+    and a `repro.obs.FlightFrame` row tracing its causal lifecycle —
+    sampled → placed (executor shard, edge) → uplink (crash retries,
+    re-homes) → terminal state (aggregated / policy-cut / dropped /
+    quarantined / voided) — recorded identically by the heapq and
+    vectorized scheduler backends (asserted in tests), persisted through
+    kill-and-resume snapshots, and kept O(cohort) at 1M clients via
+    per-round rollup histograms plus reservoir-sampled exemplar
+    lifecycles; in Perfetto, flow arrows link each exemplar's spans
+    across the two lanes. On top of the same reductions,
+    `repro.obs.HealthMonitor` grades declarative windowed SLO rules
+    (``tail_ratio<=3``, ``quarantine_rate<=0.25``, ...) — pass one as
+    ``FederatedTrainer(slo_monitor=...)`` and failures land as
+    ``slo_violation`` events in the run's own log; `TraceAutoscaler`
+    consumes the same signals.
+
+``python -m repro.obs <run.jsonl>`` prints round tables, duration
+percentiles, the ledger and bytes/time-to-target; ``--faults`` the
+fault ledger; ``--flight <id-or-client>`` reconstructs a recorded
+flight's lifecycle; ``--health`` / ``--slo "sig<=thr[@win]"`` the SLO
+grade. ``benchmarks/bench_network.py --emit-trace`` (defaulting into
+gitignored ``benchmarks/out/``) and the femnist example's
+``--emit-trace`` produce such logs end-to-end; ``benchmarks/common``
+appends every bench row to ``BENCH_history.jsonl`` and
+``benchmarks/sentinel.py`` gates committed snapshots against a baseline
+in CI.
 
 Static analysis
 ---------------
@@ -230,10 +258,13 @@ a jit closure rebuilt per round retraces the step each call, a typo'd
 mesh axis explodes only at trace time on a real mesh, and a wire kind
 without an explicit decoder arm mis-decodes the *next* kind added. The
 `repro.lint` package (``python -m repro.lint src benchmarks examples``)
-checks all of these statically — seven AST/jaxpr passes (fleet-scale,
-host-sync, custom-vjp, mesh-axes, pallas, wire-format, wire-decode;
-catalogue in the ``repro.lint`` docstring, ``--list-rules`` for the full
-list). CI's
+checks all of these statically — eight AST/jaxpr passes (fleet-scale,
+host-sync, custom-vjp, mesh-axes, obs-events, pallas, wire-format,
+wire-decode; catalogue in the ``repro.lint`` docstring, ``--list-rules``
+for the full list). The obs-events pass cross-checks every literal
+``obs.event`` name emitted from the federated hot paths against the
+`repro.obs.schema` registry, so a typo'd event name (invisible to every
+dashboard filtering on the real one) is a lint error. CI's
 ``static-analysis`` job fails on any finding, and
 ``python -m benchmarks.run --preflight`` runs the identical gate before a
 benchmark spend. Intentional syncs (e.g. the once-per-``log_every``

@@ -44,6 +44,7 @@ from repro import obs
 from repro.federated.scheduler import (AsyncBuffer, Deadline, DropSlowestK,
                                        FullSync)
 from repro.federated.trace import Trace
+from repro.obs import slo
 
 # the codec escalation ladder for bytes-budget breaches: each entry is a
 # `core/compressors.py` spec for the downlink gradient message (None =
@@ -112,18 +113,26 @@ class TraceAutoscaler:
         size and codec moves.
         """
         w = self.window
-        return {
+        sig = {
             "rounds": float(len(trace)),
             "tail_ratio": trace.tail_ratio(w),
             "drop_rate": trace.drop_rate(w),
             "bytes_per_round": trace.bytes_per_round(w),
             "p50_duration": trace.duration_percentile(50.0, w),
+            "p99_duration": trace.duration_percentile(99.0, w),
             "loss_slope": trace.loss_slope(w),
             "edge_uplink_per_round": trace.tier_bytes_per_round(
                 "edge_uplink", w),
             "server_uplink_per_round": trace.tier_bytes_per_round(
                 "server_uplink", w),
         }
+        # chaos-health signals, shared with the SLO monitors
+        # (repro.obs.slo): observational here — rules key off tail/drop —
+        # but recorded so autoscale benchmark rows grade run health too
+        slo_sig = slo.trace_signals(trace, w)
+        sig["quarantine_rate"] = slo_sig["quarantine_rate"]
+        sig["retry_byte_overhead"] = slo_sig["retry_byte_overhead"]
+        return sig
 
     def recommend(self, trace: Trace,
                   current: AutoscalePlan) -> AutoscalePlan:

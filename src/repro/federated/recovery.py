@@ -42,6 +42,7 @@ from repro.checkpointing.checkpoint import (restore_checkpoint,
 from repro.core.quantizer import QuantizerState
 from repro.federated.faults import ServerKilled
 from repro.federated.trace import RoundRecord, Trace
+from repro.obs import flight as flightlib
 
 __all__ = ["snapshot_runtime", "restore_runtime", "run_with_recovery"]
 
@@ -83,6 +84,9 @@ def snapshot_runtime(trainer, state, cursor: Dict[str, Any],
         "records": [dataclasses.asdict(r) for r in trace.records],
         "trace_meta": dict(trace.meta),
         "history": history,
+        # flight-recorder frames ride the manifest too: a resumed run's
+        # exemplar lifecycles cover the WHOLE run, not just the tail
+        "flights": [f.to_json() for f in getattr(trace, "flights", [])],
     }
     with obs.span("recovery.snapshot", cat="io", round=step):
         return save_checkpoint(ckpt_dir, step, tree, extra=meta)
@@ -119,6 +123,8 @@ def restore_runtime(trainer, template_state, ckpt_dir: str,
     trainer._rng.bit_generator.state = meta["trainer_rng"]
     trace = Trace(records=[RoundRecord(**r) for r in meta["records"]],
                   meta=dict(meta["trace_meta"]))
+    trace.flights = [flightlib.FlightFrame.from_json(d)
+                     for d in meta.get("flights", [])]
     for r in trace.records:   # json round-trips tuples as lists
         r.participants = tuple(r.participants)
         r.dropped = tuple(r.dropped)
@@ -181,6 +187,7 @@ def run_with_recovery(trainer, steps: int, key, ckpt_dir: str, *,
             continue
         seg_trace = trainer.last_trace
         trace.records.extend(seg_trace.records)
+        trace.flights.extend(getattr(seg_trace, "flights", []))
         trace.meta.update(seg_trace.meta)
         trace.cursor = seg_trace.cursor
         history.extend(seg_hist)

@@ -48,6 +48,7 @@ from repro.federated.network import ClientProfile, uniform_fleet, validate_fleet
 from repro.federated.scheduler import (Arrival, AsyncBuffer, FullSync,
                                        Policy, Scheduler)
 from repro.federated.trace import Trace
+from repro.obs import flight as flightlib
 from repro.optim import Optimizer
 
 logger = logging.getLogger(__name__)
@@ -245,6 +246,10 @@ class FederatedTrainer:
     # kills — all drawn from the plan's own hash stream, never the
     # training or scheduler RNGs.
     fault_plan: Optional[FaultPlan] = None
+    # slo_monitor: optional `repro.obs.HealthMonitor` graded against the
+    # finished trace at the end of every run() — failing rules emit
+    # structured ``slo_violation`` obs events next to the run's own spans.
+    slo_monitor: Optional[Any] = None
 
     def __post_init__(self):
         pq = getattr(self.model, "pq", None)
@@ -320,6 +325,10 @@ class FederatedTrainer:
         self._canary_payload: Optional[bytes] = None
         # per-round screening counters, merged into the trace after run()
         self._fault_log: Dict[int, Dict[str, int]] = {}
+        # per-round screening verdicts (who was quarantined / was the
+        # round voided), replayed onto the flight recorder's frames after
+        # run() so exemplar lifecycles carry final server-side states
+        self._screen_log: Dict[int, Dict[str, Any]] = {}
         self._rng = np.random.default_rng(self.seed)
         if self.fleet is None:
             self.fleet = uniform_fleet(self.data.num_clients)
@@ -515,7 +524,13 @@ class FederatedTrainer:
             fl["quarantined"] = quarantined
         if undetected:
             fl["corrupt_undetected"] = undetected
-        if int(keep.sum()) < self.fault_plan.quorum_fraction * len(parts):
+        voided = \
+            int(keep.sum()) < self.fault_plan.quorum_fraction * len(parts)
+        if quarantined or voided:
+            self._screen_log[update_idx] = {
+                "quarantined": [int(c) for c in cids[~keep]],
+                "voided": voided}
+        if voided:
             fl["round_voided"] = 1
             obs.event("fault.round_voided", cat="faults", round=update_idx,
                       quarantined=quarantined, cohort=len(parts))
@@ -691,6 +706,7 @@ class FederatedTrainer:
         metrics_buf = obs.MetricsBuffer()
         inj = make_injector(self.fault_plan)
         self._fault_log = {}
+        self._screen_log = {}
 
         def execute(update_idx: int, participants: Sequence[Arrival],
                     weights: Sequence[float]) -> Dict:
@@ -787,6 +803,13 @@ class FederatedTrainer:
                          participants=len(rec.participants),
                          dropped=len(rec.dropped))
             history.append(entry)
+        # replay server-side screening verdicts onto the flight frames the
+        # scheduler recorded at wire level (aggregated -> quarantined /
+        # voided), so the emitted lifecycles show final outcomes
+        if trace.flights and self._screen_log:
+            flightlib.apply_screening(trace.flights, self._screen_log)
         self.last_trace = trace
         obs.log_trace(trace)   # no-op unless a recorder is configured
+        if self.slo_monitor is not None:
+            self.slo_monitor.check(trace)
         return state, history

@@ -88,6 +88,7 @@ import numpy as np
 logger = logging.getLogger(__name__)
 
 from repro import obs
+from repro.obs import flight
 from repro.federated.faults import FaultPlan, ServerKilled, make_injector
 from repro.federated.network import ClientFleet, ClientProfile
 from repro.federated.trace import RoundRecord, Trace
@@ -309,6 +310,11 @@ class Scheduler:
         trace's ``cursor`` field holds the final resume point.
         """
         place = placement or (lambda parts: list(parts))
+        # flight shard attribution only happens under a real placement
+        # hook: without one every Arrival carries the default shard and
+        # the per-flight column keeps its -1 "unplaced" marker — skipping
+        # the id-matching scatter entirely on placement-free runs
+        self._attribute_shards = placement is not None
         if self.topology is not None:
             self.topology.ensure(len(self.fleet))
         backend = self._resolve_backend()
@@ -415,6 +421,7 @@ class Scheduler:
             t = float(cursor["t"])
             rng.bit_generator.state = cursor["rng"]
         crash_on = inj is not None and inj.plan.crash_rate > 0
+        rec_fl = flight.flights_enabled()
         for rd in range(start, rounds):
             if inj is not None and inj.server_killed(rd):
                 raise ServerKilled(rd)
@@ -425,6 +432,11 @@ class Scheduler:
                 heap: List[Tuple[float, int, int]] = []
                 gone_ids: List[int] = []
                 retry_dl = 0
+                # per-cohort-position arrival times for the flight frame
+                # (NaN = dropout / retry budget exhausted); filled with the
+                # exact scalars pushed on the heap, so the recorded column
+                # is bitwise-identical to the vector backend's array form
+                arr_by_pos = np.full(len(ids), np.nan) if rec_fl else None
                 if not crash_on:
                     for seq, cid in enumerate(ids):
                         p = self.fleet[cid]
@@ -432,7 +444,10 @@ class Scheduler:
                             dropouts.append(cid)
                             continue
                         dt = self._round_trip(p, uplink_bytes, downlink_bytes)
-                        heapq.heappush(heap, (t + dt, seq, cid))
+                        t_arr = t + dt
+                        heapq.heappush(heap, (t_arr, seq, cid))
+                        if arr_by_pos is not None:
+                            arr_by_pos[seq] = t_arr
                 else:
                     # benign dropout draws FIRST (same RNG order as the
                     # fault-free path), then stateless crash/retry draws
@@ -454,12 +469,16 @@ class Scheduler:
                         rd, np.asarray([c for _, c, _, _ in live], np.int64))
                     extra, gone = inj.retry_overhead(
                         crashes, np.asarray([dc for *_, dc in live]))
-                    retry_dl = int(inj.extra_downlinks(crashes, gone).sum())
+                    xdl = inj.extra_downlinks(crashes, gone)
+                    retry_dl = int(xdl.sum())
                     for (seq, cid, dt, _), ex, g in zip(live, extra, gone):
                         if g:
                             gone_ids.append(cid)
                             continue
-                        heapq.heappush(heap, (t + (float(ex) + dt), seq, cid))
+                        t_arr = t + (float(ex) + dt)
+                        heapq.heappush(heap, (t_arr, seq, cid))
+                        if arr_by_pos is not None:
+                            arr_by_pos[seq] = t_arr
                     n_crashes = int(crashes.sum())
                     if n_crashes:
                         faults["crashes"] = n_crashes
@@ -467,9 +486,11 @@ class Scheduler:
                     if gone_ids:
                         faults["crash_dropped"] = len(gone_ids)
                 arrivals: List[Arrival] = []
+                arrival_seqs: List[int] = []
                 while heap:
-                    t_arr, _, cid = heapq.heappop(heap)
+                    t_arr, sq, cid = heapq.heappop(heap)
                     arrivals.append(Arrival(cid, rd, t_arr))
+                    arrival_seqs.append(sq)
                 survivors, cut, t_end = self.policy.split(arrivals, t)
                 down = inj.down_edges(t) \
                     if inj is not None and self.topology is not None else ()
@@ -485,7 +506,29 @@ class Scheduler:
                     if rehomed:
                         faults["rehomed"] = rehomed
                 t_end += self.server_step_seconds
+                fl_frame = None
+                if rec_fl:
+                    # survivors/cut are the SAME Arrival objects the pop
+                    # loop appended (policies sort/filter, never copy), so
+                    # identity maps each back to its cohort position
+                    seq_of = {id(a): s for a, s in
+                              zip(arrivals, arrival_seqs)}  # fedlint: disable=python-loop-over-fleet
+                    fl_kw = {}
+                    if crash_on:
+                        fl_kw = dict(
+                            live_pos=np.asarray([sq for sq, *_ in live],
+                                                np.int64),
+                            crashes=crashes, extra_downlinks=xdl,
+                            retry_seconds=extra, gone=gone)
+                    fl_frame = flight.sync_frame(
+                        rd, t, np.asarray(ids, np.int64), arr_by_pos,
+                        np.asarray([seq_of[id(a)] for a in survivors],
+                                   np.int64),
+                        np.asarray([seq_of[id(a)] for a in cut], np.int64),
+                        topology=self.topology, down_edges=down, **fl_kw)
                 survivors = place(survivors)
+                if fl_frame is not None and self._attribute_shards:
+                    flight.assign_shards(fl_frame, survivors)
                 metrics = execute(rd, survivors, [1.0] * len(survivors)) \
                     if survivors else {}
             span_extra = {} if edges is None else {"edges": edges}
@@ -517,6 +560,8 @@ class Scheduler:
                                     len(ids) * downlink_bytes, tier_bytes,
                                     retry_dl * downlink_bytes),
                 faults=faults))
+            if fl_frame is not None:
+                trace.flights.append(fl_frame)
             t = t_end
             if on_round is not None:
                 on_round(rd, {"round": rd + 1, "t": t,
@@ -550,6 +595,7 @@ class Scheduler:
             t = float(cursor["t"])
             rng.bit_generator.state = cursor["rng"]
         crash_on = inj is not None and inj.plan.crash_rate > 0
+        rec_fl = flight.flights_enabled()
         for rd in range(start, rounds):
             if inj is not None and inj.server_killed(rd):
                 raise ServerKilled(rd)
@@ -568,14 +614,17 @@ class Scheduler:
                 retry_dl = 0
                 if not crash_on:
                     t_arrivals = t + dt
+                    arr_all = t_arrivals
                 else:
                     crashes = inj.crash_attempts_sync(rd, live)
                     extra, gone = inj.retry_overhead(
                         crashes, fleet.downlink_compute_seconds(
                             live, downlink_bytes, self.client_step_seconds))
-                    retry_dl = int(inj.extra_downlinks(crashes, gone).sum())
+                    xdl = inj.extra_downlinks(crashes, gone)
+                    retry_dl = int(xdl.sum())
                     gone_ids = live[gone]
-                    t_arrivals = (t + (extra + dt))[~gone]
+                    arr_all = t + (extra + dt)
+                    t_arrivals = arr_all[~gone]
                     live = live[~gone]
                     n_crashes = int(crashes.sum())
                     if n_crashes:
@@ -600,11 +649,34 @@ class Scheduler:
                     if rehomed:
                         faults["rehomed"] = rehomed
                 t_end += self.server_step_seconds
+                fl_frame = None
+                if rec_fl:
+                    # scatter the already-computed arrival/fault columns
+                    # back to cohort positions — pure array ops, O(cohort)
+                    alive_pos = np.nonzero(alive)[0]
+                    arr_by_pos = np.full(int(ids.shape[0]), np.nan)
+                    if crash_on:
+                        arr_by_pos[alive_pos] = np.where(gone, np.nan,
+                                                         arr_all)
+                        sorted_pos = alive_pos[~gone][order]
+                        fl_kw = dict(live_pos=alive_pos, crashes=crashes,
+                                     extra_downlinks=xdl,
+                                     retry_seconds=extra, gone=gone)
+                    else:
+                        arr_by_pos[alive_pos] = arr_all
+                        sorted_pos = alive_pos[order]
+                        fl_kw = {}
+                    fl_frame = flight.sync_frame(
+                        rd, t, ids, arr_by_pos, sorted_pos[:keep],
+                        sorted_pos[keep:], topology=self.topology,
+                        down_edges=down, **fl_kw)
                 survivors = [Arrival(c, rd, ta) for c, ta in
                              zip(cid_sorted[:keep].tolist(),
                                  t_sorted[:keep].tolist())]
                 cut_clients = cid_sorted[keep:].tolist()
                 survivors = place(survivors)
+                if fl_frame is not None and self._attribute_shards:
+                    flight.assign_shards(fl_frame, survivors)
                 metrics = execute(rd, survivors, [1.0] * len(survivors)) \
                     if survivors else {}
             span_extra = {} if edges is None else {"edges": edges}
@@ -636,6 +708,8 @@ class Scheduler:
                                     int(ids.shape[0]) * downlink_bytes,
                                     tier_bytes, retry_dl * downlink_bytes),
                 faults=faults))
+            if fl_frame is not None:
+                trace.flights.append(fl_frame)
             t = t_end
             if on_round is not None:
                 on_round(rd, {"round": rd + 1, "t": t,
@@ -667,6 +741,17 @@ class Scheduler:
         # per-flush-window fault counters (accounted at dispatch time, the
         # point both backends share; crash keys on the dispatch stream seq)
         fw = {"crashes": 0, "crash_dropped": 0, "retries": 0, "jittered": 0}
+        rec_fl = flight.flights_enabled()
+        # per-seq flight columns (dispatch order == stream order, matching
+        # the vector backend's s_* arrays element by element)
+        fl_cid: List[int] = []
+        fl_t0: List[float] = []
+        fl_drop: List[bool] = []
+        fl_crash: List[int] = []
+        fl_rdl: List[int] = []
+        fl_rs: List[float] = []
+        fl_gone: List[bool] = []
+        win_done: List[Tuple[int, float]] = []  # (seq, t_pop) this window
 
         def next_client() -> int:
             nonlocal wave
@@ -679,6 +764,10 @@ class Scheduler:
             nonlocal seq
             p = self.fleet[cid]
             dropped = bool(rng.random() < p.dropout_prob)
+            raw_drop = dropped          # pre-override benign dropout draw
+            n_crash = n_rdl = 0
+            r_s = 0.0
+            is_gone = False
             dt = self._round_trip(p, uplink_bytes, downlink_bytes) + relay_hop
             if inj is not None:
                 # scalar path == vectorized helpers on singleton arrays
@@ -691,13 +780,25 @@ class Scheduler:
                                              self.client_step_seconds)]))
                 jitter = inj.reorder_jitter(c_arr, s_arr)
                 dt = (dt + float(extra[0])) + float(jitter[0])
-                fw["crashes"] += int(crashes[0])
-                fw["retries"] += int(inj.extra_downlinks(crashes, gone)[0])
+                n_crash = int(crashes[0])
+                n_rdl = int(inj.extra_downlinks(crashes, gone)[0])
+                r_s = float(extra[0])
+                is_gone = bool(gone[0])
+                fw["crashes"] += n_crash
+                fw["retries"] += n_rdl
                 if jitter[0] > 0:
                     fw["jittered"] += 1
-                if bool(gone[0]):
+                if is_gone:
                     fw["crash_dropped"] += 1
                     dropped = True   # retry budget exhausted: lost slot
+            if rec_fl:
+                fl_cid.append(cid)
+                fl_t0.append(t)
+                fl_drop.append(raw_drop)
+                fl_crash.append(n_crash)
+                fl_rdl.append(n_rdl)
+                fl_rs.append(r_s)
+                fl_gone.append(is_gone)
             heapq.heappush(heap, (t + dt, seq, cid, ver, dropped))
             seq += 1
 
@@ -715,8 +816,10 @@ class Scheduler:
         consecutive_drops = 0
         max_consecutive_drops = max(1000, 10 * len(self.fleet))
         while updates < rounds and heap:
-            t_arr, _, cid, ver, was_dropped = heapq.heappop(heap)
+            t_arr, sq, cid, ver, was_dropped = heapq.heappop(heap)
             if was_dropped:
+                if rec_fl:
+                    win_done.append((sq, t_arr))
                 dropped_accum.append(cid)
                 dispatch(next_client(), t_arr, version)
                 dispatches += 1
@@ -730,6 +833,8 @@ class Scheduler:
                 continue
             consecutive_drops = 0
             buffer.append(Arrival(cid, ver, t_arr))
+            if rec_fl:
+                win_done.append((sq, t_arr))
             if len(buffer) >= policy.buffer_size:
                 if inj is not None and inj.server_killed(updates):
                     raise ServerKilled(updates)
@@ -745,6 +850,18 @@ class Scheduler:
                 obs.virtual_span("scheduler.flush", t_round_start, t_end,
                                  update=updates, buffered=len(buffer),
                                  staleness_max=max(staleness))
+                fl_frame = None
+                if rec_fl:
+                    # frame over the flights that TERMINATED this window
+                    # (fault counters accrue at dispatch time instead, so
+                    # async ledger<->flight reconciliation is approximate;
+                    # sync rounds reconcile exactly — see repro.obs.flight)
+                    fl_frame = flight.async_frame(
+                        updates, win_done, fl_cid, fl_t0, fl_drop,
+                        fl_crash, fl_rdl, fl_rs, fl_gone,
+                        topology=self.topology)
+                    if self._attribute_shards:
+                        flight.assign_shards(fl_frame, buffer)
                 version += 1
                 dispatch(next_client(), t_arr, version)  # slot sees new model
                 dispatches += 1
@@ -772,7 +889,10 @@ class Scheduler:
                                         tier_bytes,
                                         retry_bytes=retry_dl * downlink_bytes),
                     faults=faults))
+                if fl_frame is not None:
+                    trace.flights.append(fl_frame)
                 buffer, dropped_accum, dispatches = [], [], 0
+                win_done = []
                 fw = {k: 0 for k in fw}
                 t_round_start = t_end
                 updates += 1
@@ -819,10 +939,14 @@ class Scheduler:
         wave = 0
         consumed = 0                      # next unused stream index
         fw = {"crashes": 0, "crash_dropped": 0, "retries": 0, "jittered": 0}
+        rec_fl = flight.flights_enabled()
+        s_t0: List[float] = []            # stream idx -> dispatch time
+        s_extra = np.empty(0, np.float64)  # stream idx -> retry seconds
+        win_done: List[Tuple[int, float]] = []  # (seq, t_pop) this window
 
         def extend_stream():
             nonlocal s_cid, s_drop, s_dt, wave
-            nonlocal s_gone, s_crash, s_retry, s_jit
+            nonlocal s_gone, s_crash, s_retry, s_jit, s_extra
             ids = np.asarray([int(c) for c in sample_cohort(wave)],
                              dtype=np.int64)
             wave += 1
@@ -844,6 +968,8 @@ class Scheduler:
                 s_retry = np.concatenate(
                     [s_retry, inj.extra_downlinks(crashes, gone)])
                 s_jit = np.concatenate([s_jit, jitter > 0])
+                if rec_fl:
+                    s_extra = np.concatenate([s_extra, extra])
             s_cid = np.concatenate([s_cid, ids])
             s_drop = np.concatenate([s_drop, draws < fleet.dropout_prob[ids]])
             s_dt = np.concatenate([s_dt, dts])
@@ -861,6 +987,8 @@ class Scheduler:
             s = consumed
             consumed += 1
             s_ver.append(ver)
+            if rec_fl:
+                s_t0.append(t)
             if inj is not None:
                 # counters accrue at consume time — the point the heapq
                 # backend draws the same hashes on singleton arrays
@@ -887,6 +1015,8 @@ class Scheduler:
         while updates < rounds and heap:
             t_arr, s = heapq.heappop(heap)
             if s_drop[s] or (inj is not None and s_gone[s]):
+                if rec_fl:
+                    win_done.append((s, t_arr))
                 dropped_accum.append(int(s_cid[s]))
                 dispatch(t_arr, version)
                 dispatches += 1
@@ -900,6 +1030,8 @@ class Scheduler:
                 continue
             consecutive_drops = 0
             buffer.append((t_arr, s))
+            if rec_fl:
+                win_done.append((s, t_arr))
             if len(buffer) >= policy.buffer_size:
                 if inj is not None and inj.server_killed(updates):
                     raise ServerKilled(updates)
@@ -916,6 +1048,18 @@ class Scheduler:
                 obs.virtual_span("scheduler.flush", t_round_start, t_end,
                                  update=updates, buffered=len(cohort),
                                  staleness_max=max(staleness))
+                fl_frame = None
+                if rec_fl:
+                    armed = inj is not None
+                    fl_frame = flight.async_frame(
+                        updates, win_done, s_cid, s_t0, s_drop,
+                        s_crash if armed else None,
+                        s_retry if armed else None,
+                        s_extra if armed else None,
+                        s_gone if armed else None,
+                        topology=self.topology)
+                    if self._attribute_shards:
+                        flight.assign_shards(fl_frame, cohort)
                 version += 1
                 dispatch(t_arr, version)   # refilled slot sees new model
                 dispatches += 1
@@ -943,7 +1087,10 @@ class Scheduler:
                                         tier_bytes,
                                         retry_bytes=retry_dl * downlink_bytes),
                     faults=faults))
+                if fl_frame is not None:
+                    trace.flights.append(fl_frame)
                 buffer, dropped_accum, dispatches = [], [], 0
+                win_done = []
                 fw = {k: 0 for k in fw}
                 t_round_start = t_end
                 updates += 1

@@ -64,6 +64,12 @@ class Trace:
     # synchronous runners ({"round", "t", "rng"}); what checkpointing saves
     # so a restored run continues the identical virtual clock + RNG stream
     cursor: Optional[Dict[str, object]] = None
+    # one `repro.obs.flight.FlightFrame` per server update (column arrays,
+    # O(cohort) each) — the per-contribution causal lifecycle behind the
+    # aggregate counters above; appended by the scheduler when flight
+    # recording is on, patched with screening verdicts by the runtime,
+    # snapshotted/restored by federated/recovery.py
+    flights: List[object] = dataclasses.field(default_factory=list)
 
     def append(self, rec: RoundRecord) -> None:
         self.records.append(rec)

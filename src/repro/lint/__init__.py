@@ -59,6 +59,14 @@ fleet-scale (``fleet_loops.py``)
     round — use the vectorized `ClientFleet`/sorted-arrival core; the
     heapq reference backend carries reviewed suppressions.
 
+obs-events (``obs_events.py``)
+  * ``orphan-obs-event`` — an ``obs.event(...)`` in ``repro/federated/``
+    emitting a literal name missing from the
+    ``repro.obs.schema.EVENT_SCHEMAS`` registry: invisible to the
+    inspector, SLO monitors and exporters — register it or fix the typo.
+  * ``dynamic-obs-event`` — a computed (non-literal) event name the
+    registry cannot check; hoist it into a literal.
+
 wire-decode (``wire_decode.py``)
   * ``unchecked-wire-decode`` — a ``decode_bytes``/``decode_payload``/
     ``decode_pq_delta`` call in ``repro/federated/`` hot paths outside a
@@ -94,6 +102,7 @@ from repro.lint.core import (Finding, LintPass, available_passes,
 from repro.lint import fleet_loops as _fleet_loops
 from repro.lint import host_sync as _host_sync
 from repro.lint import mesh_axes as _mesh_axes
+from repro.lint import obs_events as _obs_events
 from repro.lint import pallas_checks as _pallas_checks
 from repro.lint import vjp as _vjp
 from repro.lint import wire_checks as _wire_checks
@@ -103,6 +112,7 @@ register_pass("fleet-scale", _fleet_loops.FleetLoopPass)
 register_pass("host-sync", _host_sync.HostSyncPass)
 register_pass("custom-vjp", _vjp.CustomVjpPass)
 register_pass("mesh-axes", _mesh_axes.MeshAxesPass)
+register_pass("obs-events", _obs_events.ObsEventPass)
 register_pass("pallas", _pallas_checks.PallasPass)
 register_pass("wire-format", _wire_checks.WirePass)
 register_pass("wire-decode", _wire_decode.WireDecodePass)

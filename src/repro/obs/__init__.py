@@ -19,7 +19,18 @@ Three pillars, one event log:
                processes with per-category tracks).
   inspect.py — ``python -m repro.obs <run.jsonl>``: round tables,
                duration percentiles, the per-direction/per-wire-kind byte
-               ledger, and bytes/time-to-target.
+               ledger, bytes/time-to-target, ``--health`` SLO grading and
+               ``--flight`` lifecycle drill-down.
+  flight.py  — level 2: the contribution flight recorder. Every cohort
+               contribution gets a stable ``flight_id`` and a recorded
+               causal lifecycle (sampled → placed → uplink →
+               retry/re-home/quarantine/drop → aggregate) as column-array
+               `FlightFrame`s on ``Trace.flights``, emitted into the
+               event log as per-update rollups + reservoir exemplars.
+  slo.py     — declarative windowed SLO rules over trace reductions;
+               violations become structured ``slo_violation`` events.
+  schema.py  — the obs event-name registry fedlint's ``orphan-obs-event``
+               pass checks `repro/federated/` emissions against.
 
 Typical wiring (what ``bench_network.py --emit-trace`` and the femnist
 example's ``--emit-trace`` flag do):
@@ -35,11 +46,24 @@ example's ``--emit-trace`` flag do):
 from repro.obs.export import (
     jsonable,
     read_jsonl,
+    read_jsonl_tolerant,
     to_perfetto,
     write_jsonl,
     write_perfetto,
 )
+from repro.obs.flight import (
+    FlightFrame,
+    flights_enabled,
+    log_frames,
+    set_flights,
+)
 from repro.obs.metrics import MetricsBuffer, counter, gauge, histogram
+from repro.obs.slo import (
+    DEFAULT_SLOS,
+    HealthMonitor,
+    SloRule,
+    parse_rule,
+)
 from repro.obs.spans import (
     Recorder,
     configure,
@@ -78,6 +102,12 @@ def log_trace(trace, run=None) -> None:
                      "ledger": dict(r.ledger),
                      "faults": dict(getattr(r, "faults", {}) or {}),
                      "metrics": dict(r.metrics)}})
+    # the contribution flight layer: per-update rollup histograms plus
+    # reservoir-sampled exemplar lifecycles (called after the runtime has
+    # applied screening verdicts, so exemplars carry final states)
+    frames = getattr(trace, "flights", None)
+    if frames:
+        log_frames(rec, frames)
     rec.append({"type": "run", "lane": "host", "cat": "obs",
                 "name": run or rec.run, "t": rec.now(),
                 "args": {"meta": jsonable(dict(trace.meta)),
@@ -85,8 +115,10 @@ def log_trace(trace, run=None) -> None:
 
 
 __all__ = [
-    "MetricsBuffer", "Recorder", "configure", "counter", "current",
-    "enabled", "event", "gauge", "histogram", "instrument", "jsonable",
-    "log_trace", "read_jsonl", "shutdown", "span", "to_perfetto",
-    "virtual_span", "write_jsonl", "write_perfetto",
+    "DEFAULT_SLOS", "FlightFrame", "HealthMonitor", "MetricsBuffer",
+    "Recorder", "SloRule", "configure", "counter", "current", "enabled",
+    "event", "flights_enabled", "gauge", "histogram", "instrument",
+    "jsonable", "log_frames", "log_trace", "parse_rule", "read_jsonl",
+    "read_jsonl_tolerant", "set_flights", "shutdown", "span",
+    "to_perfetto", "virtual_span", "write_jsonl", "write_perfetto",
 ]

@@ -71,6 +71,34 @@ def read_jsonl(path) -> List[Dict[str, Any]]:
     return events
 
 
+def read_jsonl_tolerant(path) -> "tuple[List[Dict[str, Any]], int]":
+    """Read a JSONL event log, skipping unparseable lines.
+
+    A run killed mid-write leaves a truncated final line (or, with
+    interleaved writers, the odd garbled one); the strict reader raises
+    and the inspector showed nothing. This variant returns
+    ``(events, skipped)`` — everything parseable plus how many lines were
+    dropped, so callers can render the run with a clear warning instead
+    of dying on the artifact that most needs inspecting."""
+    events: List[Dict[str, Any]] = []
+    skipped = 0
+    with Path(path).open("r", encoding="utf-8", errors="replace") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except ValueError:
+                skipped += 1
+                continue
+            if isinstance(ev, dict):
+                events.append(ev)
+            else:
+                skipped += 1
+    return events, skipped
+
+
 def _pid(ev: Dict[str, Any]) -> int:
     return _VIRTUAL_PID if ev.get("lane") == "virtual" else _HOST_PID
 
@@ -80,8 +108,16 @@ def to_perfetto(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
 
     Spans (and round records) become complete "X" events with microsecond
     ts/dur; instants become "i" events; each (lane, category) pair gets a
-    named thread row via "M" metadata."""
+    named thread row via "M" metadata.
+
+    Spans whose args carry a ``flight_id`` (the contribution flight
+    recorder's exemplar lifecycles, `repro.obs.flight`) are additionally
+    chained with flow events ("s"/"t"/"f" keyed on the flight id), so
+    Perfetto draws arrows from a flight's virtual-lane retry/uplink spans
+    to its host-lane server span — one contribution's causal path across
+    the two time lanes."""
     out: List[Dict[str, Any]] = []
+    flows: Dict[str, List[Dict[str, Any]]] = {}
     for pid, name in _LANE_NAMES.items():
         out.append({"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
                     "args": {"name": name}})
@@ -105,6 +141,9 @@ def to_perfetto(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
             base["ph"] = "X"
             base["ts"] = float(ev["t0"]) * 1e6
             base["dur"] = max(0.0, (float(ev["t1"]) - float(ev["t0"])) * 1e6)
+            fid = (ev.get("args") or {}).get("flight_id")
+            if fid is not None:
+                flows.setdefault(str(fid), []).append(base)
         elif "t" in ev:                    # instants / run boundaries
             base["ph"] = "i"
             base["ts"] = float(ev["t"]) * 1e6
@@ -112,6 +151,18 @@ def to_perfetto(events: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
         else:  # pragma: no cover - malformed event; keep the export loadable
             continue
         out.append(base)
+    for fid, slices in flows.items():
+        if len(slices) < 2:
+            continue
+        slices = sorted(slices, key=lambda s: s["ts"])
+        for i, sl in enumerate(slices):
+            ph = "s" if i == 0 else ("f" if i == len(slices) - 1 else "t")
+            flow = {"ph": ph, "name": "flight", "cat": "flights",
+                    "id": fid, "pid": sl["pid"], "tid": sl["tid"],
+                    "ts": sl["ts"]}
+            if ph == "f":
+                flow["bp"] = "e"
+            out.append(flow)
     return {"traceEvents": out, "displayTimeUnit": "ms"}
 
 

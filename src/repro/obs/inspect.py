@@ -13,7 +13,14 @@ Consumes a JSONL event log written by `Recorder.write_jsonl` and prints:
 
 ``--json`` emits the same summary as one JSON document for scripting;
 ``--faults`` prints the per-round fault table (crashes, retries,
-quarantines, voided rounds) instead of the full report.
+quarantines, voided rounds) instead of the full report; ``--health``
+grades the run against the SLO rule set (plus any ``--slo`` specs);
+``--flight <client-or-id>`` reconstructs a recorded contribution
+flight's full lifecycle from its exemplar events.
+
+Logs are read tolerantly: a run killed mid-write leaves a truncated
+final line, which is reported as a warning while everything parseable
+still renders.
 """
 
 from __future__ import annotations
@@ -23,7 +30,8 @@ import json
 import sys
 from typing import Any, Dict, List, Optional, Sequence
 
-from repro.obs.export import read_jsonl
+from repro.obs import slo as slo_mod
+from repro.obs.export import read_jsonl_tolerant
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -250,6 +258,122 @@ def format_report(summary: Dict[str, Any], max_rows: int = 12) -> str:
     return "\n".join(lines)
 
 
+def format_health(results: List["slo_mod.SloResult"]) -> str:
+    """Render SLO results (``--health``) as a pass/fail report."""
+    lines = ["SLO health:"]
+    for res in results:
+        lines.append("  " + res.describe())
+    failed = [r for r in results if not r.ok]
+    if failed:
+        lines.append(f"health: FAIL ({len(failed)}/{len(results)} rules "
+                     "violated)")
+    else:
+        lines.append(f"health: PASS ({len(results)} rules)")
+    return "\n".join(lines)
+
+
+def _flight_groups(events: List[Dict[str, Any]],
+                   ) -> Dict[str, List[Dict[str, Any]]]:
+    groups: Dict[str, List[Dict[str, Any]]] = {}
+    for ev in events:
+        if ev.get("cat") != "flights":
+            continue
+        fid = (ev.get("args") or {}).get("flight_id")
+        if fid is not None:
+            groups.setdefault(str(fid), []).append(ev)
+    return groups
+
+
+def _flight_line(ev: Dict[str, Any]) -> str:
+    a = ev.get("args") or {}
+    name = ev.get("name", "?")
+    if "t0" in ev:
+        when = f"{float(ev['t0']):>9.2f}s –{float(ev['t1']):>8.2f}s"
+    else:
+        when = f"{float(ev.get('t', 0.0)):>9.2f}s" + " " * 10
+    if name == "flight.sampled":
+        what = f"sampled into the cohort ({a.get('kind', '?')} wave, " \
+               f"seq {a.get('seq', '?')})"
+    elif name == "flight.placed":
+        edge = a.get("edge", -1)
+        where = f"edge {edge}" if edge != -1 else "server (flat star)"
+        shard = a.get("shard", -1)
+        if shard != -1:
+            where += f", executor shard {shard}"
+        what = f"placed on {where}"
+        if a.get("rehomed"):
+            what += "  [re-homed: nearest edge was down]"
+    elif name == "flight.uplink":
+        what = "uplink in flight"
+    elif name == "flight.retry":
+        what = (f"crash retries x{a.get('retries', '?')} "
+                f"({a.get('retry_downlinks', 0)} extra model downlinks)")
+    elif name == "flight.quarantined":
+        what = f"server screen: {a.get('state', 'quarantined')}"
+    elif name == "flight.outcome":
+        what = f"outcome: {a.get('state', '?')}"
+    elif name == "flight.server":
+        return (f"{when}  server aggregate step "
+                "(host lane; linked by Perfetto flow)")
+    else:
+        what = name
+    return f"{when}  {what}"
+
+
+def format_flight(events: List[Dict[str, Any]], query: str,
+                  max_flights: int = 4) -> "tuple[str, bool]":
+    """Reconstruct recorded flight lifecycles (``--flight``).
+
+    ``query`` is a flight id (``r3-c17-s5``) or a bare client id (every
+    exemplar flight of that client renders, capped). Returns
+    ``(report, found)`` — only reservoir-sampled exemplars carry full
+    lifecycles, so a miss lists what IS available."""
+    groups = _flight_groups(events)
+    sel: Dict[str, List[Dict[str, Any]]] = {}
+    if query in groups:
+        sel = {query: groups[query]}
+    else:
+        try:
+            cid = int(query)
+        except ValueError:
+            cid = None
+        if cid is not None:
+            sel = {fid: evs for fid, evs in groups.items()
+                   if any((e.get("args") or {}).get("client") == cid
+                          for e in evs)}
+    if not sel:
+        lines = [f"no recorded flight matches {query!r}."]
+        if groups:
+            known = sorted(groups)
+            shown = ", ".join(known[:12])
+            more = f" (+{len(known) - 12} more)" if len(known) > 12 else ""
+            lines.append(f"recorded exemplar flights: {shown}{more}")
+            lines.append("(only reservoir-sampled exemplars carry full "
+                         "lifecycles; rollup histograms cover the rest)")
+        else:
+            lines.append("this log carries no flight events — record with "
+                         "flight recording enabled (the default) and "
+                         "obs.log_trace.")
+        return "\n".join(lines), False
+
+    lines = []
+    for fid in sorted(sel)[:max_flights]:
+        evs = sorted(sel[fid],
+                     key=lambda e: (float(e.get("t0", e.get("t", 0.0))),
+                                    e.get("name", "")))
+        head = next((e for e in evs if e.get("name") == "flight.sampled"),
+                    evs[0])
+        a = head.get("args") or {}
+        lines.append(f"flight {fid}  (client {a.get('client', '?')}, "
+                     f"update {a.get('round', '?')})")
+        for ev in evs:
+            lines.append("  " + _flight_line(ev))
+        lines.append("")
+    if len(sel) > max_flights:
+        lines.append(f"... {len(sel) - max_flights} more matching flights")
+    return "\n".join(lines).rstrip(), True
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs",
@@ -269,15 +393,52 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="print the per-round fault-injection table "
                          "(crashes, retries, quarantines, voids) instead "
                          "of the full report")
+    ap.add_argument("--health", action="store_true",
+                    help="grade the run against the SLO rule set and "
+                         "print pass/fail per rule")
+    ap.add_argument("--slo", action="append", default=[],
+                    metavar="SIGNAL<=THRESH[@WINDOW]",
+                    help="additional SLO rule (repeatable), e.g. "
+                         "'drop_rate<=0.3' or 'tail_ratio<=2.5@20'; "
+                         "implies --health")
+    ap.add_argument("--flight", default=None, metavar="CLIENT-OR-ID",
+                    help="reconstruct a recorded contribution flight's "
+                         "lifecycle (flight id like r3-c17-s5, or a "
+                         "client id)")
     args = ap.parse_args(argv)
 
     try:
-        events = read_jsonl(args.path)
-    except (OSError, json.JSONDecodeError) as exc:
+        events, skipped = read_jsonl_tolerant(args.path)
+    except OSError as exc:
         print(f"error: cannot read {args.path}: {exc}", file=sys.stderr)
         return 2
-    summary = summarize(events, target=args.target, metric=args.metric)
+    if skipped:
+        print(f"warning: {args.path}: skipped {skipped} unparseable "
+              f"line{'s' if skipped != 1 else ''} (truncated/partial "
+              "write); rendering the rest", file=sys.stderr)
+    if not events:
+        print(f"error: {args.path}: no parseable events", file=sys.stderr)
+        return 2
     try:
+        if args.flight is not None:
+            report, found = format_flight(events, args.flight,
+                                          max_flights=max(args.rows // 3, 1))
+            print(report)
+            return 0 if found else 1
+        if args.health or args.slo:
+            try:
+                rules = list(slo_mod.DEFAULT_SLOS) \
+                    + [slo_mod.parse_rule(s) for s in args.slo]
+            except ValueError as exc:
+                print(f"error: {exc}", file=sys.stderr)
+                return 2
+            results = slo_mod.HealthMonitor(rules).evaluate_rows(
+                _round_rows(events))
+            print(format_health(results))
+            # grading a recorded run is a report, not a gate: exit 0
+            # either way so CI artifact generation never flips red here
+            return 0
+        summary = summarize(events, target=args.target, metric=args.metric)
         if args.json:
             print(json.dumps(summary, sort_keys=True))
         elif args.faults:

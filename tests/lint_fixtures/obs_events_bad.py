@@ -1,0 +1,16 @@
+"""Seeded violations for the obs-events pass.
+
+Loaded by tests/test_lint.py under a ``src/repro/federated/`` pseudo-path
+(the pass only fires on federated hot paths)."""
+
+from repro import obs
+
+
+def emit_typo(rd):
+    # a name the schema registry has never heard of: tooling-invisible
+    obs.event("fault.round_vioded", cat="faults", round=rd)  # SEED: orphan-obs-event
+
+
+def emit_dynamic(kind):
+    name = "fault." + kind
+    obs.event(name, cat="faults")  # SEED: dynamic-obs-event

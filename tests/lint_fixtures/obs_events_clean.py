@@ -1,0 +1,23 @@
+"""Clean baseline for the obs-events pass: registered names only, plus a
+reviewed suppression for a deliberately dynamic name.
+
+Loaded by tests/test_lint.py under a ``src/repro/federated/`` pseudo-path."""
+
+from repro import obs
+
+
+def emit_registered(rd, quarantined, cohort):
+    obs.event("fault.round_voided", cat="faults", round=rd,
+              quarantined=quarantined, cohort=cohort)
+    obs.event("slo_violation", cat="slo", rule="drop-rate",
+              signal="drop_rate", op="<=", threshold=0.5, value=0.7,
+              window=None)
+
+
+def emit_reviewed_dynamic(kind):
+    obs.event("fault." + kind, cat="faults")  # fedlint: disable=dynamic-obs-event
+
+
+def not_an_event_call(rd, log):
+    # same arity/shape, different callee: the pass must not fire
+    log("fault.round_vioded", rd)

@@ -22,6 +22,7 @@ from repro.federated import (AsyncBuffer, ClientProfile, DropSlowestK,
                              lognormal_fleet, make_injector,
                              run_with_recovery, uniform_fleet)
 from repro.models.paper_models import FemnistCNN
+from repro.obs import flight as flightlib
 from repro.optim import sgd
 
 
@@ -325,3 +326,97 @@ def test_pathological_kill_plan_exhausts_restart_budget(tmp_path):
         run_with_recovery(tr, 6, jax.random.PRNGKey(0),
                           str(tmp_path / "ck"), checkpoint_every=3,
                           max_restarts=2)
+
+
+# ---------------------------------------------------------------------------
+# contribution flight lineage (flight recorder <-> fault bookkeeping)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_flight_lineage_reconciles_with_fault_counters(backend):
+    """Every per-round fault counter must be re-derivable from the flight
+    frames alone: crashes from per-flight retry counts, ledgered retry
+    downlinks from retry_downlinks, permanent drops from terminal states."""
+    fleet = uniform_fleet(16)
+    plan = FaultPlan(seed=11, crash_rate=0.6, max_retries=2)
+    trace = _run(fleet, FullSync(), backend, faults=plan)
+    assert len(trace.flights) == len(trace.records)
+    for frame, rec in zip(trace.flights, trace):
+        assert frame.round == rec.round and frame.kind == "sync"
+        assert int(frame.retries.sum()) == rec.faults.get("crashes", 0)
+        assert int(frame.retry_downlinks.sum()) == rec.faults.get("retries", 0)
+        assert int((frame.state == flightlib.S_CRASH_DROPPED).sum()) == \
+            rec.faults.get("crash_dropped", 0)
+        # the byte ledger's retry entry is exactly the flight-sum times the
+        # per-retry downlink cost
+        assert rec.ledger.get("retry_downlink/dense", 0) == \
+            int(frame.retry_downlinks.sum()) * 4000
+        # crash-dropped flights never arrive; aggregated ones always do
+        dropped = frame.state == flightlib.S_CRASH_DROPPED
+        assert np.isnan(frame.t_arrival[dropped]).all()
+        agg = frame.state == flightlib.S_AGGREGATED
+        assert np.isfinite(frame.t_arrival[agg]).all()
+
+
+@pytest.mark.parametrize("backend", ["heapq", "vector"])
+def test_flight_lineage_records_rehoming(backend):
+    """An edge outage shows up per flight: re-homed contributions carry
+    rehomed=True and a live edge id, and the frame-sum matches the
+    trace's rehomed counter."""
+    fleet = lognormal_fleet(24, dropout_prob=0.0, seed=2)
+    plan = FaultPlan(seed=0, edge_outages=((0, 0.0, 1e9),))
+    topo = TwoTierTopology(num_edges=4, seed=0)
+    trace = _run(fleet, FullSync(), backend, faults=plan, topology=topo,
+                 cohort=12)
+    total_rehomed = sum(int(f.rehomed.sum()) for f in trace.flights)
+    assert total_rehomed == trace.fault_totals()["rehomed"] > 0
+    for frame in trace.flights:
+        # edge 0 is down for the whole run: no flight may route through it
+        assert not (frame.edge == 0).any()
+        agg = frame.state == flightlib.S_AGGREGATED
+        assert (frame.edge[agg] >= 0).all()
+
+
+def test_flight_lineage_records_quarantine():
+    """Server-side screening is replayed onto the frames after the run:
+    the number of S_QUARANTINED flights equals the trace's quarantine
+    counter, and quarantined flights are never also aggregated."""
+    plan = FaultPlan(seed=1, corrupt_rate=0.25, poison_rate=0.2,
+                     quorum_fraction=0.25)
+    tr = _chaos_trainer(plan)
+    tr.run(8, jax.random.PRNGKey(0))
+    trace = tr.last_trace
+    totals = trace.fault_totals()
+    nq = sum(int((f.state == flightlib.S_QUARANTINED).sum())
+             for f in trace.flights)
+    assert nq == totals["quarantined"] > 0
+    counts = {}
+    for f in trace.flights:
+        for k, v in f.state_counts().items():
+            counts[k] = counts.get(k, 0) + v
+    assert counts.get("quarantined", 0) == nq
+    assert counts.get("aggregated", 0) > 0
+
+
+def test_voided_rounds_void_every_surviving_flight():
+    plan = FaultPlan(seed=0, poison_rate=1.0, quorum_fraction=0.5)
+    tr = _chaos_trainer(plan)
+    tr.run(3, jax.random.PRNGKey(0))
+    for frame in tr.last_trace.flights:
+        survived = frame.state != flightlib.S_QUARANTINED
+        assert (frame.state[survived] == flightlib.S_VOIDED).all()
+        assert not (frame.state == flightlib.S_AGGREGATED).any()
+
+
+def test_kill_and_resume_preserves_flight_lineage(tmp_path):
+    """Flight frames ride the snapshot: a killed-and-restored run ends
+    with the same flight set, frame-for-frame, as the uninterrupted run."""
+    base = FaultPlan(seed=5, crash_rate=0.1)
+    kill = dataclasses.replace(base, server_kill_rounds=(7,))
+    key = jax.random.PRNGKey(0)
+    tr_a = _chaos_trainer(base)
+    run_with_recovery(tr_a, 9, key, str(tmp_path / "a"), checkpoint_every=3)
+    tr_b = _chaos_trainer(kill)
+    run_with_recovery(tr_b, 9, key, str(tmp_path / "b"), checkpoint_every=3)
+    assert len(tr_b.last_trace.flights) == 9
+    assert tr_a.last_trace.flights == tr_b.last_trace.flights

@@ -86,7 +86,8 @@ def test_every_pass_is_exercised_by_a_fixture(tmp_manifest):
     for name in BAD_FIXTURES:
         for f in run_passes([_load(name)], make_passes()):
             hit.add(f.pass_name)
-    for name in ("fleet_loops_bad.py", "wire_decode_bad.py"):
+    for name in ("fleet_loops_bad.py", "wire_decode_bad.py",
+                 "obs_events_bad.py"):
         for f in run_passes([_load_federated(name)], make_passes()):
             hit.add(f.pass_name)
     assert hit == set(available_passes())
@@ -129,6 +130,48 @@ def test_fleet_loop_pass_is_path_gated(tmp_manifest):
     # federated test files are exempt too
     assert run_passes([Module("src/repro/federated/test_x.py", src)],
                       make_passes(["fleet-scale"])) == []
+
+
+# ---------------------------------------------------------------------------
+# obs-events pass: emitted names vs the schema registry
+# ---------------------------------------------------------------------------
+
+def test_obs_event_seeded_violations(tmp_manifest):
+    """An unregistered literal name and a computed name both fire at the
+    marked lines."""
+    mod = _load_federated("obs_events_bad.py")
+    expected = _seeds(mod.source)
+    assert expected, "obs_events_bad.py has no SEED markers"
+    got = sorted({(f.rule, f.line)
+                  for f in run_passes([mod], make_passes())})
+    assert got == expected
+
+
+def test_obs_event_clean_fixture(tmp_manifest):
+    """Registered names, a reviewed dynamic-name suppression, and a
+    non-obs call with an event-looking string all lint clean."""
+    findings = run_passes([_load_federated("obs_events_clean.py")],
+                          make_passes())
+    assert findings == []
+
+
+def test_obs_event_pass_is_path_gated(tmp_manifest):
+    src = (FIXTURES / "obs_events_bad.py").read_text()
+    # outside repro/federated/: emitters there are the obs layer's own
+    assert run_passes([Module("fixtures/obs_events_bad.py", src)],
+                      make_passes(["obs-events"])) == []
+    assert run_passes([Module("src/repro/federated/test_x.py", src)],
+                      make_passes(["obs-events"])) == []
+
+
+def test_every_registered_federated_emission_is_in_schema():
+    """The live check the CI gate runs: every obs.event in the shipped
+    federated layer names a registered event."""
+    mods = []
+    fed = REPO_ROOT / "src" / "repro" / "federated"
+    for path in sorted(fed.glob("*.py")):
+        mods.append(Module(str(path), path.read_text()))
+    assert run_passes(mods, make_passes(["obs-events"])) == []
 
 
 # ---------------------------------------------------------------------------
@@ -207,10 +250,10 @@ def test_file_suppression_and_disable_all(tmp_manifest):
 # framework: registry, findings, JSON schema
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_the_seven_passes():
+def test_registry_lists_the_eight_passes():
     assert available_passes() == ("custom-vjp", "fleet-scale", "host-sync",
-                                  "mesh-axes", "pallas", "wire-decode",
-                                  "wire-format")
+                                  "mesh-axes", "obs-events", "pallas",
+                                  "wire-decode", "wire-format")
 
 
 def test_unknown_pass_selection_fails_loudly():

@@ -13,7 +13,8 @@ import pytest
 from repro import obs
 from repro.core.quantizer import PQConfig
 from repro.data.synthetic import make_federated_image_data
-from repro.federated import DropSlowestK, FederatedTrainer, lognormal_fleet
+from repro.federated import (DEFAULT_CHAOS, DropSlowestK, FederatedTrainer,
+                             lognormal_fleet)
 from repro.federated.trace import RoundRecord, Trace
 from repro.models.paper_models import FemnistCNN
 from repro.obs.inspect import format_report, main, percentile, summarize
@@ -344,3 +345,211 @@ def test_inspector_cli(tmp_path, capsys):
     doc = json.loads(capsys.readouterr().out)
     assert doc["target"]["reached_round"] == 0
     assert main([str(tmp_path / "missing.jsonl")]) == 2
+
+
+# ---------------------------------------------------------------------------
+# contribution flight recorder: frames, exemplars, flow links, inspector
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chaos_run(tmp_path_factory):
+    """One chaos training run recorded end-to-end, shared by the flight /
+    SLO / inspector tests below (the run itself is the expensive part).
+    DEFAULT_CHAOS on this seed yields >= 1 quarantine and >= 1 crash
+    retry, so the exemplar stream exercises every lifecycle edge."""
+    obs.shutdown()
+    rec = obs.configure(run="chaos", meta={"suite": "unit"})
+    data = make_federated_image_data(num_clients=8, seed=0)
+    pq = PQConfig(num_subvectors=288, num_clusters=4, kmeans_iters=2)
+    model = FemnistCNN(pq=pq, lam=1e-4)
+    tr = FederatedTrainer(
+        model, sgd(0.03), data, cohort=4, client_batch=8, quantize=True,
+        seed=0, fleet=lognormal_fleet(8, seed=0), fault_plan=DEFAULT_CHAOS,
+        slo_monitor=obs.HealthMonitor(rules=(
+            obs.SloRule("impossible", "rounds", ">=", 1000),)))
+    tr.run(6, jax.random.PRNGKey(0))
+    obs.shutdown()
+    path = tmp_path_factory.mktemp("chaos") / "run.jsonl"
+    rec.write_jsonl(path)
+    ppath = path.parent / "run.perfetto.json"
+    rec.write_perfetto(ppath)
+    return {"events": rec.events, "trace": tr.last_trace,
+            "path": path, "ppath": ppath}
+
+
+def _by_name(events, name):
+    return [e for e in events if e.get("name") == name]
+
+
+def test_flight_frame_json_round_trip(chaos_run):
+    frames = chaos_run["trace"].flights
+    assert len(frames) == 6
+    for frame in frames:
+        doc = frame.to_json()
+        json.dumps(doc)                       # plain-JSON serializable
+        clone = obs.FlightFrame.from_json(doc)
+        assert clone == frame                 # NaN-aware column equality
+        assert clone is not frame and len(clone) == len(frame)
+
+
+def test_chaos_run_emits_rollups_and_exemplars(chaos_run):
+    events = chaos_run["events"]
+    rollups = _by_name(events, "flight.rollup")
+    assert [r["args"]["round"] for r in rollups] == list(range(6))
+    for r in rollups:
+        # O(cohort) rollup: state histogram covers the whole cohort
+        assert sum(r["args"]["states"].values()) == r["args"]["flights"] == 4
+    # reservoir exemplars: every lifecycle stage event carries a flight_id
+    for name in ("flight.sampled", "flight.placed", "flight.uplink",
+                 "flight.outcome", "flight.server"):
+        stage = _by_name(events, name)
+        assert len(stage) == 24               # 4-exemplar cohorts x 6 rounds
+        assert all(e["args"]["flight_id"].startswith("r") for e in stage)
+    # the chaos plan actually bit on this seed, and the recorder saw it
+    assert _by_name(events, "flight.quarantined")
+    assert _by_name(events, "flight.retry")
+
+
+def test_flight_exemplar_lifecycle_is_causally_ordered(chaos_run):
+    events = chaos_run["events"]
+    quarantined = _by_name(events, "flight.quarantined")[0]
+    fid = quarantined["args"]["flight_id"]
+    stages = [e["name"] for e in events
+              if e.get("args", {}).get("flight_id") == fid]
+    assert stages[0] == "flight.sampled"
+    assert stages.index("flight.placed") < stages.index("flight.uplink")
+    assert stages.index("flight.quarantined") < stages.index("flight.outcome")
+    assert stages[-1] == "flight.server"      # server-side screening span
+
+
+def test_perfetto_flow_events_link_flight_spans(chaos_run):
+    doc = json.loads(chaos_run["ppath"].read_text())
+    flows = [e for e in doc["traceEvents"] if e.get("cat") == "flights"
+             and e["ph"] in ("s", "t", "f")]
+    assert flows
+    by_id = {}
+    for e in flows:
+        by_id.setdefault(e["id"], []).append(e)
+    for fid, chain in by_id.items():
+        chain.sort(key=lambda e: e["ts"])
+        phases = [e["ph"] for e in chain]
+        # each flight is one s -> t* -> f arrow chain across the lanes
+        assert phases[0] == "s" and phases[-1] == "f"
+        assert set(phases[1:-1]) <= {"t"}
+        assert chain[-1].get("bp") == "e"     # bind the arrow to span end
+
+
+def test_inspector_reconstructs_a_flight(chaos_run, capsys):
+    events = chaos_run["events"]
+    fid = _by_name(events, "flight.quarantined")[0]["args"]["flight_id"]
+    assert main([str(chaos_run["path"]), "--flight", fid]) == 0
+    out = capsys.readouterr().out
+    assert fid in out and "quarantined" in out
+    # a miss lists known exemplars instead, and exits nonzero
+    assert main([str(chaos_run["path"]), "--flight", "r9-c9-s9"]) == 1
+    assert "r9-c9-s9" in capsys.readouterr().out
+
+
+def test_inspector_health_and_slo_flags(chaos_run, capsys):
+    path = str(chaos_run["path"])
+    assert main([path, "--health"]) == 0
+    out = capsys.readouterr().out
+    assert "PASS" in out and "corruption-detected" in out
+    # extra rule that must fail: still a report (exit 0), graded FAIL
+    assert main([path, "--slo", "rounds>=100"]) == 0
+    assert "FAIL" in capsys.readouterr().out
+    assert main([path, "--slo", "not a rule"]) == 2
+
+
+def test_slo_monitor_emits_violation_events(chaos_run):
+    violations = _by_name(chaos_run["events"], "slo_violation")
+    assert len(violations) == 1               # the impossible rounds>=1000
+    args = violations[0]["args"]
+    assert args["rule"] == "impossible" and args["signal"] == "rounds"
+    assert args["value"] == 6.0 and args["op"] == ">="
+
+
+# ---------------------------------------------------------------------------
+# SLO rules + health monitor unit surface
+# ---------------------------------------------------------------------------
+
+def test_parse_rule_round_trips_the_cli_syntax():
+    r = obs.parse_rule("drop_rate<=0.3")
+    assert (r.signal, r.op, r.threshold, r.window) == \
+        ("drop_rate", "<=", 0.3, None)
+    r = obs.parse_rule("rounds >= 5 @ 20")
+    assert (r.signal, r.op, r.threshold, r.window) == ("rounds", ">=", 5.0, 20)
+    with pytest.raises(ValueError):
+        obs.parse_rule("drop_rate == 0.3")
+
+
+def test_health_monitor_grades_a_trace():
+    trace = Trace(records=[_record(0, 0.0, 1.0), _record(1, 1.0, 2.0)])
+    results = obs.HealthMonitor().evaluate(trace)
+    assert [r.rule.name for r in results] == \
+        [r.name for r in obs.DEFAULT_SLOS]
+    assert all(r.ok for r in results)         # clean run passes defaults
+    tight = obs.HealthMonitor(rules=(
+        obs.SloRule("floor", "rounds", ">=", 3),))
+    bad = tight.evaluate(trace)[0]
+    assert not bad.ok and bad.value == 2.0
+    assert bad.describe().startswith("FAIL")
+    # an unknown signal is "not measurable": no violation, but rendered
+    # as value=n/a so the gap is visible in the report
+    missing = obs.HealthMonitor(rules=(
+        obs.SloRule("ghost", "no_such_signal", "<=", 1.0),))
+    res = missing.evaluate(trace)[0]
+    assert res.value is None and res.ok
+    assert "n/a" in res.describe()
+
+
+def test_health_monitor_check_without_recorder_is_quiet():
+    trace = Trace(records=[_record(0, 0.0, 1.0)])
+    results = obs.HealthMonitor(rules=(
+        obs.SloRule("floor", "rounds", ">=", 3),)).check(trace)
+    assert results and not results[0].ok      # graded, nothing emitted
+
+
+# ---------------------------------------------------------------------------
+# tolerant JSONL reads (mid-write-killed logs)
+# ---------------------------------------------------------------------------
+
+def test_tolerant_reader_recovers_a_truncated_tail(tmp_path):
+    rec = obs.configure(run="t")
+    with obs.span("a", cat="test"):
+        pass
+    obs.shutdown()
+    path = tmp_path / "run.jsonl"
+    rec.write_jsonl(path)
+    with open(path, "a") as fh:               # process killed mid-write
+        fh.write('{"type": "event", "name": "half')
+    with pytest.raises(json.JSONDecodeError):
+        obs.read_jsonl(path)                  # strict reader refuses
+    events, skipped = obs.read_jsonl_tolerant(path)
+    assert skipped == 1
+    assert [e.get("name") for e in events] == ["run_start", "a"]
+
+
+def test_tolerant_reader_skips_non_object_lines(tmp_path):
+    path = tmp_path / "weird.jsonl"
+    path.write_text('{"type": "event", "name": "ok"}\n'
+                    '[1, 2, 3]\n'
+                    '\n'
+                    'not json at all\n')
+    events, skipped = obs.read_jsonl_tolerant(path)
+    assert [e["name"] for e in events] == ["ok"]
+    assert skipped == 2                       # array + garbage; blank is free
+
+
+def test_inspector_warns_but_renders_truncated_logs(tmp_path, capsys):
+    rec = obs.configure(run="cut")
+    obs.log_trace(Trace(records=[_record(0, 0.0, 1.0, loss=1.0)]))
+    obs.shutdown()
+    path = tmp_path / "run.jsonl"
+    rec.write_jsonl(path)
+    with open(path, "a") as fh:
+        fh.write('{"truncat')
+    assert main([str(path)]) == 0
+    captured = capsys.readouterr()
+    assert "run: cut" in captured.out
+    assert "skipped 1 unparseable line" in captured.err

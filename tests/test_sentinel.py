@@ -1,0 +1,194 @@
+"""Tests for the bench-regression sentinel (`benchmarks/sentinel.py`) and
+the append-only bench history (`benchmarks/common.append_bench_history`).
+
+The sentinel is a pure-stdlib comparator so CI can run it without the
+pinned scientific stack; these tests exercise it the same way — no jax.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import append_bench_history          # noqa: E402
+from benchmarks.sentinel import (compare, inject_regression,  # noqa: E402
+                                 load_baseline, load_current, main,
+                                 metric_tolerance)
+
+
+def _write_snapshot(root, suite, rows):
+    doc = {"suite": suite, "rows": rows}
+    (root / f"BENCH_{suite}.json").write_text(json.dumps(doc))
+
+
+def _baseline_doc(rows):
+    return {"note": "test baseline", "rows": rows}
+
+
+# ---------------------------------------------------------------------------
+# tolerance classes
+# ---------------------------------------------------------------------------
+
+def test_metric_tolerance_classes():
+    # host-noise metrics: tracked, never gated
+    for noisy in ("us_per_call", "wall_s", "rss_mb", "setup_s", "speedup_x",
+                  "s_per_round_flights_on", "overhead_x"):
+        assert metric_tolerance(noisy) is None
+    # stochastic-but-seeded training metrics: wide gate
+    assert metric_tolerance("loss") == 0.25
+    assert metric_tolerance("final_loss") == 0.25
+    # everything else is deterministic sim output: tight gate
+    assert metric_tolerance("uplink_bytes") == 0.01
+    assert metric_tolerance("quarantine_rate") == 0.01
+    # "overhead" alone is NOT noise: byte-overhead ratios stay gated
+    assert metric_tolerance("retry_byte_overhead") == 0.01
+    assert metric_tolerance("header_overhead_bits") == 0.01
+
+
+# ---------------------------------------------------------------------------
+# compare(): deltas, flags, untracked/missing bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_compare_flags_only_gated_regressions():
+    base = {"net/cell": {"uplink_bytes": 1000.0, "wall_s": 2.0}}
+    cur = {"net/cell": {"uplink_bytes": 1000.0, "wall_s": 9.0}}
+    deltas, untracked, missing = compare(base, cur)
+    assert untracked == [] and missing == []
+    flagged = [d for d in deltas if d["flagged"]]
+    assert flagged == []                       # wall-clock never gates
+    cur = {"net/cell": {"uplink_bytes": 1030.0, "wall_s": 2.0}}
+    deltas, _, _ = compare(base, cur)
+    (bad,) = [d for d in deltas if d["flagged"]]
+    assert bad["metric"] == "uplink_bytes"
+    assert bad["rel"] == pytest.approx(0.03)
+    assert bad["tol"] == 0.01 and bad["gated"]
+
+
+def test_compare_within_tolerance_is_clean():
+    base = {"net/cell": {"loss": 1.00, "uplink_bytes": 1000.0}}
+    cur = {"net/cell": {"loss": 1.20, "uplink_bytes": 1005.0}}
+    deltas, _, _ = compare(base, cur)
+    assert all(not d["flagged"] for d in deltas)   # 20% < 25%, 0.5% < 1%
+
+
+def test_compare_reports_untracked_and_missing_rows():
+    base = {"net/old": {"x": 1.0}, "net/both": {"x": 1.0}}
+    cur = {"net/new": {"x": 1.0}, "net/both": {"x": 1.0}}
+    deltas, untracked, missing = compare(base, cur)
+    assert [d["key"] for d in deltas] == ["net/both"] or \
+        all(d["key"] == "net/both" for d in deltas)
+    assert untracked == ["net/new"]            # current-only: needs update
+    assert missing == ["net/old"]              # baseline-only: bench vanished
+
+
+def test_compare_zero_baseline_still_gates_movement():
+    # a zero baseline can't use a relative denominator; any real movement
+    # away from 0 must still flag (tiny-epsilon denominator)
+    base = {"s/r": {"drop_rate": 0.0}}
+    same, _, _ = compare(base, {"s/r": {"drop_rate": 0.0}})
+    assert all(not d["flagged"] for d in same)
+    moved, _, _ = compare(base, {"s/r": {"drop_rate": 0.5}})
+    assert any(d["flagged"] for d in moved)
+
+
+def test_inject_regression_perturbs_one_gated_metric():
+    cur = {"net/cell": {"wall_s": 2.0, "uplink_bytes": 1000.0}}
+    mutated = json.loads(json.dumps(cur))
+    where = inject_regression(mutated)         # mutates in place
+    assert where == "net/cell:uplink_bytes"    # never the ungated wall_s
+    deltas, _, _ = compare(cur, mutated)
+    assert sum(d["flagged"] for d in deltas) == 1
+    (bad,) = [d for d in deltas if d["flagged"]]
+    assert bad["metric"] == "uplink_bytes"
+
+
+# ---------------------------------------------------------------------------
+# CLI: update -> check round trip against a scratch repo root
+# ---------------------------------------------------------------------------
+
+def _scratch_repo(tmp_path):
+    _write_snapshot(tmp_path, "net", [
+        {"name": "cell_a", "uplink_bytes": 1000.0, "wall_s": 2.0},
+        {"name": "cell_b", "loss": 1.5},
+    ])
+    return tmp_path
+
+
+def test_check_without_baseline_exits_2(tmp_path, capsys):
+    root = _scratch_repo(tmp_path)
+    code = main(["check", "--root", str(root),
+                 "--baseline", str(root / "baseline.json")])
+    assert code == 2
+    assert "no baseline" in capsys.readouterr().err
+
+
+def test_update_then_check_is_green(tmp_path, capsys):
+    root = _scratch_repo(tmp_path)
+    baseline = root / "baseline.json"
+    assert main(["update", "--root", str(root),
+                 "--baseline", str(baseline)]) == 0
+    doc = json.loads(baseline.read_text())
+    assert set(doc["rows"]) == {"net/cell_a", "net/cell_b"}
+    assert main(["check", "--root", str(root),
+                 "--baseline", str(baseline)]) == 0
+    assert "0 regression" in capsys.readouterr().out
+
+
+def test_check_flags_a_real_regression(tmp_path, capsys):
+    root = _scratch_repo(tmp_path)
+    baseline = root / "baseline.json"
+    main(["update", "--root", str(root), "--baseline", str(baseline)])
+    _write_snapshot(root, "net", [
+        {"name": "cell_a", "uplink_bytes": 1100.0, "wall_s": 99.0},
+        {"name": "cell_b", "loss": 1.5},
+    ])
+    assert main(["check", "--root", str(root),
+                 "--baseline", str(baseline)]) == 1
+    out = capsys.readouterr().out
+    regression_lines = [l for l in out.splitlines()
+                        if l.startswith("REGRESSION")]
+    assert len(regression_lines) == 1          # wall_s 50x move: not gated
+    assert "uplink_bytes" in regression_lines[0]
+
+
+def test_check_inject_regression_goes_red(tmp_path, capsys):
+    root = _scratch_repo(tmp_path)
+    baseline = root / "baseline.json"
+    main(["update", "--root", str(root), "--baseline", str(baseline)])
+    assert main(["check", "--inject-regression", "--root", str(root),
+                 "--baseline", str(baseline)]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_load_current_skips_docs_without_rows(tmp_path):
+    (tmp_path / "BENCH_weird.json").write_text(json.dumps({"note": "hi"}))
+    _write_snapshot(tmp_path, "ok", [{"name": "r", "x": 1.0}])
+    cur = load_current(tmp_path)
+    assert set(cur) == {"ok/r"}
+
+
+def test_load_baseline_missing_raises(tmp_path):
+    with pytest.raises(OSError):
+        load_baseline(tmp_path / "nope.json")
+
+
+# ---------------------------------------------------------------------------
+# append-only bench history
+# ---------------------------------------------------------------------------
+
+def test_append_bench_history_is_append_only_jsonl(tmp_path):
+    hist = tmp_path / "hist.jsonl"
+    rows = [{"name": "cell_a", "uplink_bytes": 1000.0, "note": "text",
+             "flag": True}]
+    append_bench_history("net", rows, path=hist)
+    append_bench_history("net", rows, path=hist)
+    lines = hist.read_text().splitlines()
+    assert len(lines) == 2                     # appended, not rewritten
+    doc = json.loads(lines[0])
+    assert doc["suite"] == "net" and doc["name"] == "cell_a"
+    assert isinstance(doc["sha"], str) and doc["sha"]
+    # only numeric (non-bool) metrics ride along
+    assert doc["metrics"] == {"uplink_bytes": 1000.0}
